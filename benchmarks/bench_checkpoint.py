@@ -1,0 +1,53 @@
+"""Checkpoint save/restore bandwidth (the framework's flagship workload).
+
+Sweeps parallel writer count and stripe count for a 16 MiB model state;
+reports virtual-time bandwidth + the parity-coding overhead (ch. 15).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save, table, vtime
+from repro.ckpt import CheckpointManager
+from repro.core import LustreCluster
+from repro.fsio import LustreClient
+
+
+def state(n_leaves=16, leaf_kb=1024):
+    rng = np.random.default_rng(0)
+    return {f"layer{i:02d}": rng.standard_normal(
+        leaf_kb * 256).astype(np.float32) for i in range(n_leaves)}
+
+
+def run() -> dict:
+    out = {}
+    tree = state()
+    total = sum(v.nbytes for v in tree.values())
+    rows = []
+    for writers, stripes, parity in [(1, 1, False), (1, 4, False),
+                                     (2, 4, False), (4, 4, False),
+                                     (4, 8, False), (4, 4, True)]:
+        c = LustreCluster(osts=8, mdses=1, clients=max(writers, 1),
+                          commit_interval=512)
+        ws = [LustreClient(c, i).mount() for i in range(writers)]
+        cm = CheckpointManager(ws, stripe_count=stripes,
+                               stripe_size=1 << 20, parity=parity)
+        _, t_save = vtime(c, lambda: cm.save(1, tree))
+        _, t_rest = vtime(c, lambda: cm.restore(1))
+        key = f"w{writers}_s{stripes}{'_p' if parity else ''}"
+        out[key] = {"writers": writers, "stripes": stripes,
+                    "parity": parity,
+                    "save_MBps": round(total / t_save / 1e6, 1),
+                    "restore_MBps": round(total / t_rest / 1e6, 1)}
+        rows.append([writers, stripes, parity,
+                     f"{out[key]['save_MBps']:.0f}",
+                     f"{out[key]['restore_MBps']:.0f}"])
+    table("checkpoint bandwidth (16 MiB state, 8 OSTs)",
+          ["writers", "stripes", "parity", "save MB/s", "restore MB/s"],
+          rows)
+    save("checkpoint", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

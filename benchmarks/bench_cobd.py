@@ -1,0 +1,67 @@
+"""Collaborative-cache read scaling (paper ch. 5.5, 16).
+
+The paper's claim: "a read cache shared between a subset of the client
+systems ... enabling enormous scalability benefits for mostly read-only
+situations" — the cluster-boot workload. N clients read the same 4 MiB
+file; we sweep the number of caching OSTs (0 = every read hits the target
+OST) and report aggregate virtual-time throughput + target-OST byte load.
+"""
+from __future__ import annotations
+
+from benchmarks.common import save, table, vtime
+from repro.core import LustreCluster
+from repro.core import cobd as cobd_mod
+from repro.fsio import LustreClient
+
+FILE = 4 << 20
+N_CLIENTS = 8
+
+
+def run() -> dict:
+    out = {}
+    rows = []
+    for n_caches in (0, 1, 2, 4):
+        c = LustreCluster(osts=1, mdses=1,
+                          clients=N_CLIENTS + n_caches,
+                          commit_interval=512)
+        writer = LustreClient(c, 0).mount()
+        fh = writer.creat("/boot.img", stripe_count=1)
+        writer.write(fh, bytes(1 << 16) * 64)
+        writer.close(fh)
+        c.stats.reset()
+        for k in range(n_caches):
+            cobd_mod.make_caching_node(
+                c, f"client{N_CLIENTS + k}", c.ost_targets[0],
+                f"COBD{k:02d}")
+        readers = [LustreClient(c, i).mount() for i in range(N_CLIENTS)]
+        handles = [r.open("/boot.img") for r in readers]
+
+        def read_all():
+            # all clients read the whole file "simultaneously"
+            c.sim.parallel([
+                (lambda r=r, h=h: r.read(h, FILE, offset=0))
+                for r, h in zip(readers, handles)])
+        _, t = vtime(c, read_all)
+        agg = N_CLIENTS * FILE / t / 1e6
+        ost_bytes = c.stats.bytes.get("ost.read", 0)
+        cobd_bytes = c.stats.bytes.get("cobd.served", 0)
+        out[n_caches] = {
+            "aggregate_MBps": round(agg, 1), "virtual_s": t,
+            "target_ost_MB": round(ost_bytes / 1e6, 2),
+            "cobd_served_MB": round(cobd_bytes / 1e6, 2),
+            "referrals": c.stats.counters.get("ost.referral", 0)}
+        rows.append([n_caches, f"{agg:.0f}",
+                     f"{ost_bytes/1e6:.1f}", f"{cobd_bytes/1e6:.1f}",
+                     out[n_caches]["referrals"]])
+    base = out[0]["aggregate_MBps"]
+    for r, k in zip(rows, (0, 1, 2, 4)):
+        r.append(f"{out[k]['aggregate_MBps']/base:.2f}x")
+    table(f"COBD read scaling: {N_CLIENTS} clients x 4 MiB",
+          ["caches", "agg MB/s", "OST MB", "COBD MB", "referrals",
+           "scaling"], rows)
+    save("cobd", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

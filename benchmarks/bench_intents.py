@@ -1,0 +1,97 @@
+"""Intent locks vs 2-RPC metadata + WBC batching (paper ch. 7.5, 17).
+
+Measures RPC counts + virtual latency for:
+  (a) stat of an uncached file: intent getattr_lock = 1 RPC vs the
+      classic lookup-then-getattr = 2 RPCs;
+  (b) create-heavy burst: client-server mode (1 intent RPC per create) vs
+      metadata write-back caching (0 RPCs, one reint_batch at flush).
+"""
+from __future__ import annotations
+
+from benchmarks.common import save, table, vtime
+from repro.core import LustreCluster
+from repro.core.mds import ROOT_FID
+from repro.fsio import LustreClient
+
+N = 200
+
+
+def run() -> dict:
+    out = {}
+
+    # ---------------------------------------------------------- (a) stat
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=256)
+    fs = LustreClient(c).mount()
+    for i in range(N):
+        fs.creat(f"/f{i:04d}")
+    mdc = fs.lmv.mdcs[0]
+
+    def stat_intent():
+        for i in range(N):
+            mdc.getattr_lock(ROOT_FID, f"f{i:04d}")
+    r0 = c.stats.counters.get("rpc.mds.ldlm_enqueue", 0)
+    _, t_intent = vtime(c, stat_intent)
+    n_intent = c.stats.counters["rpc.mds.ldlm_enqueue"] - r0
+
+    def stat_2rpc():
+        for i in range(N):
+            # classic: lookup RPC (enqueue, no data) + getattr RPC
+            lk, d = mdc.getattr_lock(ROOT_FID, f"f{i:04d}")
+            mdc.getattr(tuple(d["attrs"]["fid"]))
+    # invalidate lock caches so lookups go to the wire again
+    mdc.locks.cancel_all()
+    r0 = sum(v for k, v in c.stats.counters.items()
+             if k.startswith("rpc.mds."))
+    _, t_2rpc = vtime(c, stat_2rpc)
+    n_2rpc = sum(v for k, v in c.stats.counters.items()
+                 if k.startswith("rpc.mds.")) - r0
+    out["stat"] = {"intent_rpcs": n_intent, "two_rpcs": n_2rpc,
+                   "intent_s": t_intent, "two_rpc_s": t_2rpc,
+                   "latency_ratio": round(t_2rpc / t_intent, 2)}
+
+    # -------------------------------------------------------- (b) create
+    c2 = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=256)
+    fs2 = LustreClient(c2).mount()
+    fs2.mkdir("/cs")
+
+    def create_cs():
+        for i in range(N):
+            fs2.lmv.open(fs2.resolve("/cs"), f"n{i}", flags="cw")
+    r0 = sum(v for k, v in c2.stats.counters.items()
+             if k.startswith("rpc.mds."))
+    _, t_cs = vtime(c2, create_cs)
+    n_cs = sum(v for k, v in c2.stats.counters.items()
+               if k.startswith("rpc.mds.")) - r0
+
+    fs2.mkdir("/wb")
+    assert fs2.enable_wbc("/wb")
+    root = fs2.resolve("/wb")
+
+    def create_wb():
+        for i in range(N):
+            fs2.wbc.create(root, f"n{i}")
+        fs2.wbc.flush()
+    r0 = sum(v for k, v in c2.stats.counters.items()
+             if k.startswith("rpc.mds."))
+    _, t_wb = vtime(c2, create_wb)
+    n_wb = sum(v for k, v in c2.stats.counters.items()
+               if k.startswith("rpc.mds.")) - r0
+    fs2.disable_wbc()
+    out["create"] = {"client_server_rpcs": n_cs, "wbc_rpcs": n_wb,
+                     "cs_s": t_cs, "wbc_s": t_wb,
+                     "speedup": round(t_cs / max(t_wb, 1e-9), 1)}
+
+    table(f"metadata: {N} ops (ch. 7.5 intents / ch. 17 WBC)",
+          ["workload", "RPCs", "virtual s", "vs baseline"],
+          [["stat (intent)", n_intent, f"{t_intent:.4f}", "1.0x"],
+           ["stat (lookup+getattr)", n_2rpc, f"{t_2rpc:.4f}",
+            f"{t_2rpc/t_intent:.1f}x slower"],
+           ["create (client-server)", n_cs, f"{t_cs:.4f}", "1.0x"],
+           ["create (write-back)", n_wb, f"{t_wb:.4f}",
+            f"{t_cs/max(t_wb,1e-9):.1f}x faster"]])
+    save("intents", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

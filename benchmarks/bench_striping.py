@@ -1,0 +1,52 @@
+"""Striping throughput vs stripe_count (paper ch. 10.4).
+
+The paper's claim: striping files over N OSTs multiplies single-file
+bandwidth by ~N until the client link saturates. We write + read an 8 MiB
+file at stripe_count 1/2/4/8 on an 8-OST cluster and report virtual-time
+bandwidth.
+"""
+from __future__ import annotations
+
+from benchmarks.common import save, table, vtime
+from repro.core import LustreCluster
+from repro.fsio import LustreClient
+
+SIZE = 8 << 20
+CHUNK = 1 << 20
+
+
+def run() -> dict:
+    rows = []
+    out = {}
+    for cnt in (1, 2, 4, 8):
+        c = LustreCluster(osts=8, mdses=1, clients=1, commit_interval=256)
+        fs = LustreClient(c).mount()
+        fh = fs.creat("/bench.bin", stripe_count=cnt, stripe_size=1 << 20)
+        data = bytes(CHUNK)
+
+        def write():
+            for off in range(0, SIZE, CHUNK):
+                fs.write(fh, data, offset=off)
+            fs.fsync(fh)
+        _, tw = vtime(c, write)
+        fs.close(fh)
+
+        fh2 = fs.open("/bench.bin")
+        # one whole-file read: the LOV fans the stripe reads out in parallel
+        _, tr = vtime(c, lambda: fs.read(fh2, SIZE, offset=0))
+        fs.close(fh2)
+        wbw = SIZE / tw / 1e6
+        rbw = SIZE / tr / 1e6
+        out[cnt] = {"write_MBps": round(wbw, 1), "read_MBps": round(rbw, 1),
+                    "write_s": tw, "read_s": tr}
+        rows.append([cnt, f"{wbw:.0f}", f"{rbw:.0f}",
+                     f"{wbw / out[1]['write_MBps']:.2f}x" if 1 in out
+                     else "1.00x"])
+    table("striping throughput vs stripe_count (8 MiB file, qswnal)",
+          ["stripes", "write MB/s", "read MB/s", "scaling"], rows)
+    save("striping", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

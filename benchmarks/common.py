@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: virtual-time measurement + result I/O."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+
+def save(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def vtime(cluster, fn):
+    """Run fn, return (result, virtual seconds elapsed)."""
+    t0 = cluster.now
+    out = fn()
+    return out, cluster.now - t0
+
+
+def table(title: str, headers: list[str], rows: list[list]):
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    print("  " + "  ".join(str(h).ljust(w) for h, w in zip(headers, widths)))
+    for r in rows:
+        print("  " + "  ".join(str(v).ljust(w) for v, w in zip(r, widths)))

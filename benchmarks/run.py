@@ -1,0 +1,40 @@
+"""Benchmark harness: one bench per paper table/claim.
+
+    PYTHONPATH=src python -m benchmarks.run [--only striping,...]
+
+Results land in results/bench/*.json; a summary prints per bench.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = ["striping", "intents", "dlm", "recovery", "cobd",
+           "checkpoint", "parity"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    todo = args.only.split(",") if args.only else BENCHES
+    failures = []
+    for name in todo:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"[{name}] done in {time.time()-t0:.1f}s wall")
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print(f"\nall {len(todo)} benchmarks OK")
+
+
+if __name__ == "__main__":
+    main()

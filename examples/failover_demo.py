@@ -1,0 +1,131 @@
+"""Failure-mode walkthrough: every recovery mechanism, one at a time.
+
+  1. OST crash with uncommitted writes  -> client transaction REPLAY
+  2. lost reply                         -> reply-cache RESEND
+  3. OST node death                     -> failover ring
+  4. MDS crash                          -> intent replay (same fids)
+  5. simultaneous 2-MDS failure         -> consistent-cut rollback
+  6. dead OST disk under a checkpoint   -> parity-kernel reconstruction
+
+Run:  PYTHONPATH=src python examples/failover_demo.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np                                          # noqa: E402
+
+from repro.ckpt import CheckpointManager                    # noqa: E402
+from repro.core import LustreCluster                        # noqa: E402
+from repro.fsio import LustreClient                         # noqa: E402
+
+
+def banner(s):
+    print(f"\n=== {s} ===")
+
+
+def main():
+    # ---------------------------------------------------------------- 1+2
+    banner("1. OST crash: uncommitted writes recovered by client replay")
+    c = LustreCluster(osts=2, mdses=1, clients=1, commit_interval=10_000)
+    fs = LustreClient(c).mount()
+    fh = fs.creat("/f.bin", stripe_count=2, stripe_size=64)
+    fs.write(fh, b"critical training state" * 10)
+    fs.fsync(fh)
+    c.lctl("fail", "ost0")
+    c.lctl("restart", "ost0")
+    fh2 = fs.open("/f.bin")
+    assert fs.read(fh2, 230) == b"critical training state" * 10
+    print("data intact after crash;",
+          c.stats.counters.get("rpc.replay", 0), "transactions replayed")
+
+    banner("2. lost reply: resend answered from the server reply cache")
+    c.lctl("drop_next", fs.rpc.nid, 1)
+    fs.write(fh2, b"X", offset=0)
+    fs.fsync(fh2)
+    print("write survived a lost reply;",
+          c.stats.counters.get("rpc.reply_cache_hit", 0), "cache hits,",
+          c.stats.counters.get("rpc.timeout", 0), "timeout(s)")
+
+    # ----------------------------------------------------------------- 3
+    banner("3. OST node death: failover ring serves the target")
+    c2 = LustreCluster(osts=3, mdses=1, clients=1, ost_failover=True,
+                       commit_interval=4)
+    fs2 = LustreClient(c2).mount()
+    fh = fs2.creat("/g.bin", stripe_count=3, stripe_size=128)
+    fs2.write(fh, bytes(range(256)) * 4)
+    fs2.fsync(fh)
+    for t in c2.ost_targets:
+        t.commit()
+    c2.lctl("fail", "ost1")                     # stays DOWN
+    fh = fs2.open("/g.bin")
+    assert fs2.read(fh, 1024) == bytes(range(256)) * 4
+    print("reads OK with ost1 dead; OST0001 now served from:",
+          fs2.lov.by_uuid["OST0001"].imp.active_nid)
+
+    # ----------------------------------------------------------------- 4
+    banner("4. MDS crash: intent-open replay recreates identical fids")
+    c3 = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=10_000)
+    fs3 = LustreClient(c3).mount()
+    fh = fs3.creat("/will_survive.txt")
+    fid = fh.fid
+    fs3.close(fh)
+    c3.lctl("fail", "mds0")
+    c3.lctl("restart", "mds0")
+    assert fs3.stat("/will_survive.txt")["fid"] == fid
+    print(f"file survived MDS crash with the SAME fid {fid} "
+          f"({c3.stats.counters.get('rpc.replay', 0)} replays)")
+
+    # ----------------------------------------------------------------- 5
+    banner("5. double-MDS power failure: consistent-cut rollback")
+    c4 = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=6)
+    fs4 = LustreClient(c4).mount()
+    d = fs4.mkdir("/dir")                       # lands on mds1 (clustered)
+    fs4.creat("/dir/a")
+    for t in c4.mds_targets:
+        t.commit()
+    rec = c4.mds_recovery(fs4.rpc)
+    # uncommitted cross-MDS op: rename into the remote dir
+    fs4.creat("/b")
+    fs4.rename("/b", "/dir/b")
+    # whole-machine-room power-off: both MDSes AND the client die, so
+    # nobody is left to replay the uncommitted tail (§6.7.6.3's scenario)
+    c4.lctl("fail", "mds0")
+    c4.lctl("fail", "mds1")
+    c4.lctl("restart", "mds0")
+    c4.lctl("restart", "mds1")
+    rec2 = c4.mds_recovery(LustreClient(c4).mount().rpc)
+    cut = rec2.rollback_after_failure()
+    fresh = LustreClient(c4).mount()
+    names = sorted(fresh.readdir("/dir"))
+    root_names = sorted(fresh.readdir("/"))
+    print(f"consistent cut {cut}; /dir = {names}, / = {root_names} "
+          "(uncommitted cross-MDS rename rolled back on BOTH nodes)")
+    assert "b" not in names and "a" in names
+    assert "b" not in root_names
+
+    # ----------------------------------------------------------------- 6
+    banner("6. dead OST disk: checkpoint stripe rebuilt from parity")
+    c5 = LustreCluster(osts=4, mdses=1, clients=2)
+    writers = [LustreClient(c5, i).mount() for i in range(2)]
+    cm = CheckpointManager(writers, stripe_count=3, stripe_size=4096,
+                           parity=True)
+    state = {"w": np.arange(64 * 64, dtype=np.float32).reshape(64, 64)}
+    cm.save(1, state)
+    # destroy one stripe object (disk loss, not node loss)
+    fidea = writers[0].lmv.getattr(
+        writers[0].resolve("/ckpt/step_00000001/w.bin"), want_ea=True)
+    victim = fidea["ea"]["lov"]["objects"][0]
+    ost = next(t for t in c5.ost_targets if t.uuid == victim["ost"])
+    ost.obd.objects.pop((victim["group"], victim["oid"]))
+    got, _ = cm.restore(1)
+    assert (got["w"] == state["w"]).all()
+    print("stripe object destroyed -> restore() reconstructed it "
+          f"({c5.stats.counters.get('ckpt.stripe_reconstructed')} stripe, "
+          "XOR parity Pallas kernel)")
+
+    print("\nall six failure modes recovered ✓")
+
+
+if __name__ == "__main__":
+    main()

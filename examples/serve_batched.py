@@ -1,0 +1,53 @@
+"""Batched serving from a Lustre checkpoint.
+
+Trains a tiny model for a handful of steps, checkpoints it to the striped
+store, then a *separate* serving process restores the weights (read path,
+collaborative-cache eligible) and decodes a batch of prompts in lockstep.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax                                                  # noqa: E402
+import numpy as np                                          # noqa: E402
+
+from repro.core import LustreCluster                        # noqa: E402
+from repro.models.config import ModelConfig, RunConfig      # noqa: E402
+from repro.models import registry, layers as L              # noqa: E402
+from repro.train.trainer import Trainer, TrainerConfig      # noqa: E402
+from repro.train.serve import BatchedServer, Request        # noqa: E402
+
+
+def main():
+    cluster = LustreCluster(osts=4, mdses=1, clients=2, commit_interval=64)
+    model = ModelConfig(name="serve-demo", family="transformer",
+                        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                        head_dim=32, d_ff=256, vocab=512)
+    cfg = TrainerConfig(
+        model=model,
+        rc=RunConfig(seq_len=64, global_batch=4, kind="train",
+                     attn_impl="ref"),
+        n_steps=10, ckpt_every=10, dataset_seqs=256, n_writers=2,
+        parity=False)
+    tr = Trainer(cluster, cfg)
+    tr.run()
+    print("trained 10 steps, checkpointed at", tr.ckpt.steps())
+
+    # ---- serving side: restore weights from the striped store
+    tr2 = Trainer.resume(cluster, cfg)       # separate reader
+    params = tr2.params
+    srv = BatchedServer(model, params, max_seq=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, list(rng.integers(1, 500, size=rng.integers(3, 9))),
+                    max_new=8) for i in range(4)]
+    out = srv.generate(reqs)
+    for r in out:
+        print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
+    rd = cluster.stats.bytes.get("ost.read", 0)
+    print(f"weights read from the striped store: {rd >> 10} KiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Distributed striped checkpointing."""
+from repro.ckpt.checkpoint import CheckpointManager  # noqa: F401

@@ -1,0 +1,162 @@
+"""Cluster assembly + configuration management (paper ch. 13, 14, 31).
+
+The paper drives configuration from XML/LDAP profiles through `lconf`;
+here a plain dict plays the XML role and `LustreCluster` plays lconf:
+it instantiates nodes, OST/MDS targets (with failover standbys), routes,
+and wires MDS<->OST / MDS<->MDS imports. An `lctl()` method exposes the
+admin verbs used in the paper (set_gw up/down, fail/restart node, ...).
+
+Example config:
+    {"net": "elan",
+     "osts": 4, "ost_capacity": 1 << 30, "ost_failover": True,
+     "mdses": 2,
+     "clients": 2,
+     "gateways": [("tcp", "gw0"), ...]}   # cross-net routing
+"""
+from __future__ import annotations
+
+from repro.core import mdc as mdc_mod
+from repro.core import mds as mds_mod
+from repro.core import osc as osc_mod
+from repro.core import ost as ost_mod
+from repro.core import lov as lov_mod
+from repro.core import ptlrpc as R
+from repro.core import recovery as rec_mod
+
+
+class LustreCluster(R.ClusterBase):
+    def __init__(self, *, osts: int = 2, mdses: int = 1, clients: int = 1,
+                 net: str = "elan", ost_capacity: int = 1 << 40,
+                 ost_failover: bool = False, seed: int = 0,
+                 commit_interval: int = 64, mds_split_threshold: int = 0):
+        super().__init__(seed)
+        self.net = net
+        self.ost_targets: list[ost_mod.OstTarget] = []
+        self.mds_targets: list[mds_mod.MdsTarget] = []
+        self.client_nodes: list[R.Node] = []
+
+        # --- OST nodes (optionally paired for failover: shared storage,
+        # standby node imports the same target on failure — ch. 13.8)
+        for i in range(osts):
+            node = R.Node(f"ost{i}", net, self)
+            t = ost_mod.OstTarget(f"OST{i:04d}", node, ost_capacity)
+            t.commit_interval = commit_interval
+            self.ost_targets.append(t)
+        self.ost_nids = {}
+        for i, t in enumerate(self.ost_targets):
+            ring = [t.node.nid]
+            if ost_failover:
+                # nearest left neighbour hosts the standby (§6.7.6.4)
+                ring.append(self.ost_targets[(i + 1) % osts].node.nid)
+            self.ost_nids[t.uuid] = ring
+
+        # --- MDS cluster
+        for i in range(mdses):
+            node = R.Node(f"mds{i}", net, self)
+            t = mds_mod.MdsTarget(f"MDS{i:04d}", node, inode_group=i)
+            t.commit_interval = commit_interval
+            if mds_split_threshold:
+                t.SPLIT_THRESHOLD = mds_split_threshold
+            self.mds_targets.append(t)
+        self.mds_nids = {t.uuid: [t.node.nid] for t in self.mds_targets}
+        for t in self.mds_targets:
+            for u in self.mds_targets:
+                if u is not t:
+                    t.connect_peer(u.uuid, [u.node.nid])
+            for o in self.ost_targets:
+                t.connect_ost(o.uuid, self.ost_nids[o.uuid])
+
+        # --- failover standby wiring: a restarted OST target can be
+        # reached at the standby nid because the standby node also serves
+        # the target object (shared-storage assumption).
+        if ost_failover:
+            for i, t in enumerate(self.ost_targets):
+                standby = self.ost_targets[(i + 1) % osts].node
+                standby.targets[t.uuid] = t
+
+        # --- client nodes
+        for i in range(clients):
+            self.client_nodes.append(R.Node(f"client{i}", net, self))
+
+    # ------------------------------------------------------------ builders
+    def make_client_rpc(self, idx: int = 0) -> R.RpcClient:
+        return R.RpcClient(self.client_nodes[idx])
+
+    def make_oscs(self, rpc: R.RpcClient, writeback=True):
+        return [osc_mod.Osc(rpc, t.uuid, self.ost_nids[t.uuid],
+                            writeback=writeback)
+                for t in self.ost_targets]
+
+    def make_lov(self, rpc: R.RpcClient, **kw) -> lov_mod.Lov:
+        return lov_mod.Lov(self.make_oscs(rpc), **kw)
+
+    def make_lmv(self, rpc: R.RpcClient) -> mdc_mod.Lmv:
+        return mdc_mod.Lmv([
+            mdc_mod.Mdc(rpc, t.uuid, self.mds_nids[t.uuid])
+            for t in self.mds_targets])
+
+    def mds_recovery(self, rpc: R.RpcClient) -> rec_mod.MdsClusterRecovery:
+        return rec_mod.MdsClusterRecovery(rpc, self.mds_nids)
+
+    # ---------------------------------------------------------------- ops
+    def fail_node(self, name: str):
+        self.nodes[name].fail()
+
+    def restart_node(self, name: str):
+        self.nodes[name].restart()
+
+    def lctl(self, verb: str, *args):
+        if verb == "set_gw":
+            nid, state = args
+            self.network.set_gw(nid, state == "up")
+        elif verb == "fail":
+            self.fail_node(args[0])
+        elif verb == "restart":
+            self.restart_node(args[0])
+        elif verb == "drop_next":
+            self.sim.faults.drop_next[args[0]] += int(args[1])
+        else:
+            raise ValueError(verb)
+
+    def procfs(self) -> dict:
+        """lprocfs-style introspection tree (paper ch. 35): per-target
+        state + cluster counters, as /proc/fs/lustre would expose."""
+        out = {"counters": dict(self.sim.stats.counters),
+               "bytes": dict(self.sim.stats.bytes),
+               "targets": {}}
+        for t in self.ost_targets:
+            out["targets"][t.uuid] = {
+                "kind": "obdfilter", "nid": t.node.nid,
+                "boot_count": t.boot_count,
+                "last_transno": t.transno,
+                "last_committed": t.committed_transno,
+                "recovering": t.recovering,
+                "num_exports": len(t.exports),
+                "kbytesfree": t.obd.statfs()["free"] >> 10,
+                "num_objects": len(t.obd.objects),
+                "locks": sum(len(r.granted)
+                             for r in t.ldlm.resources.values()),
+            }
+        for t in self.mds_targets:
+            out["targets"][t.uuid] = {
+                "kind": "mds", "nid": t.node.nid,
+                "boot_count": t.boot_count,
+                "last_transno": t.transno,
+                "last_committed": t.committed_transno,
+                "recovering": t.recovering,
+                "num_exports": len(t.exports),
+                "num_inodes": len(t.inodes),
+                "pending_unlink_llog": len(t.unlink_llog.pending()),
+                "locks": sum(len(r.granted)
+                             for r in t.ldlm.resources.values()),
+            }
+        return out
+
+    # ------------------------------------------------------------- stats
+    @property
+    def stats(self):
+        return self.sim.stats
+
+    @property
+    def now(self):
+        return self.sim.now

@@ -1,0 +1,270 @@
+"""LOV: Logical Object Volume — RAID0 striping over OSTs (paper ch. 10, 20)
+and RAID1 mirroring (ch. 15 Redundant Object Storage Targets).
+
+A file's stripe metadata (`lsm`: stripe_size / stripe_count / stripe_offset
++ per-stripe object ids) is stored by the MDS in the file inode's extended
+attribute — the LOV only interprets it (§10.2). I/O maps logical extents to
+per-object extents and issues the per-OST OSC calls in parallel (the
+concurrency the paper's striping exists to exploit).
+
+QOS allocation policy (ch. 20): round-robin or free-space weighted choice
+of the starting OST / stripe set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+from repro.core import osc as osc_mod
+from repro.core import ptlrpc as R
+
+
+@dataclasses.dataclass
+class StripeMd:
+    """lsm — lives in the MDS inode EA ("lov" key)."""
+    stripe_size: int
+    stripe_count: int
+    stripe_offset: int
+    objects: list            # [{"ost": uuid, "group": g, "oid": o}, ...]
+
+    def to_ea(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_ea(cls, ea: dict) -> "StripeMd":
+        return cls(**ea)
+
+
+def _chunks(lsm: StripeMd, offset: int, length: int):
+    """Split a logical extent into (stripe_idx, obj_offset, length) runs."""
+    ssz, cnt = lsm.stripe_size, lsm.stripe_count
+    out = []
+    pos = offset
+    end = offset + length
+    while pos < end:
+        snum = pos // ssz
+        sidx = snum % cnt
+        in_off = pos % ssz
+        run = min(ssz - in_off, end - pos)
+        obj_off = (snum // cnt) * ssz + in_off
+        out.append((sidx, obj_off, run, pos))
+        pos += run
+    return out
+
+
+def logical_size(lsm: StripeMd, obj_sizes: list[int]) -> int:
+    """File size from per-object sizes (§10: size management)."""
+    ssz, cnt = lsm.stripe_size, lsm.stripe_count
+    best = 0
+    for i, s in enumerate(obj_sizes):
+        if s <= 0:
+            continue
+        last = s - 1
+        logical_last = ((last // ssz) * cnt + i) * ssz + (last % ssz)
+        best = max(best, logical_last + 1)
+    return best
+
+
+class Lov:
+    """Stripes over an ordered list of OSCs (one per OST)."""
+
+    DEFAULT_STRIPE_SIZE = 1 << 20
+
+    def __init__(self, oscs: list[osc_mod.Osc], group: int = 0,
+                 policy: str = "round_robin"):
+        self.oscs = oscs
+        self.by_uuid = {o.uuid: o for o in oscs}
+        self.group = group
+        self.policy = policy
+        self._rr = itertools.count()
+        self.sim = oscs[0].sim if oscs else None
+
+    # ---------------------------------------------------------- allocate
+    def _pick_offset(self, stripe_count: int) -> int:
+        if self.policy == "free_space":
+            frees = [(o.statfs()["free"], i) for i, o in enumerate(self.oscs)]
+            return max(frees)[1]
+        return next(self._rr) % len(self.oscs)
+
+    def create(self, *, stripe_count: int = 0, stripe_size: int = 0,
+               stripe_offset: int = -1, group: int | None = None,
+               oids: list | None = None) -> StripeMd:
+        """Allocate stripe objects (one `create` per OST, in parallel).
+        `oids` pins object ids (checkpoint restore / replay)."""
+        cnt = stripe_count or 1
+        cnt = min(cnt, len(self.oscs))
+        ssz = stripe_size or self.DEFAULT_STRIPE_SIZE
+        off = stripe_offset if stripe_offset >= 0 else self._pick_offset(cnt)
+        grp = self.group if group is None else group
+        idxs = [(off + i) % len(self.oscs) for i in range(cnt)]
+
+        def mk(i, k):
+            osc = self.oscs[k]
+            oid = oids[i] if oids else None
+            out = osc.create(grp, oid)
+            return {"ost": osc.uuid, "group": grp, "oid": out["oid"]}
+
+        objs = self.sim.parallel(
+            [(lambda i=i, k=k: mk(i, k)) for i, k in enumerate(idxs)])
+        return StripeMd(ssz, cnt, off, objs)
+
+    # --------------------------------------------------------------- I/O
+    def _osc(self, lsm: StripeMd, sidx: int) -> osc_mod.Osc:
+        return self.by_uuid[lsm.objects[sidx]["ost"]]
+
+    def write(self, lsm: StripeMd, offset: int, data: bytes,
+              gid: int = 0) -> int:
+        runs = _chunks(lsm, offset, len(data))
+
+        def wr(sidx, obj_off, ln, lpos):
+            o = lsm.objects[sidx]
+            self._osc(lsm, sidx).write(
+                o["group"], o["oid"], obj_off,
+                data[lpos - offset:lpos - offset + ln], gid=gid)
+            return ln
+
+        self.sim.parallel([(lambda a=r: wr(*a)) for r in runs])
+        return len(data)
+
+    def read(self, lsm: StripeMd, offset: int, length: int) -> bytes:
+        runs = _chunks(lsm, offset, length)
+
+        def rd(sidx, obj_off, ln, lpos):
+            o = lsm.objects[sidx]
+            return lpos, self._osc(lsm, sidx).read(
+                o["group"], o["oid"], obj_off, ln)
+
+        parts = self.sim.parallel([(lambda a=r: rd(*a)) for r in runs])
+        buf = bytearray(length)
+        for lpos, chunk in parts:
+            buf[lpos - offset:lpos - offset + len(chunk)] = chunk
+        return bytes(buf)
+
+    def getattr(self, lsm: StripeMd) -> dict:
+        outs = self.sim.parallel([
+            (lambda o=o: self.by_uuid[o["ost"]].getattr(o["group"], o["oid"]))
+            for o in lsm.objects])
+        return {"size": logical_size(lsm, [a["size"] for a in outs]),
+                "mtime": max((a["mtime"] for a in outs), default=0.0),
+                "blocks": sum(a["blocks"] for a in outs)}
+
+    def getattr_locked(self, lsm: StripeMd) -> dict:
+        """getattr under PR locks: revokes writers' PW locks first, so
+        their write-back caches flush and the sizes are current (the
+        client-side ordering rule of §6.2.3; real Lustre uses glimpse
+        ASTs — a PR enqueue is our simpler equivalent)."""
+        def one(o):
+            osc = self.by_uuid[o["ost"]]
+            osc.lock(o["group"], o["oid"], "PR")
+            return osc.getattr(o["group"], o["oid"])
+        outs = self.sim.parallel([(lambda o=o: one(o))
+                                  for o in lsm.objects])
+        return {"size": logical_size(lsm, [a["size"] for a in outs]),
+                "mtime": max((a["mtime"] for a in outs), default=0.0),
+                "blocks": sum(a["blocks"] for a in outs)}
+
+    def destroy(self, lsm: StripeMd, cookies: list | None = None):
+        def rm(i, o):
+            ck = cookies[i] if cookies else None
+            try:
+                self.by_uuid[o["ost"]].destroy(o["group"], o["oid"],
+                                               cookie=ck)
+            except R.RpcError as e:
+                if e.status != -2:
+                    raise
+        self.sim.parallel([(lambda i=i, o=o: rm(i, o))
+                           for i, o in enumerate(lsm.objects)])
+
+    def punch(self, lsm: StripeMd, size: int):
+        # per-object truncation point
+        for i, o in enumerate(lsm.objects):
+            osz = self._obj_size_for(lsm, i, size)
+            self.by_uuid[o["ost"]].punch(o["group"], o["oid"], osz)
+
+    @staticmethod
+    def _obj_size_for(lsm: StripeMd, i: int, logical: int) -> int:
+        """Object-local size when the file is truncated to `logical`."""
+        if logical == 0:
+            return 0
+        last = logical - 1
+        snum, rem = divmod(last, lsm.stripe_size)
+        full_rounds, sidx = divmod(snum, lsm.stripe_count)
+        if i < sidx:
+            return (full_rounds + 1) * lsm.stripe_size
+        if i == sidx:
+            return full_rounds * lsm.stripe_size + rem + 1
+        return full_rounds * lsm.stripe_size
+
+    def flush(self):
+        self.sim.parallel([(lambda o=o: o.flush()) for o in self.oscs])
+
+    def sync(self):
+        self.sim.parallel([(lambda o=o: o.sync()) for o in self.oscs])
+
+
+# ------------------------------------------------------------------ RAID1
+
+class Raid1:
+    """Redundant OSTs (ch. 15): mirror writes to two OSCs; reads prefer the
+    primary and fail over; a dirty-extent log drives resync after an OST
+    comes back."""
+
+    def __init__(self, primary: osc_mod.Osc, secondary: osc_mod.Osc,
+                 group: int = 0):
+        self.a = primary
+        self.b = secondary
+        self.sim = primary.sim
+        self.group = group
+        self.dirty_log: list[tuple[int, int, int]] = []  # (oid, off, len)
+
+    def create(self, oid: int | None = None) -> int:
+        out = self.a.create(self.group, oid)
+        self.b.create(self.group, out["oid"])
+        return out["oid"]
+
+    def write(self, oid: int, offset: int, data: bytes):
+        def one(osc):
+            try:
+                osc.write(self.group, oid, offset, data)
+                return True
+            except (R.RpcError, R.TimeoutError_):
+                return False
+        oks = self.sim.parallel([lambda: one(self.a), lambda: one(self.b)])
+        if not any(oks):
+            raise R.RpcError(-5, "both mirrors failed")
+        if not all(oks):
+            self.dirty_log.append((oid, offset, len(data)))
+            self.sim.stats.count("raid1.degraded_write")
+
+    def read(self, oid: int, offset: int, length: int) -> bytes:
+        try:
+            return self.a.read(self.group, oid, offset, length)
+        except (R.RpcError, R.TimeoutError_):
+            self.sim.stats.count("raid1.failover_read")
+            return self.b.read(self.group, oid, offset, length)
+
+    def read_hedged(self, oid: int, offset: int, length: int) -> bytes:
+        """Straggler mitigation: issue the read to BOTH mirrors, take the
+        first completion (a slow/overloaded OST only costs its own link)."""
+        def one(osc):
+            try:
+                return osc.read(self.group, oid, offset, length)
+            except (R.RpcError, R.TimeoutError_):
+                return None
+        _, data = self.sim.race([lambda: one(self.a), lambda: one(self.b)])
+        if data is None:                      # winner failed: use the other
+            return self.read(oid, offset, length)
+        return data
+
+    def resync(self):
+        """Replay the dirty log onto whichever mirror missed writes."""
+        log, self.dirty_log = self.dirty_log, []
+        for oid, off, ln in log:
+            data = self.read(oid, off, ln)
+            for osc in (self.a, self.b):
+                try:
+                    osc.write(self.group, oid, off, data)
+                except (R.RpcError, R.TimeoutError_):
+                    self.dirty_log.append((oid, off, ln))
+        return len(log) - len(self.dirty_log)

@@ -1,0 +1,280 @@
+"""Metadata client (MDC), clustered-MDS router (LMV), and the client
+metadata write-back cache (paper §6.7.1.1, ch. 17, ch. 26).
+
+The LMV is deliberately thin (§6.7.1.1: "the client part of the
+implementation is very trivial"): it picks the MDC by
+  (1) the inode group of the fid in the request,
+  (2) the name hash + bucket EA for split directories,
+  (3) fid order for rename coordination (§6.7.1.4).
+
+The write-back cache (ch. 17) holds a subtree lock + preallocated fids;
+updates apply to a local shadow namespace and are recorded as reintegration
+records, flushed as ONE `reint_batch` RPC (on sync, cache pressure, or a
+blocking AST on the subtree lock).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Optional
+
+from repro.core import dlm as dlm_mod
+from repro.core import mds as mds_mod
+from repro.core import ptlrpc as R
+
+
+class Mdc:
+    """Client stub for ONE MDS target."""
+
+    def __init__(self, rpc: R.RpcClient, target_uuid: str, nids: list[str]):
+        self.rpc = rpc
+        self.sim = rpc.sim
+        self.uuid = target_uuid
+        self.imp = rpc.import_target(target_uuid, nids, "mds")
+        self.locks = dlm_mod.LockClient(rpc, self.imp)
+
+    # -------------------------------------------------------- intent ops
+    def enqueue_intent(self, res_fid, mode: str, intent: dict):
+        """mdc_enqueue (§6.2.2): lock + operation in one RPC."""
+        def fixup(req, rep):
+            d = (rep.data or {}).get("intent") or {}
+            attrs = d.get("attrs")
+            if d.get("created") and attrs:
+                # pin the assigned fid so replay recreates the same inode
+                req.body["intent"]["fid"] = tuple(attrs["fid"])
+        lk, data, lvb = self.locks.enqueue(
+            ("fid", *tuple(res_fid)), mode, None, intent=intent,
+            use_cache=False, fixup=fixup)
+        return lk, (data or {})
+
+    def getattr_lock(self, parent_fid, name: str, want_ea: bool = False):
+        return self.enqueue_intent(
+            parent_fid, "PR", {"op": "lookup", "parent": tuple(parent_fid),
+                               "name": name, "want_ea": want_ea})
+
+    def open(self, parent_fid, name: str, flags: str = "r",
+             mode: int = 0o644):
+        return self.enqueue_intent(
+            parent_fid, "PR", {"op": "open", "parent": tuple(parent_fid),
+                               "name": name, "flags": flags, "mode": mode})
+
+    # --------------------------------------------------------- plain ops
+    def getattr(self, fid, want_ea: bool = False) -> dict:
+        return self.imp.request("getattr", {"fid": tuple(fid),
+                                            "want_ea": want_ea}).data
+
+    def readdir(self, fid) -> dict:
+        return self.imp.request("readdir", {"fid": tuple(fid)}).data
+
+    def reint(self, rec: dict) -> R.Reply:
+        def fixup(req, rep):
+            # pin the server-assigned fid so REPLAY recreates the same
+            # inode (even when it was created on a peer MDS)
+            if rec["type"] == "create" and (rep.data or {}).get("fid"):
+                req.body["rec"]["fid"] = tuple(rep.data["fid"])
+        return self.imp.request("reint", {"rec": rec}, fixup=fixup)
+
+    def reint_batch(self, records: list) -> R.Reply:
+        return self.imp.request("reint_batch", {"records": records})
+
+    def close(self, handle: int, size=None, mtime=None,
+              fid=None) -> R.Reply:
+        return self.imp.request("close", {"handle": handle, "size": size,
+                                          "mtime": mtime,
+                                          "fid": tuple(fid) if fid else None})
+
+    def statfs(self) -> dict:
+        return self.imp.request("statfs", {}).data
+
+    def prealloc_fids(self, count: int = 64) -> list:
+        return [tuple(f) for f in
+                self.imp.request("prealloc_fids",
+                                 {"count": count}).data["fids"]]
+
+
+class Lmv:
+    """Logical Metadata Volume: routes ops across the MDS cluster
+    (§6.7.1.1). mdcs[i] serves inode group i."""
+
+    def __init__(self, mdcs: list[Mdc]):
+        self.mdcs = mdcs
+        self.sim = mdcs[0].sim
+
+    def mdc_for_fid(self, fid) -> Mdc:
+        return self.mdcs[tuple(fid)[0] % len(self.mdcs)]
+
+    def mdc_for_rename(self, src_fid, dst_fid) -> Mdc:
+        """§6.7.1.4: coordinate at the highest-order resource so the lock
+        ordering sequence starts correctly."""
+        first = min(tuple(src_fid), tuple(dst_fid))
+        return self.mdc_for_fid(first)
+
+    # ------------------------------------------------------- routed ops
+    def getattr(self, fid, want_ea=False):
+        return self.mdc_for_fid(fid).getattr(fid, want_ea)
+
+    def getattr_lock(self, parent_fid, name, want_ea=False):
+        mdc = self.mdc_for_fid(parent_fid)
+        lk, data = mdc.getattr_lock(parent_fid, name, want_ea)
+        if data.get("redirect"):
+            # split directory: retry at the bucket's MDS (§6.7.3)
+            bfid = tuple(data["redirect"])
+            mdc2 = self.mdc_for_fid(bfid)
+            lk2, d2 = mdc2.enqueue_intent(
+                bfid, "PR", {"op": "lookup", "parent": bfid,
+                             "name": name, "want_ea": want_ea})
+            return lk2, d2
+        if data.get("remote") and data.get("fid"):
+            # entry's inode lives on a peer MDS: 2nd RPC for attributes
+            # (the §6.7.3 'worst case 3 RPCs' path)
+            fid = tuple(data["fid"])
+            d2 = self.mdc_for_fid(fid).getattr(fid, want_ea)
+            d2["status"] = 0
+            return lk, d2
+        return lk, data
+
+    def open(self, parent_fid, name, flags="r", mode=0o644):
+        return self.mdc_for_fid(parent_fid).open(parent_fid, name, flags,
+                                                 mode)
+
+    def readdir(self, fid):
+        """Client-side bucket iteration for split directories (§6.7.3)."""
+        out = self.mdc_for_fid(fid).readdir(fid)
+        if out.get("buckets"):
+            entries = dict(out["entries"])
+            for bfid in out["buckets"]:
+                bfid = tuple(bfid)
+                b = self.mdc_for_fid(bfid).readdir(bfid)
+                entries.update(b["entries"])
+            out = dict(out, entries=entries)
+        return out
+
+    def reint(self, rec: dict):
+        key = {"create": "parent", "unlink": "parent", "link": "parent",
+               "setattr": "fid"}.get(rec["type"])
+        if rec["type"] == "rename":
+            mdc = self.mdc_for_rename(rec["src"], rec["dst"])
+        else:
+            mdc = self.mdc_for_fid(rec[key])
+        return mdc.reint(rec)
+
+    def close(self, fid, handle, size=None, mtime=None):
+        return self.mdc_for_fid(fid).close(handle, size, mtime, fid=fid)
+
+    def statfs(self):
+        return [m.statfs() for m in self.mdcs]
+
+
+# -------------------------------------------------------------------- WBC
+
+@dataclasses.dataclass
+class WbcRecord:
+    rec: dict          # a reint record, replayed verbatim at flush
+
+
+class WbcCache:
+    """Metadata write-back cache for one directory subtree (ch. 17).
+
+    Holds an EX subtree lock; `mkdir/create/...` below the root apply to a
+    local shadow and append records. `flush()` reintegrates in ONE RPC.
+    A blocking AST on the subtree lock triggers flush + drop (§17.2).
+    """
+
+    def __init__(self, lmv: Lmv, root_fid: tuple):
+        self.lmv = lmv
+        self.root_fid = tuple(root_fid)
+        self.mdc = lmv.mdc_for_fid(root_fid)
+        self.sim = lmv.sim
+        self.records: list[dict] = []
+        self.fids: list[tuple] = []
+        self.shadow: dict[tuple, dict] = {}    # fid -> {name: fid} created
+        self.shadow_attrs: dict[tuple, dict] = {}
+        self.lock: dlm_mod.Lock | None = None
+        self.active = False
+
+    # ------------------------------------------------------------ grant
+    def acquire(self) -> bool:
+        lk, data = self.mdc.enqueue_intent(
+            self.root_fid, "EX", {"op": "wbc", "fid": self.root_fid})
+        if not (data or {}).get("wbc_granted"):
+            self.sim.stats.count("wbc.denied")
+            return False
+        self.lock = lk
+        self.active = True
+        self.fids = self.mdc.prealloc_fids(128)
+        self.sim.stats.count("wbc.granted")
+        # flush when the subtree lock is revoked
+        orig_cb = self.mdc.locks.flush_cb
+
+        def cb(lock):
+            if self.lock is not None and lock.handle == self.lock.handle:
+                self.flush()
+            if orig_cb:
+                orig_cb(lock)
+        self.mdc.locks.flush_cb = cb
+        if lk is not None:
+            lk.dirty = True
+        return True
+
+    def _fid(self) -> tuple:
+        if not self.fids:
+            self.fids = self.mdc.prealloc_fids(128)
+        return self.fids.pop(0)
+
+    def in_subtree(self, fid: tuple) -> bool:
+        return tuple(fid) == self.root_fid or tuple(fid) in self.shadow_attrs
+
+    # --------------------------------------------------------- local ops
+    def create(self, parent_fid, name, ftype=mds_mod.S_IFREG,
+               mode=0o644, ea=None, target="") -> tuple:
+        """Local create: zero RPCs (the InterMezzo property, §2.4)."""
+        fid = self._fid()
+        rec = {"type": "create", "parent": tuple(parent_fid), "name": name,
+               "fid": fid, "ftype": ftype, "mode": mode, "remote_ok": False}
+        if ea:
+            rec["ea"] = ea
+        if target:
+            rec["target"] = target
+        self.records.append(rec)
+        self.shadow.setdefault(tuple(parent_fid), {})[name] = fid
+        self.shadow_attrs[fid] = {"fid": fid, "type": ftype, "mode": mode,
+                                  "nlink": 2 if ftype == "dir" else 1,
+                                  "mtime": self.sim.now, "size": 0}
+        self.sim.stats.count("wbc.local_update")
+        return fid
+
+    def setattr(self, fid, attrs=None, ea=None):
+        rec = {"type": "setattr", "fid": tuple(fid), "attrs": attrs or {}}
+        if ea:
+            rec["ea"] = ea
+        self.records.append(rec)
+        if tuple(fid) in self.shadow_attrs:
+            self.shadow_attrs[tuple(fid)].update(attrs or {})
+        self.sim.stats.count("wbc.local_update")
+
+    def unlink(self, parent_fid, name):
+        self.records.append({"type": "unlink", "parent": tuple(parent_fid),
+                             "name": name})
+        self.shadow.get(tuple(parent_fid), {}).pop(name, None)
+        self.sim.stats.count("wbc.local_update")
+
+    def lookup(self, parent_fid, name):
+        return self.shadow.get(tuple(parent_fid), {}).get(name)
+
+    # -------------------------------------------------------------- flush
+    def flush(self) -> int:
+        """Reintegrate: ship ALL records in one batched RPC (§17.1)."""
+        if not self.records:
+            return 0
+        recs, self.records = self.records, []
+        self.mdc.reint_batch(recs)
+        self.sim.stats.count("wbc.flush")
+        return len(recs)
+
+    def release(self):
+        self.flush()
+        if self.lock is not None:
+            self.lock.dirty = False
+            self.mdc.locks.cancel(self.lock)
+            self.lock = None
+        self.active = False

@@ -1,0 +1,830 @@
+"""Lustre Metadata Service (paper ch. 6, 26).
+
+Namespace model (§6.2): inodes keyed by *fid* = (inode_group, ino, gen) —
+fids are never reused and uniquely identify an inode. Elements are
+(parent_fid, name, fid) triples. File inodes hold NO data, only the LOV
+stripe descriptor in an extended attribute (§2.2, §10.2).
+
+Implemented:
+  * intent handling (§6.2.2/§7.5): lookup/getattr/open/create execute inside
+    the DLM enqueue — one RPC;
+  * reintegration ops mds_reint_{create,unlink,rename,link,setattr} (§6.4.2)
+    with transactional undo records;
+  * unlink returns the LOV EA + llog cookies so the *client* destroys the
+    data objects; OSTs confirm with llog_cancel once their destroy commits
+    (ch. 8.4); pending records re-shipped after MDS recovery (§6.7.5);
+  * clustered MDS (§6.7): each MDS owns an inode group; mkdir round-robins
+    new directories onto other MDSes; large directories *split* into hash
+    buckets on peer MDSes (master inode EA lists bucket fids); cross-MDS
+    rename/link/unlink via MDS-MDS RPCs with *dependency tracking* feeding
+    the consistent-cut snapshot (§6.7.6.3, implemented in recovery.py);
+  * metadata write-back-cache grants: a client may be granted a subtree
+    lock + a preallocated fid range and reintegrate batched update records
+    later (ch. 17, §6.5);
+  * open files tracked per-export so failed clients' orphans get cleaned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Optional
+
+from repro.core import dlm as dlm_mod
+from repro.core import llog as llog_mod
+from repro.core import ptlrpc as R
+
+ROOT_FID = (0, 1, 1)
+
+S_IFDIR, S_IFREG, S_IFLNK = "dir", "file", "symlink"
+
+
+@dataclasses.dataclass
+class Inode:
+    fid: tuple
+    ftype: str
+    mode: int = 0o644
+    uid: int = 0
+    gid: int = 0
+    nlink: int = 1
+    mtime: float = 0.0
+    size: int = 0
+    ea: dict = dataclasses.field(default_factory=dict)
+    entries: dict = dataclasses.field(default_factory=dict)  # dirs
+    symlink: str = ""
+    # mtime/size delegated to OSTs while a writer has the file open (§6.9.1)
+    mtime_on_ost: bool = False
+
+    def attrs(self) -> dict:
+        return {"fid": self.fid, "type": self.ftype, "mode": self.mode,
+                "uid": self.uid, "gid": self.gid, "nlink": self.nlink,
+                "mtime": self.mtime, "size": self.size,
+                "mtime_on_ost": self.mtime_on_ost,
+                "nentries": len(self.entries) if self.ftype == S_IFDIR
+                else None,
+                "has_buckets": "buckets" in self.ea}
+
+
+def fhash(name: str, n: int) -> int:
+    """Stable directory-bucket hash."""
+    h = 2166136261
+    for ch in name.encode():
+        h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    return h % n
+
+
+class MdsTarget(R.Target):
+    svc_kind = "mds"
+
+    SPLIT_THRESHOLD = 1 << 30         # entries before a dir splits (set low
+                                      # in tests; effectively off by default)
+    SPLIT_WAYS = 4
+
+    def __init__(self, uuid: str, node: R.Node, inode_group: int,
+                 peers: dict | None = None):
+        super().__init__(uuid, node)
+        self.inode_group = inode_group
+        self.inodes: dict[tuple, Inode] = {}
+        self._ino_seq = itertools.count(2)
+        self.rpc = R.RpcClient(node)
+        self.ldlm = dlm_mod.LdlmNamespace(self, self.rpc,
+                                          intent_policy=self.intent_policy)
+        self.ldlm.conflict_cb = self._note_contention
+        self.peers: dict[str, R.Import] = {}      # peer mds uuid -> import
+        self.peer_nids: dict[str, list] = peers or {}
+        self.unlink_llog = llog_mod.LlogCatalog(f"{uuid}-unlink")
+        # dependency records for the consistent cut (§6.7.6.3):
+        # [(own_transno, {peer_uuid: peer_transno})]
+        self.dep_log: list[tuple[int, dict]] = []
+        self.undo_history: list[tuple[int, Any]] = []   # kept past commit
+        self.contention: dict[tuple, int] = {}    # fid -> recent conflicts
+        self.osts: dict[str, R.Import] = {}       # for orphan cleanup
+        if inode_group == 0:
+            root = Inode(ROOT_FID, S_IFDIR, mode=0o755, nlink=2)
+            self.inodes[ROOT_FID] = root
+        ops = self.ops
+        ops["getattr"] = self.op_getattr
+        ops["readdir"] = self.op_readdir
+        ops["reint"] = self.op_reint
+        ops["reint_batch"] = self.op_reint_batch
+        ops["close"] = self.op_close
+        ops["statfs"] = self.op_statfs
+        ops["wbc_request"] = self.op_wbc_request
+        ops["prealloc_fids"] = self.op_prealloc_fids
+        ops["llog_cancel"] = self.op_llog_cancel
+        ops["bucket_insert"] = self.op_bucket_insert
+        ops["bucket_lookup"] = self.op_bucket_lookup
+        ops["bucket_remove"] = self.op_bucket_remove
+        ops["remote_mkdir"] = self.op_remote_mkdir
+        ops["remote_create"] = self.op_remote_create
+        ops["remote_link"] = self.op_remote_link
+        ops["remote_unlink_inode"] = self.op_remote_unlink_inode
+        ops["dep_records"] = self.op_dep_records
+        ops["rollback_to"] = self.op_rollback_to
+        ops["prune_history"] = self.op_prune_history
+
+    # ------------------------------------------------------------- wiring
+    def connect_peer(self, uuid: str, nids: list[str]):
+        self.peer_nids[uuid] = nids
+
+    def _peer(self, uuid: str) -> R.Import:
+        imp = self.peers.get(uuid)
+        if imp is None:
+            imp = self.rpc.import_target(uuid, self.peer_nids[uuid], "mds")
+            self.peers[uuid] = imp
+        return imp
+
+    def connect_ost(self, uuid: str, nids: list[str]):
+        self.osts[uuid] = self.rpc.import_target(uuid, nids, "ost")
+
+    # --------------------------------------------------------------- fids
+    def new_fid(self) -> tuple:
+        ino = next(self._ino_seq)
+        return (self.inode_group, ino, 1)
+
+    def _get(self, fid) -> Inode:
+        ino = self.inodes.get(tuple(fid))
+        if ino is None:
+            raise R.RpcError(-2, f"no inode {fid}")      # ENOENT
+        return ino
+
+    # ---------------------------------------------------- txn w/ history
+    def txn_meta(self, undo, deps: dict | None = None) -> int:
+        """A metadata transaction: normal undo (crash rollback) + retained
+        undo history + dependency record for the consistent cut."""
+        transno = self.txn(undo)
+        self.undo_history.append((transno, undo))
+        if deps:
+            self.dep_log.append((transno, dict(deps)))
+        if len(self.undo_history) > 4096:
+            self.undo_history = self.undo_history[-2048:]
+        return transno
+
+    # ------------------------------------------------------------ intents
+    def intent_policy(self, req: R.Request, res) -> tuple[dict, bool]:
+        """DLM intent execution (§7.5): run the operation while granting.
+        Returns (intent_data, grant_lock)."""
+        it = req.body["intent"]
+        op = it["op"]
+        self.sim.stats.count(f"mds.intent.{op}")
+        if op == "lookup" or op == "getattr":
+            data = self._intent_lookup(it)
+            return data, data.get("status", 0) == 0
+        if op == "open":
+            data = self._intent_open(it, req)
+            return data, data.get("status", 0) == 0 and not it.get("no_lock")
+        if op == "wbc":
+            granted = self._wbc_decision(tuple(it["fid"]))
+            return {"wbc_granted": granted}, granted
+        return {"status": -38}, False
+
+    def _intent_lookup(self, it) -> dict:
+        parent = self.inodes.get(tuple(it["parent"]))
+        if parent is None:
+            return {"status": -2}
+        name = it["name"]
+        if "buckets" in parent.ea:
+            b = parent.ea["buckets"]
+            bfid = b[fhash(name, len(b))]
+            if tuple(bfid)[0] != self.inode_group:
+                return {"status": 0, "redirect": bfid}
+            parent = self._get(bfid)
+        fid = parent.entries.get(name)
+        if fid is None:
+            # negative dentry: cacheable non-existence (§6.2.1)
+            return {"status": -2, "negative": True}
+        inode = self.inodes.get(tuple(fid))
+        if inode is None:
+            return {"status": 0, "fid": fid, "remote": True}
+        d = {"status": 0, "attrs": inode.attrs()}
+        if it.get("want_ea"):
+            d["ea"] = dict(inode.ea)
+        return d
+
+    def _intent_open(self, it, req: R.Request) -> dict:
+        """open_namei work: lookup [+create] + open (§6.4.3). Returns the
+        `disposition` bitmap of which phases ran."""
+        disp = ["lookup"]
+        parent = self._get(it["parent"])
+        name = it["name"]
+        flags = it.get("flags", "")
+        fid = parent.entries.get(name)
+        if fid is None and "buckets" in parent.ea:
+            b = parent.ea["buckets"]
+            bfid = b[fhash(name, len(b))]
+            bucket = self.inodes.get(tuple(bfid))
+            if bucket is not None:
+                fid = bucket.entries.get(name)
+        created = False
+        if fid is None:
+            if "c" not in flags:
+                return {"status": -2, "disposition": disp}
+            disp.append("create")
+            self._revoke_client_locks(parent.fid)
+            fid = tuple(it["fid"]) if it.get("fid") else self.new_fid()
+            inode = Inode(fid, S_IFREG, mode=it.get("mode", 0o644),
+                          mtime=self.sim.now)
+            self.inodes[fid] = inode
+            self._dir_insert(parent, name, fid)
+            created = True
+
+            def undo():
+                self._dir_remove_raw(parent, name)
+                self.inodes.pop(fid, None)
+            transno = self.txn_meta(undo)
+        else:
+            if "x" in flags and "c" in flags:
+                return {"status": -17, "disposition": disp}   # EEXIST
+            transno = 0
+        inode = self._get(fid)
+        disp.append("open")
+        if inode.ftype == S_IFLNK:
+            return {"status": 0, "disposition": disp, "symlink": inode.symlink,
+                    "attrs": inode.attrs()}
+        exp = self.exports[req.client_uuid]
+        handle = len(exp.data.setdefault("opens", {})) + 1
+        exp.data["opens"][handle] = fid
+        if "w" in flags and inode.ftype == S_IFREG:
+            inode.mtime_on_ost = True       # OSTs own mtime while open-write
+        return {"status": 0, "disposition": disp, "created": created,
+                "attrs": inode.attrs(), "ea": dict(inode.ea),
+                "open_handle": handle, "_transno": transno}
+
+    def _revoke_client_locks(self, *fids):
+        """§6.4.2: the MDS takes a write lock on the parent directories (in
+        fid order) before a namespace update — here that means revoking
+        client PR locks (blocking ASTs) so cached dentries invalidate."""
+        for fid in sorted(set(tuple(f) for f in fids)):
+            res = self.ldlm.resources.get(("fid", *fid))
+            if not res:
+                continue
+            for lk in list(res.granted):
+                if lk.mode in ("PR", "EX", "PW", "CW"):
+                    ok = self.ldlm._blocking_ast(lk)
+                    if not ok:
+                        self.ldlm.evict_client(lk.client_uuid)
+            self._note_contention(("fid", *fid))
+
+    def _note_contention(self, res_name: tuple):
+        """Lock-callback traffic feeds the WBC switching policy (§6.5.2)."""
+        if res_name and res_name[0] == "fid":
+            fid = tuple(res_name[1:])
+            self.contention[fid] = self.contention.get(fid, 0) + 1
+
+    # ---------------------------------------------------------- wbc grant
+    def _wbc_decision(self, fid: tuple) -> bool:
+        """§6.5: default to a subtree (write-back) lock unless the resource
+        saw recent lock-callback traffic."""
+        return self.contention.get(fid, 0) < 2
+
+    def op_wbc_request(self, req: R.Request) -> R.Reply:
+        fid = tuple(req.body["fid"])
+        ok = self._wbc_decision(fid)
+        return R.Reply(data={"granted": ok})
+
+    def op_prealloc_fids(self, req: R.Request) -> R.Reply:
+        n = req.body.get("count", 64)
+        fids = [self.new_fid() for _ in range(n)]
+        return R.Reply(data={"fids": fids})
+
+    # -------------------------------------------------------------- plain
+    def op_getattr(self, req: R.Request) -> R.Reply:
+        inode = self._get(req.body["fid"])
+        d = {"attrs": inode.attrs()}
+        if req.body.get("want_ea"):
+            d["ea"] = dict(inode.ea)
+        if inode.ftype == S_IFLNK:
+            d["symlink"] = inode.symlink
+        return R.Reply(data=d)
+
+    def op_readdir(self, req: R.Request) -> R.Reply:
+        inode = self._get(req.body["fid"])
+        if inode.ftype != S_IFDIR:
+            raise R.RpcError(-20)           # ENOTDIR
+        entries = dict(inode.entries)
+        nbytes = sum(len(k) + 24 for k in entries)
+        # split dir: the LMV iterates the buckets client-side (§6.7.3);
+        # bucket fids on THIS mds could be merged here, but uniform
+        # client-side iteration keeps the protocol single-shaped.
+        return R.Reply(data={"entries": entries, "buckets":
+                             inode.ea.get("buckets")}, bulk_nbytes=nbytes)
+
+    def op_statfs(self, req: R.Request) -> R.Reply:
+        return R.Reply(data={"inodes": len(self.inodes),
+                             "group": self.inode_group})
+
+    def op_close(self, req: R.Request) -> R.Reply:
+        exp = self.exports[req.client_uuid]
+        fid = exp.data.get("opens", {}).pop(req.body.get("handle"), None)
+        if fid is None and req.body.get("fid"):
+            # replay after server restart: open-handle table was volatile,
+            # the request carries the fid (§29: open replay)
+            fid = tuple(req.body["fid"])
+            if fid not in self.inodes:
+                fid = None
+        b = req.body
+        if fid is not None and (b.get("size") is not None
+                                or b.get("mtime") is not None):
+            inode = self._get(fid)
+            old = (inode.size, inode.mtime, inode.mtime_on_ost)
+            if b.get("size") is not None:
+                inode.size = b["size"]
+            if b.get("mtime") is not None:
+                inode.mtime = max(inode.mtime, b["mtime"])
+            inode.mtime_on_ost = False
+
+            def undo():
+                inode.size, inode.mtime, inode.mtime_on_ost = old
+            return R.Reply(transno=self.txn_meta(undo))
+        return R.Reply()
+
+    # ----------------------------------------------------- reintegration
+    def op_reint(self, req: R.Request) -> R.Reply:
+        r = req.body["rec"]
+        fn = getattr(self, f"_reint_{r['type']}", None)
+        if fn is None:
+            raise R.RpcError(-38, r["type"])
+        self.sim.stats.count(f"mds.reint.{r['type']}")
+        return fn(r, req)
+
+    def op_reint_batch(self, req: R.Request) -> R.Reply:
+        """WBC flush: apply update records in order (ch. 17). One transno
+        for the batch (single reply/ack; §6.5.3)."""
+        out = []
+        for r in req.body["records"]:
+            fn = getattr(self, f"_reint_{r['type']}")
+            rep = fn(r, req)
+            out.append({"status": rep.status, "data": rep.data})
+        return R.Reply(data=out, transno=self.transno)
+
+    def _dir_insert(self, parent: Inode, name: str, fid: tuple,
+                    is_dir: bool = False):
+        if "buckets" in parent.ea:
+            b = parent.ea["buckets"]
+            bfid = tuple(b[fhash(name, len(b))])
+            if bfid[0] == self.inode_group:
+                self._get(bfid).entries[name] = fid
+            else:
+                peer = self._peer_for_group(bfid[0])
+                rep = self._peer(peer).request(
+                    "bucket_insert", {"bucket": bfid, "name": name,
+                                      "fid": fid})
+                # cross-MDS dependency: our txn depends on the peer's
+                self._last_deps = {peer: rep.transno}
+            parent.entries.pop(name, None)
+        else:
+            parent.entries[name] = fid
+            if len(parent.entries) > self.SPLIT_THRESHOLD and self.peer_nids:
+                self._split_dir(parent)
+        if is_dir:
+            parent.nlink += 1
+
+    def _dir_remove_raw(self, parent: Inode, name: str):
+        if "buckets" in parent.ea:
+            b = parent.ea["buckets"]
+            bfid = tuple(b[fhash(name, len(b))])
+            if bfid[0] == self.inode_group:
+                self._get(bfid).entries.pop(name, None)
+            else:
+                peer = self._peer_for_group(bfid[0])
+                rep = self._peer(peer).request(
+                    "bucket_remove", {"bucket": bfid, "name": name})
+                self._last_deps = {peer: rep.transno}
+        else:
+            parent.entries.pop(name, None)
+
+    def _lookup_entry(self, parent: Inode, name: str):
+        if "buckets" in parent.ea:
+            b = parent.ea["buckets"]
+            bfid = tuple(b[fhash(name, len(b))])
+            if bfid[0] == self.inode_group:
+                return self._get(bfid).entries.get(name)
+            peer = self._peer_for_group(bfid[0])
+            rep = self._peer(peer).request(
+                "bucket_lookup", {"bucket": bfid, "name": name})
+            f = rep.data.get("fid")
+            return tuple(f) if f else None
+        f = parent.entries.get(name)
+        return tuple(f) if f else None
+
+    def _peer_for_group(self, group: int) -> str:
+        for uuid in self.peer_nids:
+            if uuid.endswith(str(group)) or f"-{group}" in uuid:
+                return uuid
+        return list(self.peer_nids)[group % max(1, len(self.peer_nids))]
+
+    # --- create family
+    def _reint_create(self, r, req) -> R.Reply:
+        parent = self._get(r["parent"])
+        name = r["name"]
+        self._revoke_client_locks(parent.fid)
+        if self._lookup_entry(parent, name) is not None:
+            raise R.RpcError(-17, name)
+        ftype = r.get("ftype", S_IFREG)
+        self._last_deps = None
+        if ftype == S_IFDIR and self.peer_nids and not r.get("fid") \
+                and r.get("remote_ok", True):
+            return self._mkdir_remote(parent, name, r)
+        fid = tuple(r["fid"]) if r.get("fid") else self.new_fid()
+        if fid[0] != self.inode_group:
+            # replay of a remote-MDS create: re-create the pinned fid on
+            # its owning peer (idempotent there), then re-insert locally
+            peer = self._peer_for_group(fid[0])
+            rep = self._peer(peer).request(
+                "remote_mkdir" if ftype == S_IFDIR else "remote_create",
+                {"mode": r.get("mode", 0o644), "fid": fid,
+                 "ftype": ftype})
+            self._dir_insert(parent, name, fid, is_dir=ftype == S_IFDIR)
+            deps = {peer: rep.transno} if rep.transno else None
+
+            def undo_remote():
+                self._dir_remove_raw(parent, name)
+                if ftype == S_IFDIR:
+                    parent.nlink -= 1
+            return R.Reply(data={"fid": fid},
+                           transno=self.txn_meta(undo_remote, deps))
+        inode = Inode(fid, ftype, mode=r.get("mode", 0o644),
+                      mtime=self.sim.now,
+                      nlink=2 if ftype == S_IFDIR else 1)
+        if ftype == S_IFLNK:
+            inode.symlink = r.get("target", "")
+        if r.get("ea"):
+            inode.ea.update(r["ea"])
+        self.inodes[fid] = inode
+        self._dir_insert(parent, name, fid, is_dir=ftype == S_IFDIR)
+        deps = self._last_deps
+
+        def undo():
+            self._dir_remove_raw(parent, name)
+            self.inodes.pop(fid, None)
+            if ftype == S_IFDIR:
+                parent.nlink -= 1
+        transno = self.txn_meta(undo, deps)
+        self.ldlm.bump_version(("fid", *parent.fid))
+        return R.Reply(data={"fid": fid}, transno=transno)
+
+    def _mkdir_remote(self, parent: Inode, name: str, r) -> R.Reply:
+        """§6.7.1.2: 'mkdir always creates the new directory on another
+        MDS'. Two-node transaction with a dependency record."""
+        peer = sorted(self.peer_nids)[
+            len(parent.entries) % len(self.peer_nids)]
+        rep = self._peer(peer).request(
+            "remote_mkdir", {"mode": r.get("mode", 0o755)})
+        fid = tuple(rep.data["fid"])
+        self._dir_insert(parent, name, fid, is_dir=True)
+        deps = {peer: rep.transno}
+
+        def undo():
+            self._dir_remove_raw(parent, name)
+            parent.nlink -= 1
+        transno = self.txn_meta(undo, deps)
+        return R.Reply(data={"fid": fid, "remote": True}, transno=transno)
+
+    def op_remote_mkdir(self, req: R.Request) -> R.Reply:
+        fid = tuple(req.body["fid"]) if req.body.get("fid") else \
+            self.new_fid()
+        if fid in self.inodes:                  # idempotent replay
+            return R.Reply(data={"fid": fid})
+        ftype = req.body.get("ftype", S_IFDIR)
+        inode = Inode(fid, ftype, mode=req.body.get("mode", 0o755),
+                      nlink=2 if ftype == S_IFDIR else 1,
+                      mtime=self.sim.now)
+        self.inodes[fid] = inode
+
+        def undo():
+            self.inodes.pop(fid, None)
+        return R.Reply(data={"fid": fid}, transno=self.txn_meta(undo))
+
+    op_remote_create = op_remote_mkdir
+
+    # --- unlink family
+    def _reint_unlink(self, r, req) -> R.Reply:
+        parent = self._get(r["parent"])
+        name = r["name"]
+        self._revoke_client_locks(parent.fid)
+        fid = self._lookup_entry(parent, name)
+        if fid is None:
+            raise R.RpcError(-2, name)
+        inode = self.inodes.get(fid)
+        self._last_deps = None
+        if inode is None:
+            # inode lives on a peer MDS (§6.7.5 two-stage unlink)
+            peer = self._peer_for_group(fid[0])
+            rep = self._peer(peer).request("remote_unlink_inode",
+                                           {"fid": fid})
+            self._dir_remove_raw(parent, name)
+            deps = dict(self._last_deps or {})
+            deps[peer] = rep.transno
+
+            def undo():
+                parent.entries[name] = fid
+            return R.Reply(data=rep.data,
+                           transno=self.txn_meta(undo, deps))
+        if inode.ftype == S_IFDIR and (inode.entries or
+                                       "buckets" in inode.ea):
+            if any(True for _ in inode.entries):
+                raise R.RpcError(-39, "not empty")       # ENOTEMPTY
+        was_dir = inode.ftype == S_IFDIR
+        inode.nlink -= 2 if was_dir else 1
+        self._dir_remove_raw(parent, name)
+        if was_dir:
+            parent.nlink -= 1
+        data = {"fid": fid}
+        cookies = []
+        removed = None
+        if inode.nlink <= 0:
+            removed = self.inodes.pop(fid)
+            # last link gone: return the LOV EA + llog cookies so the
+            # client destroys data objects (§6.4.2); log one record per
+            # object for orphan recovery (§6.7.5)
+            if "lov" in inode.ea:
+                for o in inode.ea["lov"]["objects"]:
+                    rec = self.unlink_llog.add("unlink", {
+                        "ost": o["ost"], "group": o["group"],
+                        "oid": o["oid"]})
+                    cookies.append(rec.cookie)
+                data["ea"] = dict(inode.ea)
+                data["cookies"] = cookies
+        deps = self._last_deps
+
+        def undo():
+            if removed is not None:
+                self.inodes[fid] = removed
+                self.unlink_llog.cancel(cookies)
+            removed_inode = self.inodes[fid]
+            removed_inode.nlink += 2 if was_dir else 1
+            parent.entries[name] = fid
+            if was_dir:
+                parent.nlink += 1
+        transno = self.txn_meta(undo, deps)
+        self.ldlm.bump_version(("fid", *parent.fid))
+        return R.Reply(data=data, transno=transno)
+
+    def op_remote_unlink_inode(self, req: R.Request) -> R.Reply:
+        fid = tuple(req.body["fid"])
+        inode = self._get(fid)
+        inode.nlink -= 1
+        data = {"fid": fid}
+        removed = None
+        cookies = []
+        if inode.nlink <= 0:
+            removed = self.inodes.pop(fid)
+            if "lov" in inode.ea:
+                for o in inode.ea["lov"]["objects"]:
+                    rec = self.unlink_llog.add("unlink", {
+                        "ost": o["ost"], "group": o["group"],
+                        "oid": o["oid"]})
+                    cookies.append(rec.cookie)
+                data["ea"] = dict(inode.ea)
+                data["cookies"] = cookies
+
+        def undo():
+            if removed is not None:
+                self.inodes[fid] = removed
+                self.unlink_llog.cancel(cookies)
+            self.inodes[fid].nlink += 1
+        return R.Reply(data=data, transno=self.txn_meta(undo))
+
+    # --- rename / link / setattr
+    def _reint_rename(self, r, req) -> R.Reply:
+        """Rename, possibly across MDS nodes (§6.7.5 'the most interesting
+        of all: three nodes'). The coordinator (chosen by the client per
+        fid order, §6.7.1.4) performs remote lookup/remove/insert RPCs on
+        peers and records the dependencies for the consistent cut. Local
+        undo restores local state; cross-node atomicity is the cut's job."""
+        src_fid, dst_fid = tuple(r["src"]), tuple(r["dst"])
+        self._revoke_client_locks(src_fid, dst_fid)
+        src = self.inodes.get(src_fid)
+        dst = self.inodes.get(dst_fid)
+        deps = {}
+        self._last_deps = None
+        # --- source side: lookup + remove
+        if src is not None:
+            fid = self._lookup_entry(src, r["src_name"])
+            if fid is None:
+                raise R.RpcError(-2, r["src_name"])
+            self._dir_remove_raw(src, r["src_name"])
+            if self._last_deps:
+                deps.update(self._last_deps)
+        else:
+            peer = self._peer_for_group(src_fid[0])
+            rep = self._peer(peer).request(
+                "bucket_remove", {"bucket": src_fid, "name": r["src_name"]})
+            fid = rep.data.get("fid")
+            if fid is None:
+                raise R.RpcError(-2, r["src_name"])
+            fid = tuple(fid)
+            deps[peer] = rep.transno
+        # --- destination side: insert
+        self._last_deps = None
+        if dst is not None:
+            displaced = self._lookup_entry(dst, r["dst_name"])
+            self._dir_insert(dst, r["dst_name"], fid)
+            if self._last_deps:
+                deps.update(self._last_deps)
+        else:
+            displaced = None
+            peer = self._peer_for_group(dst_fid[0])
+            rep = self._peer(peer).request(
+                "bucket_insert", {"bucket": dst_fid, "name": r["dst_name"],
+                                  "fid": fid})
+            deps[peer] = max(deps.get(peer, 0), rep.transno)
+        inode = self.inodes.get(fid)
+        was_dir = inode is not None and inode.ftype == S_IFDIR
+        if was_dir and src is not None and dst is not None \
+                and src.fid != dst.fid:
+            src.nlink -= 1
+            dst.nlink += 1
+
+        def undo():
+            if dst is not None:
+                self._dir_remove_raw(dst, r["dst_name"])
+                if displaced is not None:
+                    dst.entries[r["dst_name"]] = displaced
+            if src is not None:
+                self._dir_insert(src, r["src_name"], fid)
+            if was_dir and src is not None and dst is not None \
+                    and src.fid != dst.fid:
+                src.nlink += 1
+                dst.nlink -= 1
+        transno = self.txn_meta(undo, deps or None)
+        for pf in {src_fid, dst_fid}:
+            self.ldlm.bump_version(("fid", *pf))
+        return R.Reply(data={"fid": fid}, transno=transno)
+
+    def _reint_link(self, r, req) -> R.Reply:
+        fid = tuple(r["fid"])
+        parent = self._get(r["parent"])
+        self._revoke_client_locks(parent.fid)
+        inode = self.inodes.get(fid)
+        self._last_deps = None
+        deps = {}
+        if inode is None:
+            peer = self._peer_for_group(fid[0])
+            rep = self._peer(peer).request("remote_link", {"fid": fid})
+            deps[peer] = rep.transno
+        else:
+            inode.nlink += 1
+        if self._lookup_entry(parent, r["name"]) is not None:
+            if inode is not None:
+                inode.nlink -= 1
+            raise R.RpcError(-17, r["name"])
+        self._dir_insert(parent, r["name"], fid)
+        if self._last_deps:
+            deps.update(self._last_deps)
+
+        def undo():
+            self._dir_remove_raw(parent, r["name"])
+            if inode is not None:
+                inode.nlink -= 1
+        return R.Reply(data={"fid": fid},
+                       transno=self.txn_meta(undo, deps or None))
+
+    def op_remote_link(self, req: R.Request) -> R.Reply:
+        inode = self._get(req.body["fid"])
+        inode.nlink += 1
+
+        def undo():
+            inode.nlink -= 1
+        return R.Reply(transno=self.txn_meta(undo))
+
+    def _reint_setattr(self, r, req) -> R.Reply:
+        inode = self._get(r["fid"])
+        old = (dict(inode.ea), inode.mode, inode.uid, inode.gid,
+               inode.mtime, inode.size)
+        a = r.get("attrs", {})
+        if "ea" in r:
+            inode.ea.update(r["ea"])
+        inode.mode = a.get("mode", inode.mode)
+        inode.uid = a.get("uid", inode.uid)
+        inode.gid = a.get("gid", inode.gid)
+        inode.mtime = a.get("mtime", inode.mtime)
+        if "size" in a:
+            inode.size = a["size"]
+
+        def undo():
+            (inode.ea, inode.mode, inode.uid, inode.gid, inode.mtime,
+             inode.size) = ({**old[0]}, *old[1:])
+        return R.Reply(data={"attrs": inode.attrs()},
+                       transno=self.txn_meta(undo))
+
+    # ---------------------------------------------------- directory split
+    def _split_dir(self, parent: Inode):
+        """§6.7.3: fan a large directory out into hash buckets on peer
+        MDSes (and locally)."""
+        peers = sorted(self.peer_nids)
+        ways = min(self.SPLIT_WAYS, len(peers) + 1)
+        buckets = []
+        for i in range(ways):
+            if i == 0:
+                bfid = self.new_fid()
+                self.inodes[bfid] = Inode(bfid, S_IFDIR, nlink=2)
+            else:
+                peer = peers[(i - 1) % len(peers)]
+                rep = self._peer(peer).request("remote_mkdir", {})
+                bfid = tuple(rep.data["fid"])
+            buckets.append(bfid)
+        entries = dict(parent.entries)
+        parent.entries.clear()
+        parent.ea["buckets"] = buckets
+        for name, fid in entries.items():
+            bfid = tuple(buckets[fhash(name, ways)])
+            if bfid[0] == self.inode_group:
+                self._get(bfid).entries[name] = fid
+            else:
+                peer = self._peer_for_group(bfid[0])
+                self._peer(peer).request(
+                    "bucket_insert", {"bucket": bfid, "name": name,
+                                      "fid": fid})
+        self.sim.stats.count("mds.dir_split")
+
+    def op_bucket_insert(self, req: R.Request) -> R.Reply:
+        bucket = self._get(req.body["bucket"])
+        name = req.body["name"]
+        fid = tuple(req.body["fid"])
+        bucket.entries[name] = fid
+
+        def undo():
+            bucket.entries.pop(name, None)
+        return R.Reply(transno=self.txn_meta(undo))
+
+    def op_bucket_lookup(self, req: R.Request) -> R.Reply:
+        bucket = self._get(req.body["bucket"])
+        return R.Reply(data={"fid": bucket.entries.get(req.body["name"])})
+
+    def op_bucket_remove(self, req: R.Request) -> R.Reply:
+        bucket = self._get(req.body["bucket"])
+        name = req.body["name"]
+        fid = bucket.entries.pop(name, None)
+
+        def undo():
+            if fid is not None:
+                bucket.entries[name] = fid
+        return R.Reply(data={"fid": fid}, transno=self.txn_meta(undo))
+
+    # -------------------------------------------------- llog / recovery
+    def op_llog_cancel(self, req: R.Request) -> R.Reply:
+        n = self.unlink_llog.cancel(req.body["cookies"])
+        return R.Reply(data={"cancelled": n})
+
+    def process_unlink_llog(self, ost_imports: dict[str, R.Import]) -> int:
+        """After MDS recovery: re-ship destroys for uncancelled unlink
+        records (§6.7.5). Idempotent on the OST."""
+        def ship(rec: llog_mod.LlogRecord) -> bool:
+            imp = ost_imports.get(rec.payload["ost"])
+            if imp is None:
+                return False
+            try:
+                imp.request("destroy", {"group": rec.payload["group"],
+                                        "oid": rec.payload["oid"],
+                                        "cookie": rec.cookie})
+                return True
+            except (R.RpcError, R.TimeoutError_):
+                return False
+        return self.unlink_llog.process(ship)
+
+    def orphan_cleanup(self, lov_targets: dict[str, R.Import],
+                       group: int) -> dict:
+        """§6.7.5 second half: destroy OST objects no file references
+        (client died between object create and EA setattr)."""
+        keep: dict[str, set] = {u: set() for u in lov_targets}
+        for inode in self.inodes.values():
+            lsm = inode.ea.get("lov")
+            if lsm:
+                for o in lsm["objects"]:
+                    if o["ost"] in keep and o["group"] == group:
+                        keep[o["ost"]].add(o["oid"])
+        out = {}
+        for uuid, imp in lov_targets.items():
+            objs = imp.request("list_objects", {"group": group}).data
+            doomed = [o for o in objs if o not in keep[uuid]]
+            for oid in doomed:
+                imp.request("destroy", {"group": group, "oid": oid})
+            out[uuid] = doomed
+        return out
+
+    # ------------------------------------------- consistent cut support
+    def op_dep_records(self, req: R.Request) -> R.Reply:
+        return R.Reply(data={
+            "committed": self.committed_transno,
+            "deps": [(t, d) for t, d in self.dep_log]})
+
+    def op_rollback_to(self, req: R.Request) -> R.Reply:
+        """Undo all retained transactions with transno > cut (§6.7.6.3)."""
+        cut = req.body["transno"]
+        undone = 0
+        for transno, undo in sorted(self.undo_history, reverse=True):
+            if transno > cut:
+                undo()
+                undone += 1
+        self.undo_history = [(t, u) for t, u in self.undo_history
+                             if t <= cut]
+        self.dep_log = [(t, d) for t, d in self.dep_log if t <= cut]
+        self.transno = min(self.transno, cut)
+        self.committed_transno = min(self.committed_transno, cut)
+        return R.Reply(data={"undone": undone})
+
+    def op_prune_history(self, req: R.Request) -> R.Reply:
+        cut = req.body["transno"]
+        self.undo_history = [(t, u) for t, u in self.undo_history if t > cut]
+        self.dep_log = [(t, d) for t, d in self.dep_log if t > cut]
+        return R.Reply()

@@ -1,0 +1,186 @@
+"""Object Storage Client (paper §2.2, ch. 25) with write-back page cache.
+
+The OSC exposes the same OBD API as a direct device but ships each call to
+an OST. It owns:
+  * a LockClient on the OST's DLM namespace (extent locks; reads take PR,
+    writes PW; the server grows extents per §7.5 so sequential I/O takes
+    ONE lock RPC per object, which our benchmarks measure);
+  * a write-back cache of dirty extents flushed on lock revocation, grant
+    exhaustion, or explicit sync (ch. 28.5);
+  * the client half of the grant protocol (ch. 10.12);
+  * referral handling: reads bounced to a collaborative cache follow the
+    referral to the caching OST (§5.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Optional
+
+from repro.core import dlm as dlm_mod
+from repro.core import ptlrpc as R
+
+
+@dataclasses.dataclass
+class DirtyExtent:
+    group: int
+    oid: int
+    offset: int
+    data: bytes
+    mtime: float
+
+
+class Osc:
+    def __init__(self, rpc: R.RpcClient, target_uuid: str, nids: list[str],
+                 *, writeback: bool = True):
+        self.rpc = rpc
+        self.sim = rpc.sim
+        self.uuid = target_uuid
+        self.imp = rpc.import_target(target_uuid, nids, "ost")
+        self.locks = dlm_mod.LockClient(rpc, self.imp, flush_cb=self._flush_lock)
+        self.writeback = writeback
+        self.dirty: list[DirtyExtent] = []
+        self.dirty_bytes = 0
+        self.grant = 0
+        self._cobd_imports: dict[str, R.Import] = {}
+        self.read_cache_cb = None       # COBD hook: populate peer cache
+
+    # ------------------------------------------------------------- locks
+    def _res(self, group, oid):
+        return ("ext", group, oid)
+
+    def lock(self, group, oid, mode, extent=None, gid: int = 0):
+        lk, _, lvb = self.locks.enqueue(self._res(group, oid), mode,
+                                        extent or dlm_mod.WHOLE, gid=gid)
+        return lk, lvb
+
+    def _flush_lock(self, lk: dlm_mod.Lock):
+        """Blocking AST on a PW lock: write back dirty extents under it."""
+        _, group, oid = lk.res_name
+        mine = [d for d in self.dirty if (d.group, d.oid) == (group, oid)]
+        for d in mine:
+            self._write_through(d)
+            self.dirty.remove(d)
+            self.dirty_bytes -= len(d.data)
+
+    # --------------------------------------------------------------- api
+    def create(self, group: int, oid: int | None = None, **attrs) -> dict:
+        def fixup(req, rep):
+            req.body["oid"] = rep.data["oid"]
+        rep = self.imp.request("create", {"group": group, "oid": oid,
+                                          "attrs": attrs}, fixup=fixup)
+        return rep.data
+
+    def destroy(self, group: int, oid: int, cookie: int | None = None):
+        return self.imp.request("destroy", {"group": group, "oid": oid,
+                                            "cookie": cookie}).data
+
+    def getattr(self, group: int, oid: int) -> dict:
+        return self.imp.request("getattr", {"group": group, "oid": oid}).data
+
+    def setattr(self, group: int, oid: int, **attrs):
+        return self.imp.request(
+            "setattr", {"group": group, "oid": oid, "attrs": attrs}).data
+
+    def punch(self, group: int, oid: int, size: int):
+        self._drop_dirty_beyond(group, oid, size)
+        return self.imp.request(
+            "punch", {"group": group, "oid": oid, "size": size}).data
+
+    def statfs(self) -> dict:
+        return self.imp.request("statfs", {}).data
+
+    def sync(self):
+        self.flush()
+        return self.imp.request("sync", {}).data
+
+    def list_objects(self, group: int) -> list:
+        return self.imp.request("list_objects", {"group": group}).data
+
+    # --------------------------------------------------------------- I/O
+    def _ensure_grant(self):
+        if self.grant == 0:
+            self.grant = self.imp.connect_data.get("grant", 0)
+
+    def write(self, group: int, oid: int, offset: int, data: bytes,
+              *, lock: bool = True, gid: int = 0):
+        if lock:
+            self.lock(group, oid, "GR" if gid else "PW",
+                      (offset, offset + len(data)), gid=gid)
+        self._ensure_grant()
+        if self.writeback and len(data) <= self.grant:
+            # cached write consumes grant; flushed lazily (ch. 10.12)
+            self.grant -= len(data)
+            self.dirty.append(DirtyExtent(group, oid, offset, bytes(data),
+                                          self.sim.now))
+            self.dirty_bytes += len(data)
+            for lk in self.locks.by_res.get(self._res(group, oid), ()):
+                lk.dirty = True
+            self.sim.stats.count("osc.cached_write")
+            return {"cached": True}
+        return self._write_through(
+            DirtyExtent(group, oid, offset, bytes(data), self.sim.now))
+
+    def _write_through(self, d: DirtyExtent) -> dict:
+        # bulk bytes already ride in the body ("data"): wire_size counts
+        # them once; no extra bulk_nbytes or we double-charge the link
+        rep = self.imp.request(
+            "write", {"group": d.group, "oid": d.oid, "offset": d.offset,
+                      "data": d.data, "mtime": d.mtime})
+        self.grant = rep.data.get("grant", self.grant)
+        return rep.data
+
+    def flush(self, group=None, oid=None):
+        """Write back dirty extents (all, or one object's)."""
+        todo = [d for d in self.dirty
+                if group is None or (d.group, d.oid) == (group, oid)]
+        if not todo:
+            return 0
+        self.sim.parallel([
+            (lambda dd=d: self._write_through(dd)) for d in todo])
+        for d in todo:
+            self.dirty.remove(d)
+            self.dirty_bytes -= len(d.data)
+        return len(todo)
+
+    def _drop_dirty_beyond(self, group, oid, size):
+        for d in list(self.dirty):
+            if (d.group, d.oid) == (group, oid) and d.offset >= size:
+                self.dirty.remove(d)
+                self.dirty_bytes -= len(d.data)
+
+    def read(self, group: int, oid: int, offset: int, length: int,
+             *, lock: bool = True, from_cobd: str | None = None) -> bytes:
+        # serve from own dirty cache when fully covered
+        for d in self.dirty:
+            if (d.group, d.oid) == (group, oid) and d.offset <= offset and \
+                    offset + length <= d.offset + len(d.data):
+                o = offset - d.offset
+                return d.data[o:o + length]
+        self.flush(group, oid)             # partial overlap: write back first
+        if lock:
+            self.lock(group, oid, "PR", (offset, offset + length))
+        body = {"group": group, "oid": oid, "offset": offset,
+                "length": length}
+        if from_cobd:
+            body["_from_cobd"] = from_cobd
+        rep = self.imp.request("read", body)
+        if rep.data and "referral" in (rep.data or {}):
+            ref = rep.data["referral"]
+            self.sim.stats.count("osc.followed_referral")
+            return self._read_via(ref, group, oid, offset, length)
+        return rep.bulk
+
+    def _read_via(self, ref: dict, group, oid, offset, length) -> bytes:
+        imp = self._cobd_imports.get(ref["uuid"])
+        if imp is None:
+            imp = self.rpc.import_target(ref["uuid"], [ref["nid"]], "ost")
+            self._cobd_imports[ref["uuid"]] = imp
+        rep = imp.request("read", {"group": group, "oid": oid,
+                                   "offset": offset, "length": length,
+                                   "no_referral": True})
+        return rep.bulk
+
+    # ---------------------------------------------------------- recovery
+    def on_connect_data(self, data: dict):
+        self.grant = data.get("grant", 0)

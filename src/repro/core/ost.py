@@ -1,0 +1,199 @@
+"""Object Storage Target (paper ch. 2.2, 5, 10.12, 23.4).
+
+An OST wraps a direct OBD device (FilterDevice) behind the OST network
+protocol, embeds a DLM namespace for *extent* locks on its objects, manages
+client *grants* (space pre-allocated to clients so they can write back
+cached dirty data without ENOSPC surprises, ch. 10.12), and hosts the
+*referral* module that redirects reads to collaborative caches (§5.5.2).
+
+Bulk data rides on the request's `bulk_nbytes` (timing) + the reply `bulk`
+field (payload) — the niobuf vector of §4.5.6.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import dlm as dlm_mod
+from repro.core import obd as obd_mod
+from repro.core import ptlrpc as R
+
+INITIAL_GRANT = 2 << 20        # 2 MB on connect
+GRANT_CHUNK = 8 << 20
+
+
+class OstTarget(R.Target):
+    svc_kind = "ost"
+
+    def __init__(self, uuid: str, node: R.Node, capacity: int = 1 << 40):
+        super().__init__(uuid, node)
+        self.obd = obd_mod.FilterDevice(f"{uuid}-filter", capacity)
+        self.obd.txn_hook = self.txn
+        self.rpc = R.RpcClient(node)
+        self.ldlm = dlm_mod.LdlmNamespace(
+            self, self.rpc, lvb_update=self._lvb_update)
+        # referral/policy module (§5.5.2): caching OST uuid -> nid
+        self.caching_osts: dict[str, str] = {}
+        self.referral_rr = 0
+        ops = self.ops
+        ops["connect"] = self.op_connect
+        ops["disconnect"] = self.op_disconnect
+        ops["ping"] = self.op_ping
+        ops["create"] = self.op_create
+        ops["destroy"] = self.op_destroy
+        ops["getattr"] = self.op_getattr
+        ops["setattr"] = self.op_setattr
+        ops["read"] = self.op_read
+        ops["write"] = self.op_write
+        ops["punch"] = self.op_punch
+        ops["statfs"] = self.op_statfs
+        ops["sync"] = self.op_sync
+        ops["list_objects"] = self.op_list_objects
+        ops["llog_cancel"] = self.op_llog_cancel
+        ops["orphan_cleanup"] = self.op_orphan_cleanup
+
+    # ------------------------------------------------------------- locks
+    def _lvb_update(self, res: dlm_mod.Resource):
+        if res.name[0] != "ext":
+            return
+        _, group, oid = res.name
+        try:
+            attrs = self.obd.getattr(group, oid)
+            res.lvb.update(size=attrs["size"], mtime=attrs["mtime"])
+        except obd_mod.ObdError:
+            pass
+
+    # ------------------------------------------------------------ grants
+    def _grant_for(self, exp: R.Export, want: int) -> int:
+        free = self.obd.statfs()["free"]
+        cur = exp.data.get("grant", 0)
+        add = max(0, min(want, free // max(1, 2 * len(self.exports)) - cur))
+        exp.data["grant"] = cur + add
+        return exp.data["grant"]
+
+    def op_connect(self, req: R.Request) -> R.Reply:
+        rep = super().op_connect(req)
+        exp = self.exports[req.client_uuid]
+        rep.data["grant"] = self._grant_for(exp, INITIAL_GRANT)
+        return rep
+
+    # ----------------------------------------------------------- obd ops
+    def _wrap(self, fn, *a, **kw):
+        try:
+            return fn(*a, **kw)
+        except obd_mod.ObdError as e:
+            raise R.RpcError(-e.errno, str(e))
+
+    def op_create(self, req: R.Request) -> R.Reply:
+        b = req.body
+        if req.replay and b.get("oid") is not None:
+            # replayed create of an object that survived: idempotent
+            try:
+                self.obd.getattr(b["group"], b["oid"])
+                return R.Reply(data={"group": b["group"], "oid": b["oid"]},
+                               transno=self.transno)
+            except obd_mod.ObdError:
+                pass
+        out = self._wrap(self.obd.create, b["group"], b.get("oid"),
+                         **b.get("attrs", {}))
+        return R.Reply(data=out, transno=out["transno"])
+
+    def op_destroy(self, req: R.Request) -> R.Reply:
+        b = req.body
+        try:
+            out = self.obd.destroy(b["group"], b["oid"])
+        except obd_mod.ObdError:
+            return R.Reply(data={"transno": 0})     # idempotent for replay
+        # cancel llog cookie shipped with the destroy (ch. 8.4)
+        if b.get("cookie"):
+            self.obd.llog("unlink-client").cancel([b["cookie"]])
+        return R.Reply(data=out, transno=out["transno"])
+
+    def op_getattr(self, req: R.Request) -> R.Reply:
+        b = req.body
+        return R.Reply(data=self._wrap(self.obd.getattr, b["group"], b["oid"]))
+
+    def op_setattr(self, req: R.Request) -> R.Reply:
+        b = req.body
+        out = self._wrap(self.obd.setattr, b["group"], b["oid"],
+                         **b.get("attrs", {}))
+        return R.Reply(data=out, transno=out["transno"])
+
+    def op_read(self, req: R.Request) -> R.Reply:
+        b = req.body
+        group, oid = b["group"], b["oid"]
+        # referral module: redirect to a collaborative cache when some
+        # caching OST holds a PR lock covering the extent (§5.5.2), or --
+        # cache-population policy -- round-robin when none does. Reads
+        # FROM a COBD (populating its cache) are never re-referred.
+        if self.caching_osts and not b.get("no_referral") \
+                and not b.get("_from_cobd"):
+            ext = (b["offset"], b["offset"] + b["length"])
+            holders = self.ldlm.resources.get(("ext", group, oid))
+            cached = []
+            if holders:
+                for lk in holders.granted:
+                    if (lk.client_uuid in self.caching_osts
+                            and lk.mode == "PR"
+                            and dlm_mod.overlaps(lk.extent, ext)):
+                        cached.append(lk.client_uuid)
+            if cached:
+                pick = cached[self.referral_rr % len(cached)]
+            else:
+                pick = list(self.caching_osts)[
+                    self.referral_rr % len(self.caching_osts)]
+            self.referral_rr += 1
+            if pick != req.body.get("_from_cobd"):
+                self.sim.stats.count("ost.referral")
+                return R.Reply(data={"referral": {
+                    "uuid": pick, "nid": self.caching_osts[pick]}})
+        data = self._wrap(self.obd.read, group, oid, b["offset"], b["length"])
+        self.sim.stats.add_bytes("ost.read", len(data))
+        return R.Reply(data={"len": len(data)}, bulk=data,
+                       bulk_nbytes=len(data))
+
+    def op_write(self, req: R.Request) -> R.Reply:
+        b = req.body
+        data = req.body["data"]
+        out = self._wrap(self.obd.write, b["group"], b["oid"], b["offset"],
+                         data, b.get("mtime", self.sim.now))
+        self.sim.stats.add_bytes("ost.write", len(data))
+        exp = self.exports[req.client_uuid]
+        exp.data["grant"] = max(0, exp.data.get("grant", 0) - len(data))
+        self.ldlm.bump_version(("ext", b["group"], b["oid"]), size=out["size"])
+        return R.Reply(data={"size": out["size"],
+                             "grant": self._grant_for(exp, GRANT_CHUNK)},
+                       transno=out["transno"])
+
+    def op_punch(self, req: R.Request) -> R.Reply:
+        b = req.body
+        out = self._wrap(self.obd.punch, b["group"], b["oid"], b["size"])
+        return R.Reply(data=out, transno=out.get("transno", 0))
+
+    def op_statfs(self, req: R.Request) -> R.Reply:
+        return R.Reply(data=self.obd.statfs())
+
+    def op_sync(self, req: R.Request) -> R.Reply:
+        self.commit()
+        return R.Reply(data={"last_committed": self.committed_transno})
+
+    def op_list_objects(self, req: R.Request) -> R.Reply:
+        return R.Reply(data=self.obd.list_objects(req.body["group"]))
+
+    def op_llog_cancel(self, req: R.Request) -> R.Reply:
+        n = self.obd.llog(req.body["catalog"]).cancel(req.body["cookies"])
+        return R.Reply(data={"cancelled": n})
+
+    def op_orphan_cleanup(self, req: R.Request) -> R.Reply:
+        """MDS-driven orphan deletion after MDS recovery (§6.7.5): destroy
+        objects in `group` above `last_used` oid that no file references."""
+        b = req.body
+        doomed = [oid for oid in self.obd.list_objects(b["group"])
+                  if oid > b["last_used"] and oid not in set(b.get("keep", ()))]
+        for oid in doomed:
+            self.obd.destroy(b["group"], oid)
+        self.sim.stats.count("ost.orphans_destroyed", len(doomed))
+        return R.Reply(data={"destroyed": doomed})
+
+    # --------------------------------------------------------- lifecycle
+    def register_caching_ost(self, uuid: str, nid: str):
+        self.caching_osts[uuid] = nid

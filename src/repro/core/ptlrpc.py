@@ -1,0 +1,568 @@
+"""ptlrpc: request processing over Portals (paper ch. 4.5-4.8, 22, 23, 29).
+
+Concepts kept from the paper:
+  * static portal assignment per protocol (OST_REQUEST_PORTAL=6, ...);
+  * per-connection increasing xids; replies matched on xid bits;
+  * bulk transfer via logical niobufs (vectors of extents) moved on the bulk
+    portals, driven by the server (`ptlrpc_bulk_get` for writes / `_put` for
+    reads);
+  * targets / exports / imports / services (§4.6): an export is server-side
+    per-client state (last_rcvd slot, reply cache); an import is the client
+    stub with a failover nid list;
+  * transactions: every update gets a transno; the server retains an *undo
+    record* until commit (commits are lazy — `commit_interval` ops — so a
+    crash loses the tail, which clients recover by REPLAY);
+  * recovery (§6.6, ch. 11/29): timeout -> disconnect -> reconnect (possibly
+    to a failover nid) -> replay committed-but-lost transnos in order ->
+    resend unreplied requests; the server answers resends of executed
+    requests from the reply cache keyed (client_uuid, xid).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import defaultdict
+from typing import Any, Callable, Optional
+
+from repro.core import portals as P
+from repro.core.sim import Simulator
+
+# --------------------------------------------------------------- portals
+# Static portal index assignment (paper §4.5.1).
+OSC_REPLY_PORTAL = 4
+OSC_BULK_PORTAL = 5
+OST_REQUEST_PORTAL = 6
+OST_BULK_PORTAL = 8
+MDC_REPLY_PORTAL = 10
+MDS_REQUEST_PORTAL = 12
+MDS_BULK_PORTAL = 13
+LDLM_CB_REQUEST_PORTAL = 15   # server -> client ASTs
+LDLM_CB_REPLY_PORTAL = 16
+LDLM_REQUEST_PORTAL = 17
+LDLM_REPLY_PORTAL = 18
+PING_PORTAL = 23
+
+REQUEST_PORTALS = {"ost": OST_REQUEST_PORTAL, "mds": MDS_REQUEST_PORTAL,
+                   "ldlm": LDLM_REQUEST_PORTAL, "ping": PING_PORTAL,
+                   "ldlm_cb": LDLM_CB_REQUEST_PORTAL}
+REPLY_PORTALS = {"ost": OSC_REPLY_PORTAL, "mds": MDC_REPLY_PORTAL,
+                 "ldlm": LDLM_REPLY_PORTAL, "ping": OSC_REPLY_PORTAL,
+                 "ldlm_cb": LDLM_CB_REPLY_PORTAL}
+
+DEFAULT_TIMEOUT = 1.0      # virtual seconds ("obd_timeout")
+
+
+def wire_size(obj: Any) -> int:
+    """Rough on-the-wire size of a request/reply payload."""
+    if obj is None:
+        return 0
+    if isinstance(obj, (bytes, bytearray, memoryview)):
+        return len(obj)
+    if isinstance(obj, str):
+        return len(obj)
+    if isinstance(obj, (int, float, bool)):
+        return 8
+    if isinstance(obj, dict):
+        return 16 + sum(wire_size(k) + wire_size(v) for k, v in obj.items())
+    if isinstance(obj, (list, tuple, set)):
+        return 16 + sum(wire_size(v) for v in obj)
+    if dataclasses.is_dataclass(obj):
+        return 16 + sum(wire_size(getattr(obj, f.name))
+                        for f in dataclasses.fields(obj))
+    return 32
+
+
+# --------------------------------------------------------------- messages
+
+@dataclasses.dataclass
+class Request:
+    opcode: str
+    body: dict
+    xid: int = 0
+    client_uuid: str = ""
+    boot_count: int = 0          # client boot count (epoch)
+    conn_generation: int = 0
+    replay: bool = False
+    bulk_nbytes: int = 0         # niobuf vector total (timing)
+    transno: int = 0             # assigned by server on updates
+
+
+@dataclasses.dataclass
+class Reply:
+    status: int = 0              # 0 ok, else -errno
+    data: Any = None
+    transno: int = 0
+    last_committed: int = 0
+    bulk: Any = None             # payload moved on the bulk portal
+    bulk_nbytes: int = 0
+
+
+class RpcError(Exception):
+    def __init__(self, status: int, msg: str = ""):
+        super().__init__(f"rpc error {status} {msg}")
+        self.status = status
+
+
+class TimeoutError_(Exception):
+    pass
+
+
+# ----------------------------------------------------------------- export
+
+@dataclasses.dataclass
+class Export:
+    """Server-resident per-client state (§4.6.5). `last_rcvd` slot + reply
+    cache survive server restart (they are journalled with the transaction
+    they belong to — we keep the committed prefix only)."""
+    client_uuid: str
+    client_nid: str
+    conn_generation: int = 1
+    boot_count: int = 0
+    last_xid: int = 0
+    # committed reply cache: xid -> Reply (persistent)
+    reply_cache: dict = dataclasses.field(default_factory=dict)
+    # uncommitted portion (lost on crash)
+    volatile_replies: dict = dataclasses.field(default_factory=dict)
+    data: dict = dataclasses.field(default_factory=dict)  # per-svc (opens..)
+
+
+# ----------------------------------------------------------------- target
+
+class Target:
+    """A service target: handler table + transaction/undo machinery.
+
+    Subclasses (OST, MDS, DLM namespace holder) register ops in self.ops and
+    call `self.txn(undo_fn)` inside update handlers.
+    """
+
+    svc_kind = "ost"             # request portal selector
+
+    def __init__(self, uuid: str, node: "Node"):
+        self.uuid = uuid
+        self.node = node
+        self.sim = node.sim
+        self.ops: dict[str, Callable] = {}
+        self.exports: dict[str, Export] = {}
+        self.transno = 0
+        self.committed_transno = 0
+        self.undo_log: list[tuple[int, Callable]] = []
+        self.commit_interval = 64          # ops between lazy commits
+        self._ops_since_commit = 0
+        self.boot_count = 1
+        self.recovering = False
+        self.recovery_deadline = 0.0
+        self.commit_callbacks: list[Callable[[int], None]] = []
+        self.evicted: set = set()
+        self.ops["connect"] = self.op_connect
+        self.ops["disconnect"] = self.op_disconnect
+        self.ops["ping"] = self.op_ping
+        node.register_target(self)
+
+    # ------------------------------------------------------------- wiring
+    def export_for(self, client_uuid: str, client_nid: str) -> Export:
+        exp = self.exports.get(client_uuid)
+        if exp is None:
+            exp = Export(client_uuid, client_nid)
+            self.exports[client_uuid] = exp
+        return exp
+
+    # -------------------------------------------------------------- txns
+    def txn(self, undo: Callable[[], None]) -> int:
+        """Open+record a transaction; returns its transno."""
+        self.transno += 1
+        self.undo_log.append((self.transno, undo))
+        self._ops_since_commit += 1
+        if self._ops_since_commit >= self.commit_interval:
+            self.commit()
+        return self.transno
+
+    def commit(self):
+        """Flush journal: everything up to `transno` becomes persistent."""
+        self.committed_transno = self.transno
+        self.undo_log.clear()
+        self._ops_since_commit = 0
+        for exp in self.exports.values():
+            exp.reply_cache.update(exp.volatile_replies)
+            exp.volatile_replies.clear()
+            # bound the cache: a client only ever resends its last window
+            if len(exp.reply_cache) > 512:
+                for k in sorted(exp.reply_cache)[:-256]:
+                    del exp.reply_cache[k]
+        for cb in self.commit_callbacks:
+            cb(self.committed_transno)
+        self.sim.stats.count(f"{self.uuid}.commit")
+
+    def crash(self):
+        """Lose uncommitted state: run undo records in reverse (§6.7.6.3
+        'metadata undo log records')."""
+        for transno, undo in reversed(self.undo_log):
+            undo()
+        self.transno = self.committed_transno
+        self.undo_log.clear()
+        self._ops_since_commit = 0
+        for exp in self.exports.values():
+            exp.volatile_replies.clear()
+
+    def restart(self):
+        self.boot_count += 1
+        # all live connections died with the node: clients must reconnect
+        # (stale-generation requests bounce with -108 below)
+        for exp in self.exports.values():
+            exp.conn_generation += 1
+        if self.exports:
+            self.recovering = True
+            self._recov_pending = set(self.exports)
+            self.recovery_deadline = self.sim.now + 2 * DEFAULT_TIMEOUT
+        self.on_restart()
+
+    def on_restart(self):
+        pass
+
+    def finish_recovery(self):
+        self.recovering = False
+
+    # ------------------------------------------------------------ handler
+    def handle(self, req: Request) -> Reply:
+        st = self.sim.stats
+        st.count(f"rpc.{self.svc_kind}.{req.opcode}")
+        exp = self.export_for(req.client_uuid, "")
+        if req.client_uuid in self.evicted and req.opcode != "connect":
+            return Reply(status=-107)      # ENOTCONN: evicted
+        if (req.opcode not in ("connect", "disconnect", "ping")
+                and not req.replay
+                and req.conn_generation != exp.conn_generation):
+            # connection died with a server reboot: force reconnect+replay
+            return Reply(status=-108)
+        # resend of an already-executed request? answer from reply cache.
+        cached = exp.reply_cache.get(req.xid, exp.volatile_replies.get(req.xid))
+        if cached is not None and not req.replay:
+            st.count("rpc.reply_cache_hit")
+            return cached
+        if self.recovering and self.sim.now >= self.recovery_deadline:
+            # window expired: evict clients that never came back (§29.3)
+            for uuid in getattr(self, "_recov_pending", set()):
+                self.evicted.add(uuid)
+                self.sim.stats.count("rpc.recovery_eviction")
+            self.finish_recovery()
+        if self.recovering and req.opcode not in (
+                "connect", "replay", "disconnect") and not req.replay:
+            # new requests are gated until the recovery window closes
+            return Reply(status=-11)       # EAGAIN
+        fn = self.ops.get(req.opcode)
+        if fn is None:
+            return Reply(status=-38)       # ENOSYS
+        try:
+            reply = fn(req)
+        except RpcError as e:
+            reply = Reply(status=e.status)
+        reply.last_committed = self.committed_transno
+        if reply.transno:                   # update op: cache for resends
+            exp.volatile_replies[req.xid] = reply
+            if reply.transno <= self.committed_transno:
+                exp.reply_cache[req.xid] = reply
+        exp.last_xid = max(exp.last_xid, req.xid)
+        return reply
+
+    # ------------------------------------------------- std ops: connect
+    def op_connect(self, req: Request) -> Reply:
+        exp = self.export_for(req.client_uuid, req.body.get("nid", ""))
+        exp.conn_generation += 1
+        exp.boot_count = req.boot_count
+        self.evicted.discard(req.client_uuid)
+        if self.recovering:
+            pending = getattr(self, "_recov_pending", set())
+            pending.discard(req.client_uuid)
+            if not pending or self.sim.now >= self.recovery_deadline:
+                # every known client is back (or window expired): open up.
+                # Non-returning clients would be evicted here (§29.3).
+                self.finish_recovery()
+        return Reply(data={
+            "boot_count": self.boot_count,
+            "conn_generation": exp.conn_generation,
+            "last_committed": self.committed_transno,
+            "recovering": self.recovering,
+        })
+
+    def op_disconnect(self, req: Request) -> Reply:
+        self.exports.pop(req.client_uuid, None)
+        return Reply()
+
+    def op_ping(self, req: Request) -> Reply:
+        return Reply(data={"boot_count": self.boot_count})
+
+
+# ------------------------------------------------------------------- node
+
+class Node:
+    """One machine: an NI + the targets and clients living on it."""
+
+    def __init__(self, name: str, net: str, cluster: "ClusterBase"):
+        self.name = name
+        self.nid = f"{net}:{name}"
+        self.cluster = cluster
+        self.sim = cluster.sim
+        self.ni = P.NI(self.nid, net, cluster.network)
+        self.targets: dict[str, Target] = {}
+        self.boot_count = 1
+        cluster.nodes[self.name] = self
+        self._post_request_buffers()
+
+    def _post_request_buffers(self):
+        """Pre-posted request buffers w/ receiver-managed offsets (§4.5.5).
+        One MD per request portal; the EQ handler dispatches to targets."""
+        for portal in set(REQUEST_PORTALS.values()) | {
+                LDLM_CB_REQUEST_PORTAL}:
+            eq = P.EventQueue(handler=self._request_in)
+            md = P.MemoryDescriptor(length=1 << 30, threshold=-1,
+                                    manage_remote_offset=True, eq=eq,
+                                    user_ptr=portal)
+            self.ni.me_attach(portal, 0, P.IGNORE_ALL, md)
+
+    # --------------------------------------------------------- server in
+    def _request_in(self, ev: P.Event):
+        # service time starts at request arrival (the reply transmit below
+        # then departs no earlier than this).
+        self.sim.clock.advance_to(ev.arrival_time)
+        req, reply_nid, reply_portal = ev.data
+        target_uuid = req.body.get("_target", "")
+        target = self.targets.get(target_uuid)
+        if target is None:
+            reply = Reply(status=-19)      # ENODEV
+        else:
+            reply = target.handle(req)
+        # reply PUT matched on xid (paper §4.5.2)
+        nbytes = wire_size(reply) + reply.bulk_nbytes
+        self.ni.put(reply_nid, reply_portal, req.xid, reply, nbytes)
+
+    def register_target(self, t: Target):
+        self.targets[t.uuid] = t
+
+    # ----------------------------------------------------------- up/down
+    def fail(self):
+        """Power the node off: drop traffic + lose uncommitted state of
+        the targets THIS node serves (standby registrations of targets
+        primary-served elsewhere keep their journals — shared storage).
+        A served target immediately "restarts" (possibly on its standby
+        node): new boot count -> clients detect the reboot and replay."""
+        self.sim.faults.down_nids.add(self.nid)
+        for t in self.targets.values():
+            if t.node is self:
+                t.crash()
+                t.restart()
+
+    def restart(self):
+        self.sim.faults.down_nids.discard(self.nid)
+        self.boot_count += 1
+
+
+class ClusterBase:
+    """Holds the simulator + network; subclassed by core.cluster."""
+
+    def __init__(self, seed: int = 0):
+        self.sim = Simulator(seed)
+        self.network = P.PortalsNetwork(self.sim)
+        self.nodes: dict[str, Node] = {}
+
+
+# ----------------------------------------------------------------- import
+
+class Import:
+    """Client-side stub for one target (§4.6.8) with recovery.
+
+    `nids` is the failover list (primary first). Requests flow through
+    `self.request()`; on timeout the import disconnects, pings/reconnects
+    (walking the failover ring), replays and resends, then retries.
+    """
+
+    def __init__(self, client: "RpcClient", target_uuid: str,
+                 nids: list[str], svc_kind: str):
+        self.client = client
+        self.target_uuid = target_uuid
+        self.nids = list(nids)
+        self.active_nid = nids[0]
+        self.svc_kind = svc_kind
+        self.sim = client.sim
+        self.state = "NEW"                 # NEW|FULL|DISCONN|REPLAY
+        self.server_boot_count = 0
+        self.last_committed = 0
+        self.replay_list: list[Request] = []   # sent, uncommitted updates
+        self.inflight: Request | None = None
+        self.timeout = DEFAULT_TIMEOUT
+        self.max_reconnects = 8
+        self.generation = 0
+        self.connect_data: dict = {}
+
+    # ------------------------------------------------------------ wiring
+    @property
+    def request_portal(self) -> int:
+        return REQUEST_PORTALS[self.svc_kind]
+
+    @property
+    def reply_portal(self) -> int:
+        return REPLY_PORTALS[self.svc_kind]
+
+    # --------------------------------------------------------------- rpc
+    def _send_once(self, req: Request) -> Reply | None:
+        """One wire attempt. None = timeout/drop."""
+        eq = P.EventQueue()
+        md = P.MemoryDescriptor(length=1 << 22, threshold=1, eq=eq)
+        self.client.ni.me_attach(self.reply_portal, req.xid, 0, md)
+        nbytes = wire_size(req) + req.bulk_nbytes
+        t_arr = self.client.ni.put(self.active_nid, self.request_portal,
+                                   req.xid, (req, self.client.nid,
+                                             self.reply_portal), nbytes)
+        if t_arr == float("inf") or not md.buffer:
+            # request or reply lost: wait out the timeout (§4.4.2.3)
+            self.sim.clock.advance(self.timeout)
+            md.unlinked = True             # unlink ME/MD after timeout
+            self.sim.stats.count("rpc.timeout")
+            return None
+        ev = eq.pop()
+        _, reply = md.buffer[0]
+        self.sim.clock.advance_to(ev.arrival_time)
+        return reply
+
+    def request(self, opcode: str, body: dict, *, bulk_nbytes: int = 0,
+                no_recover: bool = False, fixup=None) -> Reply:
+        """Send a request with full recovery semantics; raises RpcError on
+        application errors, TimeoutError_ if the target stays unreachable."""
+        if self.state in ("NEW", "DISCONN"):
+            self._connect_cycle()
+        req = Request(opcode=opcode, body=dict(body, _target=self.target_uuid),
+                      xid=self.client.next_xid(), client_uuid=self.client.uuid,
+                      boot_count=self.client.boot_count,
+                      conn_generation=self.generation,
+                      bulk_nbytes=bulk_nbytes)
+        for attempt in range(self.max_reconnects):
+            reply = self._send_once(req)
+            if reply is None:
+                if no_recover:
+                    raise TimeoutError_(f"{self.target_uuid} unreachable")
+                self.state = "DISCONN"
+                self._connect_cycle()      # may replay + walk failover ring
+                continue
+            if reply.status == -11:        # EAGAIN: server in recovery
+                self.sim.clock.advance(0.5)
+                continue
+            if reply.status == -108:       # stale connection: server reboot
+                self.state = "DISCONN"
+                self._connect_cycle()
+                req.body["_target"] = self.target_uuid
+                req.conn_generation = self.generation
+                continue
+            if reply.status == -107:       # evicted: state is gone — drop
+                # replay queue, reconnect fresh, retry (client-visible data
+                # loss is the eviction's documented cost)
+                self.sim.stats.count("rpc.evicted_reconnect")
+                self.replay_list.clear()
+                self.state = "DISCONN"
+                self.server_boot_count = 0
+                self._connect_cycle()
+                req.conn_generation = self.generation
+                continue
+            self._note_reply(req, reply)
+            if reply.status:
+                raise RpcError(reply.status, opcode)
+            if fixup is not None:
+                # let the caller pin server-assigned ids (oid/fid) into the
+                # retained request so REPLAY recreates identical objects
+                # (the paper's create-with-requested-id, §5.2.3)
+                fixup(req, reply)
+            return reply
+        raise TimeoutError_(f"{self.target_uuid} unreachable")
+
+    def _note_reply(self, req: Request, reply: Reply):
+        self.last_committed = max(self.last_committed, reply.last_committed)
+        if reply.transno:
+            req.transno = reply.transno
+            self.replay_list.append(req)
+        # prune replay list: server committed these (§29: last_committed)
+        self.replay_list = [r for r in self.replay_list
+                            if r.transno > self.last_committed]
+
+    # ---------------------------------------------------------- recovery
+    def _connect_cycle(self):
+        """Reconnect, walking the failover nid ring; on a server reboot,
+        replay committed-but-lost transactions then mark FULL."""
+        last_err = None
+        for attempt in range(self.max_reconnects):
+            nid = self.nids[attempt % len(self.nids)]
+            self.active_nid = nid
+            creq = Request(opcode="connect",
+                           body={"_target": self.target_uuid,
+                                 "nid": self.client.nid},
+                           xid=self.client.next_xid(),
+                           client_uuid=self.client.uuid,
+                           boot_count=self.client.boot_count)
+            reply = self._send_once(creq)
+            if reply is None or reply.status:
+                last_err = reply
+                continue
+            self.generation = reply.data["conn_generation"]
+            self.connect_data = dict(reply.data)
+            new_boot = reply.data["boot_count"]
+            rebooted = (self.server_boot_count
+                        and new_boot != self.server_boot_count)
+            self.server_boot_count = new_boot
+            if rebooted:
+                self.sim.stats.count("rpc.server_reboot_detected")
+                self._replay(reply.data["last_committed"])
+            self.state = "FULL"
+            return
+        self.state = "DISCONN"
+        raise TimeoutError_(
+            f"connect {self.target_uuid} failed: {last_err}")
+
+    def _replay(self, server_last_committed: int):
+        """Replay transactions the server lost, oldest first (§29.2)."""
+        self.state = "REPLAY"
+        todo = sorted((r for r in self.replay_list
+                       if r.transno > server_last_committed),
+                      key=lambda r: r.transno)
+        self.replay_list = []
+        for req in todo:
+            req.replay = True
+            req.conn_generation = self.generation
+            self.sim.stats.count("rpc.replay")
+            reply = self._send_once(req)
+            if reply is None:
+                # server vanished mid-replay: keep for the next cycle
+                self.replay_list.append(req)
+            elif reply.transno:
+                req.transno = reply.transno
+                self.replay_list.append(req)
+        self.state = "FULL"
+
+    def ping(self) -> bool:
+        try:
+            self.request("ping", {}, no_recover=True)
+            return True
+        except (TimeoutError_, RpcError):
+            return False
+
+
+class RpcClient:
+    """Client networking context: uuid + NI + xid sequence (§4.6.7)."""
+
+    _uuid_seq = itertools.count()
+
+    def __init__(self, node: Node):
+        self.node = node
+        self.ni = node.ni
+        self.nid = node.nid
+        self.network = node.cluster.network
+        self.sim = node.sim
+        self.uuid = f"client-{node.name}-{next(self._uuid_seq)}"
+        self.boot_count = 1
+        self._xid = itertools.count(1)
+        self.imports: dict[str, Import] = {}
+
+    def next_xid(self) -> int:
+        # unique per client; never reused, even across recovery (§4.4.2.3)
+        return next(self._xid)
+
+    def import_target(self, target_uuid: str, nids: list[str],
+                      svc_kind: str) -> Import:
+        imp = Import(self, target_uuid, nids, svc_kind)
+        self.imports[target_uuid] = imp
+        return imp

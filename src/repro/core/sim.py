@@ -1,0 +1,133 @@
+"""Simulation substrate: virtual clock, link model, fault injection, stats.
+
+The whole Lustre cluster runs in-process and synchronously (handlers are
+plain Python calls), while *time* is modelled analytically: every message
+occupies its (src, dst) link for latency + bytes/bandwidth, and callers that
+wait for N parallel completions advance the clock to max(completion times).
+This gives deterministic, reproducible performance numbers for the
+benchmarks (striping scaling, COBD read scaling, recovery time) without
+threads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from collections import defaultdict
+
+
+class Clock:
+    """Virtual time in seconds."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def advance_to(self, t: float) -> None:
+        if t > self.now:
+            self.now = t
+
+    def advance(self, dt: float) -> None:
+        self.now += dt
+
+
+@dataclasses.dataclass
+class LinkSpec:
+    """One network type (NAL). Default numbers ~ GigE (socknal)."""
+    latency: float = 50e-6          # per-message latency (s)
+    bandwidth: float = 1e9          # bytes/s
+    small_msg_cost: float = 5e-6    # per-message CPU/serialisation cost
+
+
+# NAL presets from the paper's world: TCP (socknal), Quadrics Elan (qswnal).
+NALS = {
+    "socknal": LinkSpec(latency=50e-6, bandwidth=110e6),
+    "qswnal": LinkSpec(latency=5e-6, bandwidth=340e6),
+    "ibnal": LinkSpec(latency=7e-6, bandwidth=900e6),
+    "lonal": LinkSpec(latency=1e-6, bandwidth=4e9),     # loopback
+}
+
+
+class FaultPlan:
+    """Mutable fault-injection state consulted on every delivery."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+        self.down_nids: set = set()          # dead nodes (drop all traffic)
+        self.drop_prob: dict = {}            # (src,dst) or "*" -> prob
+        self.partitions: set = set()         # frozenset({a, b}) cut pairs
+        self.drop_next: defaultdict = defaultdict(int)  # nid -> count
+
+    def should_drop(self, src, dst) -> bool:
+        if src in self.down_nids or dst in self.down_nids:
+            return True
+        if frozenset((src, dst)) in self.partitions:
+            return True
+        if self.drop_next[dst] > 0:
+            self.drop_next[dst] -= 1
+            return True
+        p = self.drop_prob.get((src, dst), self.drop_prob.get("*", 0.0))
+        return p > 0 and self.rng.random() < p
+
+
+class Stats:
+    """Cluster-wide counters; benchmarks read these."""
+
+    def __init__(self):
+        self.counters = defaultdict(int)
+        self.bytes = defaultdict(int)
+
+    def count(self, key: str, n: int = 1):
+        self.counters[key] += n
+
+    def add_bytes(self, key: str, n: int):
+        self.bytes[key] += n
+
+    def snapshot(self) -> dict:
+        return {"counters": dict(self.counters), "bytes": dict(self.bytes)}
+
+    def reset(self):
+        self.counters.clear()
+        self.bytes.clear()
+
+
+class Simulator:
+    """Shared context handed to every node: clock + faults + stats."""
+
+    def __init__(self, seed: int = 0):
+        self.clock = Clock()
+        self.faults = FaultPlan(seed)
+        self.stats = Stats()
+
+    @property
+    def now(self) -> float:
+        return self.clock.now
+
+    def race(self, thunks):
+        """Hedged execution: run all thunks from the same virtual instant
+        and advance the clock to the FIRST completion (straggler
+        mitigation — the loser's link stays busy, as in real hedging).
+        Returns (winner_index, winner_result)."""
+        t0 = self.clock.now
+        results, ends = [], []
+        for th in thunks:
+            self.clock.now = t0
+            results.append(th())
+            ends.append(self.clock.now)
+        best = min(range(len(ends)), key=lambda i: ends[i])
+        self.clock.now = ends[best]
+        self.stats.count("sim.hedged_race")
+        return best, results[best]
+
+    def parallel(self, thunks):
+        """Run thunks as concurrent activities starting at the same virtual
+        instant; the clock ends at the max completion time. Per-link busy
+        times still serialise messages that share a link, so e.g. N stripe
+        writes to N different OSTs overlap while N writes to ONE OST queue.
+        """
+        t0 = self.clock.now
+        ends, results = [], []
+        for th in thunks:
+            self.clock.now = t0
+            results.append(th())
+            ends.append(self.clock.now)
+        self.clock.now = max(ends) if ends else t0
+        return results

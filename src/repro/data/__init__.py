@@ -1,0 +1,2 @@
+"""Sharded token data pipeline."""
+from repro.data.pipeline import TokenDataset, TokenPipeline  # noqa: F401

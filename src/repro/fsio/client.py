@@ -1,0 +1,342 @@
+"""LustreClient: the client filesystem (paper ch. 9, 28 — "Lustre Lite").
+
+POSIX-ish API over the LMV (metadata) + LOV (data) stacks:
+  * path resolution with a *dentry cache* guarded by DLM locks — an entry is
+    valid exactly while its PR lock is held; server-side updates revoke via
+    blocking ASTs (ch. 28.4); negative entries are cached too (§6.2.1);
+  * `open(path, "cw")` is ONE intent RPC doing lookup+create+open (§6.4.3);
+    the client then creates the stripe objects and writes the LOV EA back
+    (the MDS returned the new inode under a lock so only this client
+    creates objects);
+  * file I/O through LOV striping under extent locks, write-back cached
+    with grants (ch. 10, 28.5);
+  * size/mtime: while a file is open for write the OSTs own mtime/size;
+    `close` ships them to the MDS (§6.9.1); `stat` consults the OSTs when
+    the MDS flag says so;
+  * optional metadata write-back-cache mode for create-heavy directories
+    (ch. 17).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+from repro.core import lov as lov_mod
+from repro.core import mdc as mdc_mod
+from repro.core import mds as mds_mod
+from repro.core import ptlrpc as R
+from repro.core.cluster import LustreCluster
+
+ROOT = mds_mod.ROOT_FID
+
+
+class FsError(Exception):
+    def __init__(self, errno: int, msg: str = ""):
+        super().__init__(f"errno {errno}: {msg}")
+        self.errno = errno
+
+
+@dataclasses.dataclass
+class FileHandle:
+    fid: tuple
+    lsm: Optional[lov_mod.StripeMd]
+    open_handle: int
+    flags: str
+    pos: int = 0
+    max_written: int = 0
+    mtime: float = 0.0
+
+
+@dataclasses.dataclass
+class Dentry:
+    fid: tuple | None            # None = negative entry
+    attrs: dict | None
+    lock_handle: int | None      # validity = lock still held
+
+
+class LustreClient:
+    def __init__(self, cluster: LustreCluster, node_idx: int = 0,
+                 default_stripe_count: int = 0,
+                 default_stripe_size: int = 1 << 20):
+        self.cluster = cluster
+        self.rpc = cluster.make_client_rpc(node_idx)
+        self.lmv = cluster.make_lmv(self.rpc)
+        self.lov = cluster.make_lov(self.rpc)
+        self.sim = cluster.sim
+        self.default_stripe_count = default_stripe_count or len(
+            cluster.ost_targets)
+        self.default_stripe_size = default_stripe_size
+        self.dcache: dict[tuple, Dentry] = {}     # (parent, name) -> Dentry
+        self._fh = itertools.count(1)
+        self.handles: dict[int, FileHandle] = {}
+        self.wbc: mdc_mod.WbcCache | None = None
+
+    # ------------------------------------------------------------- mount
+    def mount(self) -> "LustreClient":
+        self.lmv.getattr(ROOT)
+        return self
+
+    # ------------------------------------------------------ path walking
+    @staticmethod
+    def _parts(path: str) -> list[str]:
+        return [p for p in path.split("/") if p]
+
+    def _dentry_valid(self, key, mdc) -> bool:
+        d = self.dcache.get(key)
+        if d is None:
+            return False
+        if d.lock_handle is None:
+            return False
+        return d.lock_handle in mdc.locks.locks
+
+    def _lookup(self, parent: tuple, name: str) -> Dentry:
+        key = (tuple(parent), name)
+        mdc = self.lmv.mdc_for_fid(parent)
+        if self._dentry_valid(key, mdc):
+            self.sim.stats.count("fs.dcache_hit")
+            return self.dcache[key]
+        lk, data = self.lmv.getattr_lock(parent, name, want_ea=True)
+        if data.get("status", 0) == -2:
+            d = Dentry(None, None, lk.handle if lk else None)
+        elif data.get("status", 0) != 0:
+            raise FsError(data["status"], name)
+        else:
+            d = Dentry(tuple(data["attrs"]["fid"]), dict(data["attrs"]),
+                       lk.handle if lk else None)
+            if "ea" in data:
+                d.attrs["_ea"] = data["ea"]
+        self.dcache[key] = d
+        return d
+
+    def resolve(self, path: str, *, follow: bool = True,
+                _depth: int = 0) -> tuple:
+        if _depth > 8:
+            raise FsError(-40, "ELOOP")
+        fid = ROOT
+        parts = self._parts(path)
+        for i, name in enumerate(parts):
+            if self.wbc and self.wbc.active:
+                sfid = self.wbc.lookup(fid, name)
+                if sfid is not None:
+                    fid = sfid
+                    continue
+            d = self._lookup(fid, name)
+            if d.fid is None:
+                raise FsError(-2, path)
+            last = i == len(parts) - 1
+            if d.attrs and d.attrs.get("type") == "symlink" and (
+                    follow or not last):
+                data = self.lmv.getattr(d.fid)
+                target = data.get("symlink", "")
+                rest = "/".join(parts[i + 1:])
+                return self.resolve(target + "/" + rest if rest else target,
+                                    follow=follow, _depth=_depth + 1)
+            fid = d.fid
+        return tuple(fid)
+
+    def _resolve_parent(self, path: str) -> tuple[tuple, str]:
+        parts = self._parts(path)
+        if not parts:
+            raise FsError(-22, path)
+        parent = self.resolve("/".join(parts[:-1])) if parts[:-1] else ROOT
+        return parent, parts[-1]
+
+    def _invalidate(self, parent: tuple, name: str):
+        self.dcache.pop((tuple(parent), name), None)
+
+    # ------------------------------------------------------------- files
+    def creat(self, path: str, *, stripe_count: int = 0,
+              stripe_size: int = 0, stripe_offset: int = -1,
+              mode: int = 0o644) -> FileHandle:
+        """lstripe-style create with explicit striping (ch. 32.1)."""
+        return self.open(path, "cwx", stripe_count=stripe_count,
+                         stripe_size=stripe_size,
+                         stripe_offset=stripe_offset, mode=mode)
+
+    def open(self, path: str, flags: str = "r", *, stripe_count: int = 0,
+             stripe_size: int = 0, stripe_offset: int = -1,
+             mode: int = 0o644) -> FileHandle:
+        """flags: r read, w write, c create, x exclusive."""
+        parent, name = self._resolve_parent(path)
+        lk, data = self.lmv.open(parent, name, flags, mode)
+        st = data.get("status", 0)
+        if st:
+            raise FsError(st, path)
+        self._invalidate(parent, name)
+        attrs = data["attrs"]
+        fid = tuple(attrs["fid"])
+        ea = data.get("ea", {})
+        if data.get("created"):
+            # client creates the data objects + writes the EA (§6.4.3)
+            lsm = self.lov.create(
+                stripe_count=stripe_count or self.default_stripe_count,
+                stripe_size=stripe_size or self.default_stripe_size,
+                stripe_offset=stripe_offset)
+            self.lmv.mdc_for_fid(fid).reint(
+                {"type": "setattr", "fid": fid, "ea": {"lov": lsm.to_ea()}})
+        elif "lov" in ea:
+            lsm = lov_mod.StripeMd.from_ea(ea["lov"])
+        else:
+            lsm = None
+        fh = FileHandle(fid, lsm, data.get("open_handle", 0), flags)
+        self.handles[id(fh)] = fh
+        return fh
+
+    def write(self, fh: FileHandle, data: bytes, offset: int | None = None,
+              gid: int = 0) -> int:
+        if fh.lsm is None:
+            raise FsError(-22, "no stripe md")
+        off = fh.pos if offset is None else offset
+        n = self.lov.write(fh.lsm, off, data, gid=gid)
+        fh.pos = off + n
+        fh.max_written = max(fh.max_written, off + n)
+        fh.mtime = self.sim.now
+        self.sim.stats.add_bytes("fs.write", n)
+        return n
+
+    def read(self, fh: FileHandle, length: int,
+             offset: int | None = None) -> bytes:
+        if fh.lsm is None:
+            raise FsError(-22, "no stripe md")
+        off = fh.pos if offset is None else offset
+        # PR-locked size query: flushes any writer's write-back cache
+        # before we trust the OST sizes (§6.2.3 ordering)
+        size = self.lov.getattr_locked(fh.lsm)["size"]
+        length = max(0, min(length, size - off))
+        if length == 0:
+            return b""
+        out = self.lov.read(fh.lsm, off, length)
+        fh.pos = off + len(out)
+        self.sim.stats.add_bytes("fs.read", len(out))
+        return out
+
+    def fsync(self, fh: FileHandle):
+        if fh.lsm is not None:
+            self.sim.parallel([
+                (lambda u=u: self.lov.by_uuid[u].flush())
+                for u in {o["ost"] for o in fh.lsm.objects}])
+
+    def close(self, fh: FileHandle):
+        """Flush + ship size/mtime to the MDS (§6.9.1: the OSTs owned them
+        while the file was open for write)."""
+        self.fsync(fh)
+        size = mtime = None
+        if "w" in fh.flags or "c" in fh.flags:
+            if fh.lsm is not None:
+                a = self.lov.getattr(fh.lsm)
+                size, mtime = a["size"], max(a["mtime"], fh.mtime)
+        self.lmv.close(fh.fid, fh.open_handle, size, mtime)
+        self.handles.pop(id(fh), None)
+
+    # ------------------------------------------------------------- dirs
+    def mkdir(self, path: str, mode: int = 0o755) -> tuple:
+        parent, name = self._resolve_parent(path)
+        if self.wbc and self.wbc.active and self.wbc.in_subtree(parent):
+            return self.wbc.create(parent, name, "dir", mode)
+        rep = self.lmv.reint({"type": "create", "parent": parent,
+                              "name": name, "ftype": "dir", "mode": mode})
+        self._invalidate(parent, name)
+        return tuple(rep.data["fid"])
+
+    def mkdir_p(self, path: str) -> tuple:
+        fid = ROOT
+        for i, name in enumerate(self._parts(path)):
+            try:
+                d = self._lookup(fid, name)
+                if d.fid is None:
+                    raise FsError(-2, name)
+                fid = d.fid
+            except FsError:
+                fid = self.mkdir("/".join(self._parts(path)[:i + 1]))
+        return tuple(fid)
+
+    def readdir(self, path: str) -> dict:
+        fid = self.resolve(path)
+        return {k: tuple(v)
+                for k, v in self.lmv.readdir(fid)["entries"].items()}
+
+    def symlink(self, target: str, path: str):
+        parent, name = self._resolve_parent(path)
+        self.lmv.reint({"type": "create", "parent": parent, "name": name,
+                        "ftype": "symlink", "target": target})
+        self._invalidate(parent, name)
+
+    def link(self, existing: str, path: str):
+        fid = self.resolve(existing)
+        parent, name = self._resolve_parent(path)
+        self.lmv.reint({"type": "link", "parent": parent, "name": name,
+                        "fid": fid})
+        self._invalidate(parent, name)
+
+    def rename(self, old: str, new: str):
+        sp, sn = self._resolve_parent(old)
+        dp, dn = self._resolve_parent(new)
+        self.lmv.reint({"type": "rename", "src": sp, "src_name": sn,
+                        "dst": dp, "dst_name": dn})
+        self._invalidate(sp, sn)
+        self._invalidate(dp, dn)
+
+    def unlink(self, path: str):
+        parent, name = self._resolve_parent(path)
+        rep = self.lmv.reint({"type": "unlink", "parent": parent,
+                              "name": name})
+        self._invalidate(parent, name)
+        # last link: WE destroy the data objects, shipping llog cookies;
+        # OSTs cancel the MDS records once their destroys commit (ch. 8.4)
+        ea = (rep.data or {}).get("ea") or {}
+        if "lov" in ea:
+            lsm = lov_mod.StripeMd.from_ea(ea["lov"])
+            self.lov.destroy(lsm, rep.data.get("cookies"))
+
+    rmdir = unlink
+
+    # ------------------------------------------------------------- stat
+    def stat(self, path: str) -> dict:
+        fid = self.resolve(path)
+        d = self.lmv.getattr(fid, want_ea=True)
+        a = d["attrs"]
+        if a.get("mtime_on_ost") and "lov" in d.get("ea", {}):
+            # size/mtime live on the OSTs while a writer is active (§6.9.1)
+            lsm = lov_mod.StripeMd.from_ea(d["ea"]["lov"])
+            oa = self.lov.getattr(lsm)
+            a = dict(a, size=oa["size"], mtime=max(a["mtime"], oa["mtime"]))
+        if "lov" in d.get("ea", {}):
+            a["stripe_count"] = d["ea"]["lov"]["stripe_count"]
+            a["stripe_size"] = d["ea"]["lov"]["stripe_size"]
+        return a
+
+    def exists(self, path: str) -> bool:
+        try:
+            self.resolve(path)
+            return True
+        except FsError:
+            return False
+
+    def statfs(self) -> dict:
+        mds = self.lmv.statfs()
+        osts = [o.statfs() for o in self.lov.oscs]
+        return {"mds": mds,
+                "capacity": sum(o["capacity"] for o in osts),
+                "free": sum(o["free"] for o in osts),
+                "objects": sum(o["objects"] for o in osts)}
+
+    # ----------------------------------------------------- wbc lifecycle
+    def enable_wbc(self, path: str) -> bool:
+        """Enter metadata write-back mode for a subtree (ch. 17)."""
+        fid = self.resolve(path)
+        wbc = mdc_mod.WbcCache(self.lmv, fid)
+        if wbc.acquire():
+            self.wbc = wbc
+            return True
+        return False
+
+    def disable_wbc(self):
+        if self.wbc:
+            self.wbc.release()
+            self.wbc = None
+
+    def sync(self):
+        if self.wbc:
+            self.wbc.flush()
+        self.lov.flush()

@@ -1,0 +1,132 @@
+"""Flash attention Pallas TPU kernel (online-softmax, causal, GQA, window).
+
+TPU adaptation notes (DESIGN.md §hardware-adaptation): the GPU algorithm
+tiles for shared memory + warps; here BlockSpecs tile HBM->VMEM and the MXU
+eats (BQ, D) x (D, BK) tiles. Block sizes default to MXU/VREG-aligned
+(128, 128); the kv loop is the innermost grid dim so q/o tiles stay resident
+in VMEM across it ("revisiting" order). Causal blocks fully above the
+diagonal are skipped via `when` predication.
+
+Validated in interpret=True mode against ref.flash_attention_ref (CPU has
+no real Pallas lowering; TPU is the target).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, seq_k: int):
+    """Grid = (BH, nq, nk); one (block_q, d) q-tile vs one (block_k, d)
+    kv-tile per step; running max/sum in VMEM scratch."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q + (seq_k - pl.num_programs(1) * block_q)
+    k_start = ki * block_k
+
+    run = True
+    if causal:
+        # skip fully-masked blocks above the diagonal
+        run = k_start <= q_start + block_q - 1
+    if window > 0:
+        run = jnp.logical_and(
+            run, k_start + block_k > q_start - window + 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)             # (bq, d)
+        k = k_ref[0].astype(jnp.float32)             # (bk, d)
+        v = v_ref[0].astype(jnp.float32)             # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "block_q",
+                              "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q (B,H,Sq,D), k/v (B,Hkv,Sk,D) -> (B,H,Sq,D). GQA folded by
+    repeating kv heads into the BH grid dim (zero-copy via indexing)."""
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(D))
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * Hkv, Sk, D)
+    vf = v.reshape(B * Hkv, Sk, D)
+
+    # flat q index b = batch * H + h  ->  flat kv index batch * Hkv + h // G
+    def kv_map(b, i, j):
+        return ((b // H) * Hkv + (b % H) // G, j, 0)
+
+    grid = (B * H, Sq // block_q, Sk // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          seq_k=Sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), kv_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            # running max, denominator, accumulator — VMEM-resident
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D)

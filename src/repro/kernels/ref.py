@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q (B,H,Sq,D), k/v (B,Hkv,Sk,D); GQA via head grouping.
+
+    Plain softmax attention in f32 — the oracle for the Pallas kernel."""
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) * scale
+    if causal:
+        qp = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        kp = jnp.arange(Sk)[None, :]
+        m = kp <= qp
+        if window > 0:
+            m &= (qp - kp) < window
+        logits = jnp.where(m[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def xor_parity_ref(blocks: jax.Array) -> jax.Array:
+    """blocks (K, N) int32 lanes -> (N,) XOR parity (RAID-5 column)."""
+    out = blocks[0]
+    for i in range(1, blocks.shape[0]):
+        out = jnp.bitwise_xor(out, blocks[i])
+    return out
+
+
+def reconstruct_ref(survivors: jax.Array, parity: jax.Array) -> jax.Array:
+    """Recover one missing block: XOR of survivors and parity."""
+    return jnp.bitwise_xor(xor_parity_ref(survivors), parity)

@@ -1,0 +1,184 @@
+"""RWKV-6 "Finch" — data-dependent decay linear-attention RNN.
+
+Recurrence (per head, Dk x Dv state S):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+Token shift + ddlerp mixing feed r/k/v/g/w projections; decay w_t is
+data-dependent through a small LoRA (d -> 64 -> d).
+
+Train/prefill scan over time carries only the (B,H,Dk,Dv) state; decode is a
+single-step state update — context length never enters the state size, which
+is why the long_500k cell runs for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.shardings import constrain
+
+LORA = 64
+
+
+def param_defs(cfg: ModelConfig):
+    d, V, n = cfg.d_model, cfg.vocab, cfg.n_layers
+    H = d // cfg.rwkv_head_dim
+    Dh = cfg.rwkv_head_dim
+    D = lambda *s, init="normal": L.ParamDef((n, *s), (None,) * (len(s) + 1), init)
+    Dm = lambda *s, lg, init="normal": L.ParamDef((n, *s), (None, *lg), init)
+    att = {
+        "ln": D(d, init="zeros"),
+        "mu": D(5, d, init="zeros"),           # ddlerp base mix for r,k,v,g,w
+        "lora_a": D(d, LORA),                   # decay lora
+        "lora_b": D(LORA, d),
+        "w0": D(d, init="zeros"),
+        "u": D(H, Dh, init="zeros"),            # bonus
+        "wr": Dm(d, d, lg=(None, "model")),
+        "wk": Dm(d, d, lg=(None, "model")),
+        "wv": Dm(d, d, lg=(None, "model")),
+        "wg": Dm(d, d, lg=(None, "model")),
+        "wo": Dm(d, d, lg=("model", None)),
+        "gn": D(d, init="zeros"),               # per-channel group-norm scale
+    }
+    ffn = {
+        "ln": D(d, init="zeros"),
+        "mu": D(2, d, init="zeros"),
+        "wk": Dm(d, cfg.d_ff, lg=(None, "model")),
+        "wv": Dm(cfg.d_ff, d, lg=("model", None)),
+        "wr": Dm(d, d, lg=(None, "model")),
+    }
+    return {
+        "embed": L.ParamDef((V, d), ("model", None), scale=float(np.sqrt(d))),
+        "layers": {"att": att, "ffn": ffn},
+        "final_ln": L.ParamDef((d,), (None,), init="zeros"),
+        "lm_head": L.ParamDef((d, V), (None, "model")),
+    }
+
+
+def _shift(x, x_prev=None):
+    """Token shift: x_{t-1} (zeros/x_prev at t=0). x: (B,S,d)."""
+    if x_prev is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = x_prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _wkv_seq(r, k, v, w, u, state):
+    """r,k,w: (B,S,H,Dk) v: (B,S,H,Dv) u: (H,Dk) state: (B,H,Dk,Dv).
+
+    Returns y: (B,S,H,Dv), final state. Scan over time in f32."""
+    def step(S, t):
+        r_t, k_t, v_t, w_t = t
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,Dk,Dv)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    rs, ks, vs, ws = (jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+                      for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32),
+                             (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def _time_mix(cfg, p, x, x_prev, state, rc):
+    cdt = jnp.dtype(rc.compute_dtype)
+    B, S, d = x.shape
+    H, Dh = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    hs = _shift(h, x_prev)
+    mu = p["mu"].astype(cdt)
+    xr, xk, xv, xg, xw = (_mix(h, hs, mu[i]) for i in range(5))
+    r = (xr @ p["wr"].astype(cdt)).reshape(B, S, H, Dh)
+    k = (xk @ p["wk"].astype(cdt)).reshape(B, S, H, Dh)
+    v = (xv @ p["wv"].astype(cdt)).reshape(B, S, H, Dh)
+    g = jax.nn.silu(xg @ p["wg"].astype(cdt))
+    dw = jnp.tanh(xw @ p["lora_a"].astype(cdt)) @ p["lora_b"].astype(cdt)
+    w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32) + dw.astype(jnp.float32))
+                         )).reshape(B, S, H, Dh)
+    u = p["u"].astype(jnp.float32)
+    y, state = _wkv_seq(r, k, v, w, u, state)
+    y = y.reshape(B, S, d).astype(cdt)
+    # group-norm per head
+    y = y.reshape(B, S, H, Dh)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y.astype(jnp.float32)),
+                                   axis=-1, keepdims=True) + 64e-5).astype(cdt)
+    y = y.reshape(B, S, d) * (1.0 + p["gn"].astype(cdt))
+    out = (y * g) @ p["wo"].astype(cdt)
+    return constrain(x + out, ("batch", None, None)), h[:, -1], state
+
+
+def _channel_mix(cfg, p, x, x_prev, rc):
+    cdt = jnp.dtype(rc.compute_dtype)
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    hs = _shift(h, x_prev)
+    mu = p["mu"].astype(cdt)
+    xk, xr = _mix(h, hs, mu[0]), _mix(h, hs, mu[1])
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(cdt)))
+    k = constrain(k, ("batch", None, "model"))
+    v = k @ p["wv"].astype(cdt)
+    r = jax.nn.sigmoid(xr @ p["wr"].astype(cdt))
+    return constrain(x + r * v, ("batch", None, None)), h[:, -1]
+
+
+def forward(cfg: ModelConfig, params, batch, rc, return_cache=False):
+    cdt = jnp.dtype(rc.compute_dtype)
+    tokens = batch["tokens"]
+    x = constrain(params["embed"].astype(cdt)[tokens], ("batch", None, None))
+    B, S, d = x.shape
+    H, Dh = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    state0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+
+    def body(x, pl):
+        x, xa, st = _time_mix(cfg, pl["att"], x, None, state0, rc)
+        x, xf = _channel_mix(cfg, pl["ffn"], x, None, rc)
+        return x, (xa, xf, st) if return_cache else None
+
+    fn = jax.checkpoint(body) if rc.remat == "full" else body
+    x, cache = jax.lax.scan(fn, x, params["layers"])
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if return_cache:
+        xa, xf, st = cache
+        cache = {"x_att": xa, "x_ffn": xf, "state": st}
+    return x, 0, cache, None, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, seq_len: int, dtype):
+    d, n = cfg.d_model, cfg.n_layers
+    H, Dh = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    return {"state": ((n, batch_size, H, Dh, Dh), jnp.float32),
+            "x_att": ((n, batch_size, d), dtype),
+            "x_ffn": ((n, batch_size, d), dtype)}
+
+
+def cache_logical():
+    return {"state": (None, "batch", None, None, "model2"),
+            "x_att": (None, "batch", None),
+            "x_ffn": (None, "batch", None)}
+
+
+def decode(cfg: ModelConfig, params, cache, token, pos, rc):
+    cdt = jnp.dtype(rc.compute_dtype)
+    x = params["embed"].astype(cdt)[token]      # (B,1,d)
+
+    def body(x, sl):
+        pl, xa, xf, st = sl
+        x, xa2, st2 = _time_mix(cfg, pl["att"], x, xa, st, rc)
+        x, xf2 = _channel_mix(cfg, pl["ffn"], x, xf, rc)
+        return x, (xa2, xf2, st2)
+
+    x, (xa, xf, st) = jax.lax.scan(
+        body, x, (params["layers"], cache["x_att"], cache["x_ffn"],
+                  cache["state"]))
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cdt)
+    return constrain(logits, ("batch", None, "model")), {
+        "x_att": xa, "x_ffn": xf, "state": st}

@@ -1,0 +1,270 @@
+"""Zamba2 — Mamba2 (SSD) backbone with a shared full-attention block.
+
+81 blocks = 13 groups x 6 Mamba2 blocks + 3 tail Mamba2 blocks; ONE shared
+attention+MLP block (single weight set) is applied after every group, each
+invocation with its own KV-cache slot (13 slots). This follows Zamba2's
+shared-block design (per-invocation LoRA adapters are omitted; noted in
+DESIGN.md).
+
+Mamba2 SSD is implemented in the chunked parallel form for train/prefill
+(chunk Q=128) and as a single-step state update for decode; decode state is
+O(1) in context length, so the long_500k cell runs for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.parallel.shardings import constrain
+
+GROUP = 6          # mamba blocks per shared-attention application
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner or 2 * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N
+    return d_in, H, P, N, conv_dim
+
+
+def n_groups_tail(cfg: ModelConfig):
+    return cfg.n_layers // GROUP, cfg.n_layers % GROUP
+
+
+def _mamba_defs(cfg: ModelConfig, lead: tuple[int, ...]):
+    d = cfg.d_model
+    d_in, H, P, N, conv_dim = _dims(cfg)
+    proj_out = 2 * d_in + 2 * N + H
+    D = lambda *s, lg=None, init="normal": L.ParamDef(
+        (*lead, *s), (None,) * len(lead) + (lg or (None,) * len(s)), init)
+    return {
+        "ln": D(d, init="zeros"),
+        "in_proj": D(d, proj_out, lg=(None, "model")),
+        "conv_w": D(cfg.conv_width, conv_dim, init="zeros"),
+        "a_log": D(H, init="zeros"),
+        "dt_bias": D(H, init="zeros"),
+        "skip_d": D(H, init="ones"),
+        "gn": D(d_in, init="zeros"),
+        "out_proj": D(d_in, d, lg=("model", None)),
+    }
+
+
+def param_defs(cfg: ModelConfig):
+    d, V = cfg.d_model, cfg.vocab
+    ng, tail = n_groups_tail(cfg)
+    defs = {
+        "embed": L.ParamDef((V, d), ("model", None), scale=float(np.sqrt(d))),
+        "final_ln": L.ParamDef((d,), (None,), init="zeros"),
+        "mamba_groups": _mamba_defs(cfg, (ng, GROUP)),
+        "shared_attn": {"attn": tfm._attn_defs(cfg, 1),
+                        "mlp": tfm._mlp_defs(cfg, 1)},
+        "lm_head": L.ParamDef((d, V), (None, "model")),
+    }
+    if tail:
+        defs["mamba_tail"] = _mamba_defs(cfg, (tail,))
+    return defs
+
+
+# ------------------------------------------------------------------ SSD
+
+def _conv1d(x, w, x_prev=None):
+    """Causal depthwise conv. x: (B,S,C), w: (W,C). x_prev: (B,W-1,C)."""
+    W = w.shape[0]
+    pad = (jnp.zeros_like(x[:, : W - 1]) if x_prev is None else x_prev)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(W))
+    return out, xp[:, -(W - 1):]
+
+
+def _ssd_chunked(xh, Bm, Cm, da, dt, chunk, cdt=jnp.bfloat16):
+    """Chunked SSD. xh:(B,S,H,P) Bm/Cm:(B,S,N) da:(B,S,H) (log-decay <0),
+    dt:(B,S,H). Returns y:(B,S,H,P), final state (B,H,N,P).
+
+    Decay accumulation (cumsum/exp) stays f32; the big (B,nc,Q,Q,H)
+    intra-chunk tensor + its einsum run in `cdt` (bf16): halves the
+    dominant HBM traffic (EXPERIMENTS.md §Perf zamba2 iter-3)."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    r = lambda a: a.reshape(Bsz, nc, chunk, *a.shape[2:])
+    xh, Bm, Cm, da, dt = r(xh), r(Bm), r(Cm), r(da), r(dt)
+    # the BIG tensors (xh/Bm/Cm and the (Q,Q,H) intra term) stay bf16 so
+    # forward AND cotangents stay bf16; only the small decay accumulators
+    # (B,S,H) run f32 (exp/cumsum numerics)
+    seg = jnp.cumsum(da, axis=2)                       # (B,nc,Q,H) f32
+    seg_last = seg[:, :, -1:]                          # (B,nc,1,H)
+    # intra-chunk ("diagonal") term
+    li = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lm = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cm, Bm,
+                    preferred_element_type=jnp.float32)  # (B,nc,Qi,Qj)
+    att = (cb[..., None] * Lm * dt[:, :, None, :, :]).astype(cdt)
+    y = jnp.einsum("bcijh,bcjhp->bcihp", att, xh,
+                   preferred_element_type=jnp.float32)
+    # chunk-local end states
+    dec = jnp.exp(seg_last - seg)                       # (B,nc,Q,H)
+    st = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bm,
+                    (dec * dt).astype(cdt), xh,
+                    preferred_element_type=jnp.float32)
+    # inter-chunk scan
+    gl = jnp.exp(seg_last[:, :, 0])                     # (B,nc,H)
+
+    def step(Sprev, t):
+        st_c, gl_c = t
+        return gl_c[..., None, None] * Sprev + st_c, Sprev
+
+    state0 = jnp.zeros((Bsz, st.shape[2], N, xh.shape[-1]), jnp.float32)
+    state, Sprevs = jax.lax.scan(
+        step, state0, (jnp.moveaxis(st, 1, 0), jnp.moveaxis(gl, 1, 0)))
+    Sprevs = jnp.moveaxis(Sprevs, 0, 1)                 # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", Cm.astype(jnp.float32),
+                         Sprevs, jnp.exp(seg))
+    y = y.astype(jnp.float32) + y_inter
+    return y.reshape(Bsz, S, H, P), state
+
+
+def _mamba_block(cfg, p, x, rc, conv_prev=None, state=None):
+    """Returns (x_out, new_conv_state, new_ssm_state)."""
+    cdt = jnp.dtype(rc.compute_dtype)
+    d_in, H, P, N, conv_dim = _dims(cfg)
+    B_, S, d = x.shape
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"].astype(cdt)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: d_in + conv_dim]
+    dt_raw = zxbcdt[..., d_in + conv_dim:]
+    xbc, conv_state = _conv1d(xbc, p["conv_w"].astype(cdt), conv_prev)
+    xbc = jax.nn.silu(xbc)
+    xh = xbc[..., :d_in].reshape(B_, S, H, P)           # bf16 (big)
+    Bm = xbc[..., d_in: d_in + N]                        # bf16 (big)
+    Cm = xbc[..., d_in + N:]                             # bf16 (big)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))        # (H,)
+    da = dt * a                                          # (B,S,H) f32 small
+    if state is None:
+        chunk = next(c for c in (rc.ssm_chunk, 128, 64, 32, 16, 8, 4, 2, 1)
+                     if c <= S and S % c == 0)
+        y, state = _ssd_chunked(xh, Bm, Cm, da, dt, chunk, cdt)
+    else:  # single-step decode (S == 1)
+        kv = jnp.einsum("bsn,bsh,bshp->bhnp", Bm.astype(jnp.float32), dt,
+                        xh.astype(jnp.float32))
+        state = jnp.exp(da)[:, 0, :, None, None] * state + kv
+        y = jnp.einsum("bsn,bhnp->bshp", Cm.astype(jnp.float32), state)
+    y = y.astype(cdt) + p["skip_d"].astype(cdt)[None, None, :, None] * xh
+    y = y.reshape(B_, S, d_in)
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(y, p["gn"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(cdt)
+    return constrain(x + out, ("batch", None, None)), conv_state, state
+
+
+def _shared(params):
+    return jax.tree.map(lambda a: a[0], params["shared_attn"])
+
+
+def forward(cfg: ModelConfig, params, batch, rc, return_cache=False):
+    cdt = jnp.dtype(rc.compute_dtype)
+    tokens = batch["tokens"]
+    x = constrain(params["embed"].astype(cdt)[tokens], ("batch", None, None))
+    shared = _shared(params)
+    ng, tail = n_groups_tail(cfg)
+
+    def mamba_body(x, pl):
+        x, cs, st = _mamba_block(cfg, pl, x, rc)
+        return x, (cs, st) if return_cache else None
+
+    # nested remat: the outer group checkpoint bounds liveness to one
+    # group; the inner per-block checkpoint bounds it to one BLOCK during
+    # the group replay. Dropping the inner one saves ~8% HBO traffic but
+    # raises temp 8.2 -> 15.7 GB/device (rejected: too close to 16 GB;
+    # EXPERIMENTS.md §Perf zamba2 iter-4).
+    mb = jax.checkpoint(mamba_body) if rc.remat == "full" else mamba_body
+
+    def group_body(x, pg):
+        x, mcache = jax.lax.scan(mb, x, pg)
+        x, kv = tfm.attn_block(cfg, shared["attn"], x, 0, 0, rc)
+        x, _ = tfm.mlp_block(cfg, shared["mlp"], x, rc)
+        return x, (mcache, kv) if return_cache else None
+
+    # remat the WHOLE group (shared attention included): without this the
+    # 13 groups' f32 attention tensors are saved for backward — measured
+    # 62 GB/device temp on train_4k (EXPERIMENTS.md §Perf zamba2)
+    gb = jax.checkpoint(group_body) if rc.remat == "full" else group_body
+    x, gcache = jax.lax.scan(gb, x, params["mamba_groups"])
+    tcache = None
+    if tail:
+        x, tcache = jax.lax.scan(mb, x, params["mamba_tail"])
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    cache = None
+    if return_cache:
+        (mconv, mstate), (k, v) = gcache
+        cache = {"conv": mconv, "state": mstate, "k": k, "v": v}
+        if tail:
+            cache["tail_conv"], cache["tail_state"] = tcache
+    return x, 0, cache, None, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, seq_len: int, dtype):
+    d_in, H, P, N, conv_dim = _dims(cfg)
+    ng, tail = n_groups_tail(cfg)
+    W = cfg.conv_width
+    c = {
+        "conv": ((ng, GROUP, batch_size, W - 1, conv_dim), dtype),
+        "state": ((ng, GROUP, batch_size, H, N, P), jnp.float32),
+        "k": ((ng, batch_size, seq_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": ((ng, batch_size, seq_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+    if tail:
+        c["tail_conv"] = ((tail, batch_size, W - 1, conv_dim), dtype)
+        c["tail_state"] = ((tail, batch_size, H, N, P), jnp.float32)
+    return c
+
+
+def cache_logical():
+    return {"conv": (None, None, "batch", None, "model"),
+            "state": (None, None, "batch", None, None, "model"),
+            "k": (None, "batch", "batch2", "model", "model2"),
+            "v": (None, "batch", "batch2", "model", "model2"),
+            "tail_conv": (None, "batch", None, "model"),
+            "tail_state": (None, "batch", None, None, "model")}
+
+
+def decode(cfg: ModelConfig, params, cache, token, pos, rc):
+    cdt = jnp.dtype(rc.compute_dtype)
+    x = params["embed"].astype(cdt)[token]
+    shared = _shared(params)
+    ng, tail = n_groups_tail(cfg)
+
+    def mamba_body(x, sl):
+        pl, cs, st = sl
+        x, cs, st = _mamba_block(cfg, pl, x, rc, conv_prev=cs, state=st)
+        return x, (cs, st)
+
+    def group_body(x, sl):
+        pg, cs, st, ck, cv = sl
+        x, (cs, st) = jax.lax.scan(mamba_body, x, (pg, cs, st))
+        x, (ck, cv) = tfm.decode_attn_block(
+            cfg, shared["attn"], x, 0, ck, cv, pos, rc)
+        x, _ = tfm.mlp_block(cfg, shared["mlp"], x, rc)
+        return x, (cs, st, ck, cv)
+
+    x, (cs, st, ck, cv) = jax.lax.scan(
+        group_body, x, (params["mamba_groups"], cache["conv"],
+                        cache["state"], cache["k"], cache["v"]))
+    new_cache = dict(cache, conv=cs, state=st, k=ck, v=cv)
+    if tail:
+        x, (tc, ts) = jax.lax.scan(
+            mamba_body, x, (params["mamba_tail"], cache["tail_conv"],
+                            cache["tail_state"]))
+        new_cache["tail_conv"], new_cache["tail_state"] = tc, ts
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cdt)
+    return constrain(logits, ("batch", None, "model")), new_cache

@@ -1,0 +1,356 @@
+"""HLO-text cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+program that scans over layers (all of ours) is undercounted by ~n_layers x.
+This analyzer parses the post-optimization HLO text, extracts while-loop trip
+counts, propagates multipliers through the call graph (while bodies, fusions,
+calls), and sums:
+
+  * dot/convolution FLOPs            (per-device, SPMD-partitioned shapes)
+  * HBM traffic model: operand+result bytes of top-level compute ops
+  * collective bytes by kind (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute), operand sizes
+
+All numbers are PER DEVICE (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count=\{"?n"?[:=]"?(\d+)"?\}')
+_TRIP_RE2 = re.compile(r'"known_trip_count":\s*\{\s*"n"\s*:\s*"?(\d+)"?')
+
+BOOKKEEPING = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "get-dimension-size",
+    "opt-barrier", "bitcast-convert",
+    # control flow: bodies are accounted through the call graph; counting
+    # the op itself would charge the whole carried tuple per call site
+    "while", "conditional", "call",
+}
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "collective-broadcast", "ragged-all-to-all",
+}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, ()
+    dt, dims = m.groups()
+    shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+    return dt, shape
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    rest: str            # full remainder of line after opcode(
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+
+
+def parse_hlo(text: str):
+    """Parse computations from HLO text. Returns (comps, entry_name)."""
+    comps = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        # Computation headers end with "{", contain "->", and are not
+        # assignments (op lines start "%name = ..."), e.g.:
+        #   %region_1.1_spmd.clone (param: (s32[], ...)) -> (...) {
+        is_header = (stripped.endswith("{") and " -> " in stripped
+                     and not re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s+=", stripped))
+        if is_header:
+            mc = _COMP_RE.match(stripped)
+            if mc:
+                cur = Computation(mc.group(1), [])
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            name, rtype, kind, rest = mo.groups()
+            cur.ops.append(Op(name, kind, rtype, rest,
+                              stripped.startswith("ROOT")))
+    return comps, entry
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(op: Op):
+    return _OPERAND_RE.findall(op.rest.split(")")[0])
+
+
+def _dot_flops(op: Op, symtab) -> int:
+    """2 * prod(result) * prod(lhs contracting dims)."""
+    _, rshape = shape_elems(op.result_type)
+    names = _operand_names(op)
+    if not names or names[0] not in symtab:
+        return 0
+    _, lhs_shape = shape_elems(symtab[names[0]])
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    contract = 1
+    if cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            contract *= lhs_shape[int(d)] if int(d) < len(lhs_shape) else 1
+    return 2 * math.prod(rshape) * contract
+
+
+def _conv_flops(op: Op, symtab) -> int:
+    # 2 * prod(result) * (kernel elements / out_channels)
+    _, rshape = shape_elems(op.result_type)
+    names = _operand_names(op)
+    if len(names) < 2 or names[1] not in symtab:
+        return 0
+    _, kshape = shape_elems(symtab[names[1]])
+    kelems = math.prod(kshape) if kshape else 1
+    out_c = rshape[-1] if rshape else 1
+    return 2 * math.prod(rshape) * max(1, kelems // max(1, out_c))
+
+
+def _while_trip_count(op: Op, comps, const_cache) -> int:
+    m = _TRIP_RE.search(op.rest) or _TRIP_RE2.search(op.rest)
+    if m:
+        return int(m.group(1))
+    # fall back: max s32 constant in the condition computation
+    cm = re.search(r"condition=%?([\w.\-]+)", op.rest)
+    if cm and cm.group(1) in comps:
+        cond = comps[cm.group(1)]
+        consts = []
+        for o in cond.ops:
+            if o.kind == "constant" and "s32[]" in o.result_type:
+                c = re.search(r"constant\((\d+)\)", "constant(" + o.rest)
+                if c:
+                    consts.append(int(c.group(1)))
+        if consts:
+            return max(consts)
+    return 1
+
+
+@dataclasses.dataclass
+class CostReport:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    n_while: int = 0
+    trip_counts: dict = dataclasses.field(default_factory=dict)
+    flops_by_kind: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(text: str) -> CostReport:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        # fall back: computation never referenced as callee
+        callees = set()
+        for c in comps.values():
+            for op in c.ops:
+                callees.update(_CALLS_RE.findall(op.rest))
+        entry = next((n for n in comps if n not in callees),
+                     next(iter(comps)))
+
+    mult = defaultdict(float)        # all computations (flops/collectives)
+    top_mult = defaultdict(float)    # non-fused computations (HBM traffic)
+    report = CostReport()
+
+    def visit(comp_name: str, m: float, seen, fused: bool):
+        if comp_name not in comps or comp_name in seen:
+            return
+        comp = comps[comp_name]
+        mult[comp_name] += m
+        if not fused:
+            top_mult[comp_name] += m
+        for op in comp.ops:
+            if op.kind == "while":
+                trips = _while_trip_count(op, comps, None)
+                report.n_while += 1
+                report.trip_counts[op.name] = trips
+                for cal in _CALLS_RE.findall(op.rest):
+                    visit(cal, m * trips, seen | {comp_name}, fused)
+            elif op.kind in ("call", "conditional"):
+                for cal in _CALLS_RE.findall(op.rest):
+                    visit(cal, m, seen | {comp_name}, fused)
+            elif op.kind in ("fusion", "custom-call", "reduce", "map",
+                             "scatter", "sort", "select-and-scatter",
+                             "reduce-window"):
+                for cal in _CALLS_RE.findall(op.rest):
+                    visit(cal, m, seen | {comp_name}, True)
+
+    visit(entry, 1.0, frozenset(), False)
+
+    symtab = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            symtab[op.name] = op.result_type
+
+    for cname, m_all in mult.items():
+        comp = comps[cname]
+        m_top = top_mult.get(cname, 0.0)
+        for op in comp.ops:
+            m = m_all
+            if op.kind == "dot":
+                f = _dot_flops(op, symtab) * m
+                report.flops += f
+                report.flops_by_kind["dot"] = (
+                    report.flops_by_kind.get("dot", 0.0) + f)
+            elif op.kind == "convolution":
+                f = _conv_flops(op, symtab) * m
+                report.flops += f
+                report.flops_by_kind["convolution"] = (
+                    report.flops_by_kind.get("convolution", 0.0) + f)
+            if op.kind in COLLECTIVES:
+                kind = op.kind.replace("-start", "")
+                b = _operand_bytes(op, symtab) * m
+                report.collective_bytes += b
+                report.collectives[kind] = report.collectives.get(kind, 0) + b
+            # HBM traffic model: top-level non-bookkeeping ops move their
+            # operands + result through HBM once per execution. In-place
+            # slice updates only move the slice, not the aliased buffer.
+            # Ops inside fused computations don't touch HBM.
+            m = m_top
+            if m == 0.0:
+                continue
+            if op.kind == "dynamic-update-slice":
+                names = _operand_names(op)
+                upd = (shape_bytes(symtab.get(names[1], ""))
+                       if len(names) > 1 else 0)
+                report.traffic_bytes += 2 * upd * m
+            elif op.kind == "dynamic-slice" or op.kind == "slice":
+                report.traffic_bytes += 2 * shape_bytes(op.result_type) * m
+            elif op.kind == "fusion":
+                report.traffic_bytes += _fusion_traffic(
+                    op, comps, symtab) * m
+            elif op.kind not in BOOKKEEPING and not op.kind.endswith("-done"):
+                report.traffic_bytes += (
+                    shape_bytes(op.result_type)
+                    + _operand_bytes(op, symtab)) * m
+    return report
+
+
+def _fusion_traffic(op: Op, comps, symtab) -> int:
+    """HBM bytes moved by one fusion execution.
+
+    A fused computation only reads the elements it actually consumes: an
+    operand whose every use inside the fusion is a (dynamic-)slice is
+    charged at slice size (this is how scan-over-stacked-params reads one
+    layer per iteration), and a root dynamic-update-slice writes (and
+    aliases) only the updated slice."""
+    mm = _CALLS_RE.search(op.rest)
+    comp = comps.get(mm.group(1)) if mm else None
+    if comp is None:
+        return shape_bytes(op.result_type) + _operand_bytes(op, symtab)
+    names = _operand_names(op)
+    param_idx = {}
+    for o in comp.ops:
+        if o.kind == "parameter":
+            mi = re.match(r"(\d+)", o.rest)
+            if mi:
+                param_idx[o.name] = int(mi.group(1))
+    read_bytes = {i: shape_bytes(symtab.get(n, ""))
+                  for i, n in enumerate(names)}
+    uses = defaultdict(list)
+    for o in comp.ops:
+        for n in _operand_names(o):
+            if n in param_idx:
+                uses[param_idx[n]].append(o)
+    local_ty = {o.name: o.result_type for o in comp.ops}
+    for idx, ops_u in uses.items():
+        if ops_u and all(u.kind in ("dynamic-slice", "slice")
+                         for u in ops_u):
+            read_bytes[idx] = sum(shape_bytes(u.result_type) for u in ops_u)
+    # Pass-through scan buffers: a dynamic-update-slice inside the fusion
+    # whose buffer dims equal the fusion result dims means the big buffer is
+    # aliased in place (XLA-CPU sometimes wraps it in dtype-roundtrip
+    # converts; on TPU it is a true in-place update). Charge the update
+    # slice, not the buffer.
+    dus_update = {}
+    for o in comp.ops:
+        if o.kind == "dynamic-update-slice":
+            dn = _operand_names(o)
+            if len(dn) > 1:
+                dus_update[shape_elems(o.result_type)[1]] = shape_bytes(
+                    local_ty.get(dn[1], symtab.get(dn[1], "")))
+    out_dims = shape_elems(op.result_type)[1]
+    out_b = shape_bytes(op.result_type)
+    if out_dims in dus_update:
+        out_b = dus_update[out_dims]
+        for pname, idx in param_idx.items():
+            if shape_elems(local_ty.get(pname, ""))[1] == out_dims:
+                read_bytes[idx] = min(read_bytes.get(idx, 0),
+                                      dus_update[out_dims])
+    total_in = sum(read_bytes.values())
+    return total_in + out_b
+
+
+def _operand_bytes(op: Op, symtab) -> int:
+    return sum(shape_bytes(symtab.get(n, "")) for n in _operand_names(op))
+
+
+def _fusion_root(op: Op, comps):
+    m = _CALLS_RE.search(op.rest)
+    if not m or m.group(1) not in comps:
+        return None
+    comp = comps[m.group(1)]
+    for o in comp.ops:
+        if o.is_root:
+            return o
+    return comp.ops[-1] if comp.ops else None
+
+
+def _fusion_root_kind(op: Op, comps):
+    r = _fusion_root(op, comps)
+    return r.kind if r else None
+
+
+def analyze_compiled(compiled) -> CostReport:
+    return analyze(compiled.as_text())

@@ -1,0 +1,88 @@
+"""Top-K cost breakdown from compiled HLO text — the dry-run "profiler".
+
+Reports the heaviest individual ops (collectives by wire bytes, dots by
+FLOPs, top-level fusions by HBM traffic), each multiplied by its loop trip
+count, with the while-loop context — this is what the §Perf hypothesis
+loop reads instead of a wall-clock trace.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from repro.tools import hlo_cost as H
+
+
+def top_costs(text: str, k: int = 12) -> dict:
+    comps, entry = H.parse_hlo(text)
+    if entry is None:
+        callees = set()
+        for c in comps.values():
+            for op in c.ops:
+                callees.update(H._CALLS_RE.findall(op.rest))
+        entry = next((n for n in comps if n not in callees),
+                     next(iter(comps)))
+
+    mult = defaultdict(float)
+    top_mult = defaultdict(float)
+
+    def visit(name, m, seen, fused):
+        if name not in comps or name in seen:
+            return
+        mult[name] += m
+        if not fused:
+            top_mult[name] += m
+        for op in comps[name].ops:
+            if op.kind == "while":
+                trips = H._while_trip_count(op, comps, None)
+                for cal in H._CALLS_RE.findall(op.rest):
+                    visit(cal, m * trips, seen | {name}, fused)
+            elif op.kind in ("call", "conditional"):
+                for cal in H._CALLS_RE.findall(op.rest):
+                    visit(cal, m, seen | {name}, fused)
+            elif op.kind in ("fusion", "custom-call", "reduce", "map",
+                             "scatter", "sort", "select-and-scatter",
+                             "reduce-window"):
+                for cal in H._CALLS_RE.findall(op.rest):
+                    visit(cal, m, seen | {name}, True)
+
+    visit(entry, 1.0, frozenset(), False)
+
+    symtab = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            symtab[op.name] = op.result_type
+
+    colls, dots, fusions = [], [], []
+    for cname, m in mult.items():
+        for op in comps[cname].ops:
+            if op.kind in H.COLLECTIVES:
+                b = H._operand_bytes(op, symtab) * m
+                colls.append((b, op.kind, op.name, cname, m,
+                              op.result_type[:60]))
+            elif op.kind == "dot":
+                f = H._dot_flops(op, symtab) * m
+                dots.append((f, op.kind, op.name, cname, m,
+                             op.result_type[:60]))
+        mt = top_mult.get(cname, 0.0)
+        if mt:
+            for op in comps[cname].ops:
+                if op.kind == "fusion":
+                    t = H._fusion_traffic(op, comps, symtab) * mt
+                    fusions.append((t, op.kind, op.name, cname, mt,
+                                    op.result_type[:60]))
+    colls.sort(reverse=True)
+    dots.sort(reverse=True)
+    fusions.sort(reverse=True)
+    return {"collectives": colls[:k], "dots": dots[:k],
+            "fusions": fusions[:k]}
+
+
+def print_top(text: str, k: int = 10):
+    out = top_costs(text, k)
+    for section, unit in (("collectives", "B"), ("dots", "F"),
+                          ("fusions", "B")):
+        print(f"--- top {section} ---")
+        for v, kind, name, cname, m, ty in out[section]:
+            print(f"  {v:.3e}{unit}  x{m:<6.0f} {kind:<18} {name:<28} "
+                  f"in {cname[:40]:<40} {ty}")
+    return out

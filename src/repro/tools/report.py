@@ -1,0 +1,74 @@
+"""Render the §Dry-run / §Roofline markdown tables from results/dryrun."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(results_dir="results/dryrun"):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        base = os.path.basename(f)
+        # skip hillclimb runs with override suffixes (arch_shape_Npod.json
+        # is the canonical record)
+        if not (base.endswith("_1pod.json") or base.endswith("_2pod.json")):
+            continue
+        d = json.load(open(f))
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def roofline_table(cells: dict, mesh: str = "16x16") -> str:
+    rows = []
+    for (arch, shape, m), d in sorted(cells.items(),
+                                      key=lambda kv: (kv[0][1], kv[0][0])):
+        if m != mesh:
+            continue
+        r, mem = d["roofline"], d["memory"]
+        peak = (mem["argument_bytes"] + mem["temp_bytes"]) / 1e9
+        dom = {"compute": "comp", "memory": "mem", "collective": "coll"}[
+            r["dominant"]]
+        rows.append(
+            f"| {arch} | {shape} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {dom} | "
+            f"{r['useful_ratio']:.3f} | {r['mfu_bound']:.3f} | "
+            f"{peak:.1f} | {'yes' if peak <= 16.0 else 'NO'} |")
+    head = ("| arch | shape | compute s | memory s | collective s | bound "
+            "| useful | MFU<= | GB/dev | fits |\n"
+            "|---|---|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def dryrun_summary(cells: dict) -> str:
+    lines = []
+    for mesh in ("16x16", "2x16x16"):
+        sub = [d for (a, s, m), d in cells.items() if m == mesh]
+        if not sub:
+            continue
+        n_fit = sum(1 for d in sub
+                    if (d["memory"]["argument_bytes"]
+                        + d["memory"]["temp_bytes"]) <= 16e9)
+        t = sum(d["compile_s"] for d in sub)
+        lines.append(f"* **{mesh}** ({sub[0]['n_chips']} chips): "
+                     f"{len(sub)}/{len(sub)} cells lower+compile OK, "
+                     f"{n_fit}/{len(sub)} fit 16 GB/chip, "
+                     f"total compile {t:.0f}s")
+    return "\n".join(lines)
+
+
+def collective_mix(cells: dict, arch: str, shape: str,
+                   mesh: str = "2x16x16") -> str:
+    d = cells.get((arch, shape, mesh))
+    if not d:
+        return ""
+    colls = d["hlo_cost"]["collectives"]
+    return ", ".join(f"{k}={v:.2e}B" for k, v in sorted(
+        colls.items(), key=lambda kv: -kv[1]))
+
+
+if __name__ == "__main__":
+    cells = load()
+    print(dryrun_summary(cells))
+    print()
+    print(roofline_table(cells))

@@ -1,0 +1,89 @@
+"""Batched serving: lockstep batched decode at smoke scale.
+
+A wave of requests is padded to a common prompt length and decoded in
+lockstep — one jit'd decode step per token for the whole batch (this is
+the `serve_step` the dry-run lowers at production shapes). Weights come
+from a Lustre checkpoint (the storage architecture serving a read-heavy
+load, optionally through the collaborative cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.models.config import ModelConfig, RunConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Serve one wave of B requests in lockstep."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 256,
+                 eos: int = -1, pad: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.eos = eos
+        self.pad = pad
+        self.rc = RunConfig(seq_len=max_seq, global_batch=0, kind="decode",
+                            param_dtype="float32", attn_impl="ref")
+        self._decode = jax.jit(
+            lambda p, c, t, pos: registry.decode(cfg, p, c, t, pos, self.rc))
+
+    def _fresh_cache(self, batch: int):
+        spec = registry.init_cache(self.cfg, batch, self.max_seq,
+                                   jnp.dtype(self.rc.compute_dtype))
+        return jax.tree.map(
+            lambda s: jnp.zeros(s[0], s[1]), spec,
+            is_leaf=lambda x: isinstance(x, tuple) and isinstance(
+                x[0], tuple))
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        B = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        toks = np.full((B, plen), self.pad, np.int32)
+        for i, r in enumerate(requests):
+            # left-pad so every prompt ends at the same position
+            toks[i, plen - len(r.prompt):] = r.prompt
+        cache = self._fresh_cache(B)
+        # prefill via lockstep single-token decode (exact; batched prefill
+        # is the perf path exercised by the prefill_32k dry-run cells)
+        last = None
+        for j in range(plen):
+            t = jnp.asarray(toks[:, j:j + 1])
+            logits, cache = self._decode(self.params, cache, t,
+                                         jnp.asarray(j, jnp.int32))
+            last = logits
+        nxt = np.asarray(jnp.argmax(last, axis=-1)).reshape(-1)
+        max_new = max(r.max_new for r in requests)
+        for step in range(max_new):
+            for i, r in enumerate(requests):
+                if not r.done and len(r.out) < r.max_new:
+                    r.out.append(int(nxt[i]))
+                    if int(nxt[i]) == self.eos or \
+                            len(r.out) >= r.max_new:
+                        r.done = True
+            if all(r.done for r in requests):
+                break
+            pos = plen + step
+            if pos >= self.max_seq - 1:
+                break
+            t = jnp.asarray(nxt.reshape(B, 1).astype(np.int32))
+            logits, cache = self._decode(self.params, cache, t,
+                                         jnp.asarray(pos, jnp.int32))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
+        for r in requests:
+            r.done = True
+        return requests

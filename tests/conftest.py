@@ -1,0 +1,25 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+from repro.core import LustreCluster  # noqa: E402
+from repro.fsio import LustreClient  # noqa: E402
+
+
+@pytest.fixture
+def cluster():
+    return LustreCluster(osts=4, mdses=2, clients=3, ost_failover=True,
+                         commit_interval=16)
+
+
+@pytest.fixture
+def fs(cluster):
+    return LustreClient(cluster).mount()
+
+
+@pytest.fixture
+def small_cluster():
+    return LustreCluster(osts=2, mdses=1, clients=2, commit_interval=8)

@@ -1,0 +1,121 @@
+"""DLM: modes, extents, ASTs, intents, group locks (paper ch. 7, 27)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LustreCluster
+from repro.core import dlm as D
+
+
+# ----------------------------------------------------------- pure matrix
+
+def test_compat_matrix_is_vms():
+    # spot checks from the paper's semantics
+    assert D._C["PR"]["PR"] and not D._C["PR"]["PW"]
+    assert D._C["CR"]["PW"] and not D._C["EX"]["CR"]
+    assert all(D._C["NL"][m] for m in ("NL", "CR", "CW", "PR", "PW", "EX"))
+
+
+@given(st.sampled_from(D.MODES), st.sampled_from(D.MODES))
+def test_compat_symmetric(a, b):
+    """The VMS compatibility relation is symmetric."""
+    assert D._C[a][b] == D._C[b][a]
+
+
+@given(st.integers(0, 1000), st.integers(1, 100),
+       st.integers(0, 1000), st.integers(1, 100))
+def test_overlap_symmetric_and_correct(s1, l1, s2, l2):
+    a, b = (s1, s1 + l1), (s2, s2 + l2)
+    assert D.overlaps(a, b) == D.overlaps(b, a)
+    assert D.overlaps(a, b) == (max(s1, s2) < min(s1 + l1, s2 + l2))
+
+
+# ------------------------------------------------------------ live locks
+
+def mk():
+    c = LustreCluster(osts=1, mdses=1, clients=3, commit_interval=8)
+    rpcs = [c.make_client_rpc(i) for i in range(3)]
+    oscs = [c.make_oscs(r, writeback=False)[0] for r in rpcs]
+    return c, oscs
+
+
+def test_extent_lock_grows_to_whole_object_when_uncontended():
+    c, (o1, o2, o3) = mk()
+    oid = o1.create(0)["oid"]
+    lk, _ = o1.lock(0, oid, "PW", (0, 100))
+    assert lk.extent == (0, D.MAX_EXT)       # §7.5 largest-possible grant
+
+
+def test_extent_growth_bounded_by_other_locks():
+    c, (o1, o2, o3) = mk()
+    oid = o1.create(0)["oid"]
+    o1.lock(0, oid, "PW", (0, 100))
+    lk, _ = o2.lock(0, oid, "PW", (1000, 1100))
+    # o1's PW got the whole object, so the AST shrank... o1 cancels; but
+    # enqueue order here: o2's request revokes o1's lock entirely.
+    assert lk.granted
+
+
+def test_sequential_io_single_lock_rpc():
+    c, (o1, _, _) = mk()
+    oid = o1.create(0)["oid"]
+    base = c.stats.counters.get("rpc.ost.ldlm_enqueue", 0)
+    for i in range(16):
+        o1.write(0, oid, i * 10, b"0123456789")
+    n = c.stats.counters.get("rpc.ost.ldlm_enqueue", 0) - base
+    assert n == 1                             # grown extent covers the rest
+    assert c.stats.counters["dlm.client_match"] >= 15
+
+
+def test_blocking_ast_revokes_and_flushes():
+    c = LustreCluster(osts=1, mdses=1, clients=2, commit_interval=8)
+    r1, r2 = (c.make_client_rpc(i) for i in range(2))
+    w = c.make_oscs(r1, writeback=True)[0]   # write-back caching client
+    rdr = c.make_oscs(r2, writeback=False)[0]
+    oid = w.create(0)["oid"]
+    w.write(0, oid, 0, b"cached!!")          # sits dirty under a PW lock
+    assert w.dirty_bytes == 8
+    data = rdr.read(0, oid, 0, 8)            # conflicting PR -> AST -> flush
+    assert data == b"cached!!"
+    assert w.dirty_bytes == 0
+    assert c.stats.counters["dlm.blocking_ast"] >= 1
+
+
+def test_group_locks_share_gid():
+    c, (o1, o2, o3) = mk()
+    oid = o1.create(0)["oid"]
+    o1.write(0, oid, 0, b"aaaa", gid=7)
+    o2.write(0, oid, 4, b"bbbb", gid=7)      # same group: no revocation
+    assert c.stats.counters.get("dlm.blocking_ast", 0) == 0
+    o3.read(0, oid, 0, 8)                    # different mode: ASTs fire
+    assert c.stats.counters["dlm.blocking_ast"] >= 1
+
+
+def test_lvb_carries_size(cluster):
+    rpc = cluster.make_client_rpc(0)
+    osc = cluster.make_oscs(rpc, writeback=False)[0]
+    oid = osc.create(0)["oid"]
+    osc.write(0, oid, 0, b"x" * 777)
+    osc.locks.cancel_all()
+    lk, lvb = osc.lock(0, oid, "PR", (0, 10))
+    assert lvb["size"] == 777                 # §7.7 lock value block
+
+
+def test_dead_client_evicted_on_ast_timeout():
+    c = LustreCluster(osts=1, mdses=1, clients=2, commit_interval=8)
+    r1, r2 = (c.make_client_rpc(i) for i in range(2))
+    o1 = c.make_oscs(r1, writeback=False)[0]
+    o2 = c.make_oscs(r2, writeback=False)[0]
+    oid = o1.create(0)["oid"]
+    o1.lock(0, oid, "PW", (0, 100))
+    c.sim.faults.down_nids.add(r1.nid)        # client 1 dies holding PW
+    lk, _ = o2.lock(0, oid, "PW", (0, 100))   # AST times out -> evict
+    assert lk is not None and lk.granted
+    assert c.stats.counters["dlm.evictions"] == 1
+
+
+def test_lock_match_covers_weaker_modes():
+    lk = D.Lock(1, ("ext", 0, 2), "PW", (0, 1000), "c", "n", granted=True)
+    assert lk.covers("PR", (10, 20))
+    assert lk.covers("PW", (0, 1000))
+    assert not lk.covers("EX", (0, 10))
+    assert not lk.covers("PR", (500, 2000))   # extent not contained

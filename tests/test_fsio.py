@@ -1,0 +1,145 @@
+"""Client filesystem integration (paper ch. 9, 28)."""
+import pytest
+
+from repro.core import LustreCluster
+from repro.core import cobd as cobd_mod
+from repro.fsio import FsError, LustreClient
+
+
+def test_basic_file_lifecycle(fs):
+    fs.mkdir_p("/a/b/c")
+    fh = fs.creat("/a/b/c/f.bin", stripe_count=2, stripe_size=512)
+    fs.write(fh, b"0123456789" * 100)
+    fs.close(fh)
+    st = fs.stat("/a/b/c/f.bin")
+    assert st["size"] == 1000 and st["stripe_count"] == 2
+    fh = fs.open("/a/b/c/f.bin")
+    assert fs.read(fh, 1000) == b"0123456789" * 100
+    assert fs.read(fh, 10) == b""                 # EOF
+    fs.close(fh)
+    fs.unlink("/a/b/c/f.bin")
+    assert not fs.exists("/a/b/c/f.bin")
+
+
+def test_enoent_and_eexist(fs):
+    with pytest.raises(FsError):
+        fs.open("/nope")
+    fs.creat("/dup")
+    with pytest.raises(FsError) as ei:
+        fs.creat("/dup")
+    assert ei.value.errno == -17
+
+
+def test_sparse_write_and_read(fs):
+    fh = fs.creat("/sparse", stripe_count=3, stripe_size=128)
+    fs.write(fh, b"end", offset=1000)
+    fs.close(fh)
+    assert fs.stat("/sparse")["size"] == 1003
+    fh = fs.open("/sparse")
+    data = fs.read(fh, 1003)
+    assert data[:1000] == b"\0" * 1000 and data[1000:] == b"end"
+
+
+def test_symlink_resolution_and_loop(fs):
+    fs.mkdir("/t")
+    fh = fs.creat("/t/real")
+    fs.write(fh, b"hello")
+    fs.close(fh)
+    fs.symlink("/t/real", "/t/lnk")
+    fs.symlink("/t/lnk", "/t/lnk2")
+    assert fs.stat("/t/lnk2")["size"] == 5
+    fs.symlink("/t/loopA", "/t/loopB")
+    fs.symlink("/t/loopB", "/t/loopA")
+    with pytest.raises(FsError):
+        fs.stat("/t/loopA")
+
+
+def test_rename_across_directories(fs):
+    fs.mkdir("/src")
+    fs.mkdir("/dst")
+    fs.creat("/src/f")
+    fs.rename("/src/f", "/dst/g")
+    assert "g" in fs.readdir("/dst")
+    assert "f" not in fs.readdir("/src")
+
+
+def test_cross_client_coherency(cluster):
+    fs1 = LustreClient(cluster, 0).mount()
+    fs2 = LustreClient(cluster, 1).mount()
+    fh = fs1.creat("/shared.txt")
+    fs1.write(fh, b"v1")
+    fs1.close(fh)
+    assert fs2.stat("/shared.txt")["size"] == 2
+    # client 2 removes it; client 1's cached dentry must go stale
+    fs1.stat("/shared.txt")                       # populate dcache
+    fs2.unlink("/shared.txt")
+    assert not fs1.exists("/shared.txt")
+
+
+def test_concurrent_rw_sees_writeback_data(cluster):
+    """Reader triggers blocking AST that flushes the writer's cache."""
+    w = LustreClient(cluster, 0).mount()
+    r = LustreClient(cluster, 1).mount()
+    fh = w.creat("/wb.bin", stripe_count=1)
+    w.write(fh, b"dirty-cached-data")
+    # NOT closed, NOT synced: data sits in w's writeback cache
+    fh2 = r.open("/wb.bin")
+    assert r.read(fh2, 17) == b"dirty-cached-data"
+    r.close(fh2)
+    w.close(fh)
+
+
+def test_stat_size_from_ost_while_open(cluster):
+    """§6.9.1: while a writer holds the file open, size/mtime come from
+    the OSTs, not the MDS copy."""
+    w = LustreClient(cluster, 0).mount()
+    r = LustreClient(cluster, 1).mount()
+    fh = w.creat("/grow.bin", stripe_count=2)
+    w.write(fh, b"x" * 500)
+    w.fsync(fh)
+    st = r.stat("/grow.bin")
+    assert st["size"] == 500 and st["mtime_on_ost"]
+    w.close(fh)
+    st = r.stat("/grow.bin")
+    assert st["size"] == 500 and not st["mtime_on_ost"]
+
+
+def test_readdir_and_mkdir_p(fs):
+    fs.mkdir_p("/x/y/z")
+    fs.creat("/x/y/z/1")
+    fs.creat("/x/y/z/2")
+    assert sorted(fs.readdir("/x/y/z")) == ["1", "2"]
+    assert fs.readdir("/x") == {"y": fs.resolve("/x/y")}
+
+
+def test_statfs_capacity(fs):
+    s = fs.statfs()
+    assert s["capacity"] > 0 and s["free"] <= s["capacity"]
+
+
+def test_wbc_mode_speeds_metadata_burst(cluster):
+    fs = LustreClient(cluster, 0).mount()
+    fs.mkdir("/burst")
+    assert fs.enable_wbc("/burst")
+    base = cluster.stats.counters.get("rpc.mds.reint", 0)
+    root = fs.resolve("/burst")
+    for i in range(30):
+        fs.wbc.create(root, f"f{i}")
+    burst_rpcs = cluster.stats.counters.get("rpc.mds.reint", 0) - base
+    fs.disable_wbc()
+    assert burst_rpcs == 0                        # all local
+    assert len(fs.readdir("/burst")) == 30
+
+
+def test_read_through_collaborative_cache(cluster):
+    fs = LustreClient(cluster, 0).mount()
+    fh = fs.creat("/hot.bin", stripe_count=1, stripe_offset=1)
+    fs.write(fh, bytes(range(256)) * 32)
+    fs.close(fh)
+    cobd, _ = cobd_mod.make_caching_node(cluster, "client1",
+                                         cluster.ost_targets[1], "COBD-t")
+    r = LustreClient(cluster, 2).mount()
+    fh = r.open("/hot.bin")
+    assert r.read(fh, 8192) == bytes(range(256)) * 32
+    assert cluster.stats.counters.get("ost.referral", 0) >= 1
+    assert cluster.stats.bytes.get("cobd.served", 0) >= 8192

@@ -1,0 +1,107 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import flash_attention as fa
+from repro.kernels import parity as par
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,D", [
+    (1, 1, 1, 128, 64),       # MHA
+    (2, 4, 2, 128, 64),       # GQA 2:1
+    (1, 8, 1, 256, 64),       # MQA
+    (1, 4, 4, 64, 128),       # head_dim 128
+    (2, 2, 2, 192, 32),       # non-pow2 seq (block 64)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(B, H, Hkv, S, D, dtype):
+    q = rand(0, (B, H, S, D), dtype)
+    k = rand(1, (B, Hkv, S, D), dtype)
+    v = rand(2, (B, Hkv, S, D), dtype)
+    out = fa.flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                             interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    err = np.abs(out.astype(jnp.float32) - want.astype(jnp.float32)).max()
+    assert err < TOL[dtype], (err, dtype)
+
+
+@pytest.mark.parametrize("window", [32, 64, 100])
+def test_flash_attention_sliding_window(window):
+    q = rand(0, (1, 2, 256, 64), jnp.float32)
+    k = rand(1, (1, 2, 256, 64), jnp.float32)
+    v = rand(2, (1, 2, 256, 64), jnp.float32)
+    out = fa.flash_attention(q, k, v, causal=True, window=window,
+                             block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    assert np.abs(out - want).max() < 2e-5
+
+
+def test_flash_attention_noncausal():
+    q = rand(0, (1, 2, 128, 64), jnp.float32)
+    k = rand(1, (1, 2, 128, 64), jnp.float32)
+    v = rand(2, (1, 2, 128, 64), jnp.float32)
+    out = fa.flash_attention(q, k, v, causal=False, block_q=64,
+                             block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    assert np.abs(out - want).max() < 2e-5
+
+
+def test_flash_attention_block_shape_independence():
+    """Output must not depend on the BlockSpec tiling."""
+    q = rand(0, (1, 2, 256, 64), jnp.float32)
+    k = rand(1, (1, 1, 256, 64), jnp.float32)
+    v = rand(2, (1, 1, 256, 64), jnp.float32)
+    outs = [fa.flash_attention(q, k, v, block_q=bq, block_k=bk,
+                               interpret=True)
+            for bq, bk in [(64, 64), (128, 128), (64, 128), (256, 64)]]
+    for o in outs[1:]:
+        assert np.abs(o - outs[0]).max() < 1e-5
+
+
+@pytest.mark.parametrize("K,N,block", [
+    (2, 1024, 256), (5, 4096, 4096), (9, 512, 128), (3, 8192, 1024),
+])
+def test_xor_parity_sweep(K, N, block):
+    rng = np.random.default_rng(K * N)
+    blocks = jnp.asarray(
+        rng.integers(-2**31, 2**31, size=(K, N), dtype=np.int32))
+    p = par.xor_parity(blocks, block=block, interpret=True)
+    assert (np.asarray(p) == np.asarray(ref.xor_parity_ref(blocks))).all()
+    # reconstruct each possible missing row
+    for miss in range(K):
+        surv = jnp.concatenate([blocks[:miss], blocks[miss + 1:]], 0)
+        rec = par.reconstruct(surv, p, block=block, interpret=True)
+        assert (np.asarray(rec) == np.asarray(blocks[miss])).all()
+
+
+def test_parity_bytes_roundtrip_unequal_tails():
+    rng = np.random.default_rng(7)
+    chunks = [rng.bytes(1000), rng.bytes(737), rng.bytes(1024)]
+    p = ops.parity_bytes(chunks)
+    assert len(p) == 1024
+    pad = [c.ljust(1024, b"\0") for c in chunks]
+    back = ops.reconstruct_bytes(pad[1:], p, 1000)
+    assert back == pad[0][:1000]
+
+
+def test_xor_parity_linearity_property():
+    """XOR(a) ^ XOR(b) == XOR(a ^ b) — the algebra the erasure code
+    relies on."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-2**31, 2**31, (4, 512), dtype=np.int32))
+    b = jnp.asarray(rng.integers(-2**31, 2**31, (4, 512), dtype=np.int32))
+    pa = par.xor_parity(a, interpret=True)
+    pb = par.xor_parity(b, interpret=True)
+    pab = par.xor_parity(jnp.bitwise_xor(a, b), interpret=True)
+    assert (np.asarray(jnp.bitwise_xor(pa, pb)) == np.asarray(pab)).all()

@@ -1,0 +1,138 @@
+"""LOV striping + RAID1 (paper ch. 10, 15, 20)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LustreCluster
+from repro.core import lov as LV
+
+
+def mk(osts=4, policy="round_robin"):
+    c = LustreCluster(osts=osts, mdses=1, clients=1, commit_interval=32)
+    rpc = c.make_client_rpc(0)
+    lov = c.make_lov(rpc, policy=policy)
+    return c, lov
+
+
+def test_chunks_mapping_round_trip():
+    lsm = LV.StripeMd(stripe_size=100, stripe_count=3, stripe_offset=0,
+                      objects=[])
+    runs = LV._chunks(lsm, 0, 1000)
+    # every logical byte covered exactly once
+    covered = sorted((lpos, lpos + ln) for _, _, ln, lpos in runs)
+    pos = 0
+    for a, b in covered:
+        assert a == pos
+        pos = b
+    assert pos == 1000
+    # stripe index round-robins
+    assert [r[0] for r in runs[:4]] == [0, 1, 2, 0]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(16, 257),
+       st.lists(st.tuples(st.integers(0, 2000),
+                          st.binary(min_size=1, max_size=513)),
+                min_size=1, max_size=8))
+def test_striped_write_read_random_extents(cnt, ssz, writes):
+    """Property: arbitrary overlapping striped writes == a flat buffer."""
+    c, lov = mk()
+    lsm = lov.create(stripe_count=cnt, stripe_size=ssz)
+    shadow = bytearray()
+    for off, data in writes:
+        lov.write(lsm, off, data)
+        if off + len(data) > len(shadow):
+            shadow.extend(b"\0" * (off + len(data) - len(shadow)))
+        shadow[off:off + len(data)] = data
+    lov.flush()
+    assert lov.getattr(lsm)["size"] == len(shadow)
+    assert lov.read(lsm, 0, len(shadow)) == bytes(shadow)
+    # random sub-extent
+    if len(shadow) > 3:
+        a, b = len(shadow) // 3, 2 * len(shadow) // 3
+        assert lov.read(lsm, a, b - a) == bytes(shadow[a:b])
+
+
+def test_logical_size_formula():
+    lsm = LV.StripeMd(stripe_size=10, stripe_count=3, stripe_offset=0,
+                      objects=[])
+    # obj0 has 2 full stripes (20B): last byte at logical ((1)*3+0)*10+9=39
+    assert LV.logical_size(lsm, [20, 0, 0]) == 40
+    assert LV.logical_size(lsm, [10, 5, 0]) == 15
+    assert LV.logical_size(lsm, [0, 0, 0]) == 0
+
+
+def test_punch_truncates_per_object():
+    c, lov = mk()
+    lsm = lov.create(stripe_count=4, stripe_size=16)
+    lov.write(lsm, 0, bytes(range(256)))
+    lov.flush()
+    lov.punch(lsm, 100)
+    assert lov.getattr(lsm)["size"] == 100
+    assert lov.read(lsm, 0, 100) == bytes(range(100))
+
+
+def test_parallel_stripes_overlap_in_virtual_time():
+    """N stripes on N OSTs must take ~1/N the time of 1 stripe on 1 OST."""
+    c1, lov1 = mk(osts=1)
+    c4, lov4 = mk(osts=4)
+    data = bytes(1024) * 512                     # 512 KiB
+    lsm1 = lov1.create(stripe_count=1, stripe_size=1 << 16)
+    t0 = c1.now
+    lov1.write(lsm1, 0, data)
+    lov1.oscs[0].flush()
+    t1 = c1.now - t0
+    lsm4 = lov4.create(stripe_count=4, stripe_size=1 << 16)
+    t0 = c4.now
+    lov4.write(lsm4, 0, data)
+    lov4.flush()
+    t4 = c4.now - t0
+    assert t4 < t1 / 2                           # real parallel speedup
+
+
+def test_free_space_policy_prefers_empty_ost():
+    c, lov = mk(policy="free_space")
+    # fill OST0 substantially
+    big = lov.create(stripe_count=1, stripe_offset=0)
+    lov.write(big, 0, b"x" * (1 << 20))
+    lov.flush()
+    lsm = lov.create(stripe_count=1)
+    assert lsm.stripe_offset != 0
+
+
+def test_stripe_offset_pins_allocation():
+    c, lov = mk()
+    lsm = lov.create(stripe_count=2, stripe_offset=2)
+    assert lsm.objects[0]["ost"] == "OST0002"
+    assert lsm.objects[1]["ost"] == "OST0003"
+
+
+def test_raid1_mirror_write_and_failover_read():
+    c = LustreCluster(osts=2, mdses=1, clients=1, commit_interval=4)
+    rpc = c.make_client_rpc(0)
+    a, b = c.make_oscs(rpc, writeback=False)
+    r = LV.Raid1(a, b)
+    oid = r.create()
+    r.write(oid, 0, b"mirrored")
+    for t in c.ost_targets:
+        t.commit()
+    c.fail_node("ost0")
+    assert r.read(oid, 0, 8) == b"mirrored"
+    assert c.stats.counters["raid1.failover_read"] == 1
+
+
+def test_raid1_degraded_write_and_resync():
+    c = LustreCluster(osts=2, mdses=1, clients=1, commit_interval=4)
+    rpc = c.make_client_rpc(0)
+    a, b = c.make_oscs(rpc, writeback=False)
+    r = LV.Raid1(a, b)
+    oid = r.create()
+    r.write(oid, 0, b"00000000")
+    for t in c.ost_targets:
+        t.commit()
+    c.fail_node("ost1")
+    r.write(oid, 0, b"11111111")              # degraded: only mirror A
+    assert c.stats.counters["raid1.degraded_write"] == 1
+    c.restart_node("ost1")
+    assert r.resync() == 1
+    assert b.read(0, oid, 0, 8) == b"11111111"

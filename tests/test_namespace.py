@@ -1,0 +1,97 @@
+"""Global namespace: mount-objects + automounter (paper ch. 3) + procfs."""
+import pytest
+
+from repro.core import LustreCluster
+from repro.fsio import LustreClient
+from repro.fsio.namespace import (Automounter, GlobalNamespace, SETUID,
+                                  make_mount_object)
+
+
+def two_cells():
+    """Two independent clusters = two AFS-style cells."""
+    home = LustreCluster(osts=2, mdses=1, clients=2, commit_interval=32)
+    proj = LustreCluster(osts=2, mdses=1, clients=1, commit_interval=32)
+    fs_home = LustreClient(home).mount()
+    fs_proj = LustreClient(proj).mount()
+    fh = fs_proj.creat("/data.bin")
+    fs_proj.write(fh, b"project fileset payload")
+    fs_proj.close(fh)
+    fs_proj.mkdir("/sub")
+    fs_proj.creat("/sub/deep.txt")
+    return home, proj, fs_home, fs_proj
+
+
+def test_mount_object_traversal():
+    home, proj, fs_home, fs_proj = two_cells()
+    amd = Automounter()
+    amd.register("fileset://proj@cell2",
+                 lambda: LustreClient(proj, 0).mount())
+    make_mount_object(fs_home, "/mnt/proj", "fileset://proj@cell2")
+    gns = GlobalNamespace(fs_home, amd)
+    # traversal INTO the mount-object grafts the remote fileset
+    assert gns.read_file("/mnt/proj/data.bin") == b"project fileset payload"
+    assert gns.stat("/mnt/proj/sub/deep.txt")["type"] == "file"
+    assert amd.mounts == 1                       # cached after first walk
+
+
+def test_lookup_of_mount_object_does_not_mount():
+    """§3.3: `ls -l /mnt` must not cause a mount storm."""
+    home, proj, fs_home, fs_proj = two_cells()
+    amd = Automounter()
+    amd.register("fileset://proj@cell2",
+                 lambda: LustreClient(proj, 0).mount())
+    make_mount_object(fs_home, "/mnt/proj", "fileset://proj@cell2")
+    gns = GlobalNamespace(fs_home, amd)
+    st = gns.stat("/mnt/proj")                   # stat of the object itself
+    assert st["mode"] & SETUID
+    assert amd.mounts == 0                       # NOT mounted
+
+
+def test_mount_object_is_ordinary_directory():
+    """The paper's argument vs AFS: mount-objects are plain directories,
+    manageable through the standard API (link counts stay correct)."""
+    home, proj, fs_home, fs_proj = two_cells()
+    make_mount_object(fs_home, "/mnt/proj", "fileset://proj@cell2")
+    st = fs_home.stat("/mnt")
+    assert st["nlink"] == 3                      # '.' + '..' + proj
+    assert "proj" in fs_home.readdir("/mnt")
+    # removable with standard ops
+    fs_home.unlink("/mnt/proj/mntinfo")
+    fs_home.rmdir("/mnt/proj")
+    assert not fs_home.exists("/mnt/proj")
+
+
+def test_unknown_fileset_errors():
+    home, proj, fs_home, _ = two_cells()
+    amd = Automounter()
+    make_mount_object(fs_home, "/mnt/ghost", "fileset://nope")
+    gns = GlobalNamespace(fs_home, amd)
+    with pytest.raises(Exception):
+        gns.read_file("/mnt/ghost/x")
+
+
+def test_automount_expiry_remounts():
+    home, proj, fs_home, fs_proj = two_cells()
+    amd = Automounter()
+    amd.register("fileset://proj@cell2",
+                 lambda: LustreClient(proj, 0).mount())
+    make_mount_object(fs_home, "/mnt/proj", "fileset://proj@cell2")
+    gns = GlobalNamespace(fs_home, amd)
+    gns.stat("/mnt/proj/data.bin")
+    amd.expire("fileset://proj@cell2")
+    gns.stat("/mnt/proj/data.bin")               # remounts transparently
+    assert amd.mounts == 2
+
+
+def test_procfs_tree():
+    c = LustreCluster(osts=2, mdses=1, clients=1, commit_interval=8)
+    fs = LustreClient(c).mount()
+    fh = fs.creat("/x", stripe_count=2)
+    fs.write(fh, b"y" * 100)
+    fs.close(fh)
+    p = c.procfs()
+    assert p["targets"]["OST0000"]["kind"] == "obdfilter"
+    assert p["targets"]["OST0000"]["num_objects"] == 1
+    assert p["targets"]["MDS0000"]["num_inodes"] == 2   # root + /x
+    assert p["targets"]["MDS0000"]["last_transno"] > 0
+    assert p["counters"]["rpc.ost.write"] >= 1

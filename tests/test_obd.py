@@ -1,0 +1,170 @@
+"""OBD devices, transactions, llog, snapshots (paper ch. 5, 8)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import llog as L
+from repro.core import obd as O
+from repro.core.snapshot import SnapDevice
+
+
+def test_filter_crud():
+    d = O.FilterDevice("d", capacity=1 << 20)
+    out = d.create(0)
+    oid = out["oid"]
+    d.write(0, oid, 0, b"hello world")
+    assert d.read(0, oid, 0, 5) == b"hello"
+    assert d.getattr(0, oid)["size"] == 11
+    d.punch(0, oid, 5)
+    assert d.getattr(0, oid)["size"] == 5
+    d.destroy(0, oid)
+    with pytest.raises(O.ObdError):
+        d.getattr(0, oid)
+
+
+def test_create_with_requested_oid_and_eexist():
+    d = O.FilterDevice("d")
+    d.create(0, oid=4711)                      # §5.2.3: exact-id create
+    assert d.getattr(0, 4711)["size"] == 0
+    with pytest.raises(O.ObdError):
+        d.create(0, oid=4711)
+
+
+def test_object_groups_independent():
+    d = O.FilterDevice("d")
+    d.create(1, oid=5)
+    d.create(2, oid=5)                         # same oid, different group
+    d.write(1, 5, 0, b"g1")
+    d.write(2, 5, 0, b"g2")
+    assert d.read(1, 5, 0, 2) == b"g1"
+    assert d.read(2, 5, 0, 2) == b"g2"
+    assert d.list_objects(1) == [5]
+
+
+def test_enospc():
+    d = O.FilterDevice("d", capacity=100)
+    oid = d.create(0)["oid"]
+    with pytest.raises(O.ObdError):
+        d.write(0, oid, 0, b"x" * 200)
+
+
+def _apply(dev: O.FilterDevice, op) -> None:
+    kind, off, data = op
+    if kind == 0:
+        dev.write(0, 100, off, data)
+    elif kind == 1:
+        dev.punch(0, 100, off)
+    elif kind == 2:
+        dev.setattr(0, 100, tag=data.hex())
+    else:
+        dev.write(0, 100, off // 2, data * 2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 200),
+                          st.binary(min_size=1, max_size=64)),
+                min_size=1, max_size=24),
+       st.integers(0, 24))
+def test_crash_rolls_back_to_committed_prefix(ops, cut):
+    """Property (paper ch.11): after a crash, the device state equals the
+    state produced by exactly the committed prefix of operations.
+    Txn 1 is the create; op i is txn i+2."""
+    cut = min(cut, len(ops) + 1)
+
+    # device A: everything applied, then crash undoes txns > cut
+    undo_log = []
+    a = O.FilterDevice("a")
+    a.txn_hook = lambda undo: (undo_log.append(undo), len(undo_log))[1]
+    a.create(0, oid=100)
+    for op in ops:
+        _apply(a, op)
+    for t in range(len(undo_log), cut, -1):
+        undo_log[t - 1]()
+
+    # device B: only the committed prefix ever ran. Ops may produce ZERO
+    # transactions (no-op punch), so count txns exactly like A did and
+    # stop once the committed budget is used.
+    b = O.FilterDevice("b")
+    b_txns = [0]
+    b.txn_hook = lambda undo: (b_txns.__setitem__(0, b_txns[0] + 1),
+                               b_txns[0])[1]
+    if cut >= 1:
+        b.create(0, oid=100)
+        for op in ops:
+            if b_txns[0] >= cut:
+                break
+            _apply(b, op)
+
+    oa, ob = a.objects.get((0, 100)), b.objects.get((0, 100))
+    assert (oa is None) == (ob is None)
+    if oa is not None:
+        assert bytes(oa.data) == bytes(ob.data)
+        assert oa.attrs == ob.attrs
+        assert a.used == b.used
+
+
+# ------------------------------------------------------------------ llog
+
+def test_llog_add_cancel_pending():
+    cat = L.LlogCatalog("c")
+    recs = [cat.add("unlink", {"oid": i}) for i in range(10)]
+    assert len(cat.pending()) == 10
+    cat.cancel([recs[3].cookie, recs[7].cookie])
+    assert len(cat.pending()) == 8
+    assert all(r.payload["oid"] not in (3, 7) for r in cat.pending())
+
+
+def test_llog_catalog_rolls_plain_logs():
+    cat = L.LlogCatalog("c")
+    for i in range(150):
+        cat.add("x", {"i": i})
+    assert len(cat.logs) == 3                  # 64-cap plain logs
+    cat.cancel([r.cookie for r in cat.pending()][:64])
+    assert len(cat.pending()) == 86
+
+
+def test_llog_process_cancels_successful():
+    cat = L.LlogCatalog("c")
+    for i in range(6):
+        cat.add("x", {"i": i})
+    n = cat.process(lambda rec: rec.payload["i"] % 2 == 0)
+    assert n == 3 and len(cat.pending()) == 3
+
+
+# -------------------------------------------------------------- snapshot
+
+def test_snapshot_cow_versions():
+    bot = O.FilterDevice("bot")
+    cur = SnapDevice("cur", bot, 0)
+    oid = cur.create(0)["oid"]
+    cur.write(0, oid, 0, b"v1-data-x")
+    s1 = cur.snap_add("monday", time=1e9)
+    cur.write(0, oid, 0, b"v2-data-y")
+    s2 = cur.snap_add("tuesday", time=2e9)
+    cur.write(0, oid, 0, b"v3-data-z")
+    assert cur.read(0, oid, 0, 9) == b"v3-data-z"
+    assert SnapDevice("a", bot, s1).read(0, oid, 0, 9) == b"v1-data-x"
+    assert SnapDevice("b", bot, s2).read(0, oid, 0, 9) == b"v2-data-y"
+
+
+def test_snapshot_readonly_enforced():
+    bot = O.FilterDevice("bot")
+    cur = SnapDevice("cur", bot, 0)
+    oid = cur.create(0)["oid"]
+    cur.write(0, oid, 0, b"x")
+    idx = cur.snap_add("s", time=1e9)
+    ro = SnapDevice("ro", bot, idx)
+    with pytest.raises(O.ObdError):
+        ro.write(0, oid, 0, b"nope")
+    with pytest.raises(O.ObdError):
+        ro.destroy(0, oid)
+
+
+def test_snapshot_restore():
+    bot = O.FilterDevice("bot")
+    cur = SnapDevice("cur", bot, 0)
+    oid = cur.create(0)["oid"]
+    cur.write(0, oid, 0, b"original!")
+    idx = cur.snap_add("keep", time=1e9)
+    cur.write(0, oid, 0, b"clobbered")
+    cur.snap_restore(idx)
+    assert cur.read(0, oid, 0, 9) == b"original!"

@@ -1,0 +1,191 @@
+"""Recovery: replay, failover, orphans, consistent cut (ch. 11, 29)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LustreCluster
+from repro.core import ptlrpc as R
+from repro.core.mds import ROOT_FID
+from repro.core.recovery import Pinger, compute_consistent_cut
+from repro.fsio import LustreClient
+
+
+def test_mds_crash_replays_namespace_ops():
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=10_000)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/d")
+    fh = fs.creat("/d/f")
+    fs.write(fh, b"payload")
+    fs.close(fh)
+    c.fail_node("mds0")
+    c.restart_node("mds0")
+    st_ = fs.stat("/d/f")
+    assert st_["size"] == 7
+    assert c.stats.counters["rpc.replay"] >= 2
+
+
+def test_unlink_llog_reshipped_after_mds_crash():
+    """MDS crashed after unlink committed but before OST destroys were
+    confirmed: pending llog records re-ship the destroys (§6.7.5)."""
+    c = LustreCluster(osts=2, mdses=1, clients=1, commit_interval=1)
+    fs = LustreClient(c).mount()
+    fh = fs.creat("/f", stripe_count=2)
+    fs.write(fh, b"x" * 100)
+    fs.close(fh)
+    mds = c.mds_targets[0]
+    # unlink via MDS only — simulate the client dying before destroying
+    # the objects (rep carries cookies nobody acts on)
+    rep = fs.lmv.reint({"type": "unlink", "parent": ROOT_FID, "name": "f"})
+    assert len(mds.unlink_llog.pending()) == 2
+    objs_before = sum(len(t.obd.objects) for t in c.ost_targets)
+    assert objs_before == 2
+    # MDS recovery re-processes pending records -> objects destroyed
+    n = mds.process_unlink_llog(mds.osts)
+    assert n == 2
+    assert sum(len(t.obd.objects) for t in c.ost_targets) == 0
+    assert not mds.unlink_llog.pending()
+
+
+def test_orphan_cleanup_unreferenced_objects():
+    """Client created objects then died before writing the EA (§6.7.5)."""
+    c = LustreCluster(osts=2, mdses=1, clients=1, commit_interval=4)
+    fs = LustreClient(c).mount()
+    fh = fs.creat("/real", stripe_count=2)       # referenced objects
+    fs.write(fh, b"keep")
+    fs.close(fh)
+    # orphans: raw object creates with no file EA pointing at them
+    fs.lov.create(stripe_count=2)
+    mds = c.mds_targets[0]
+    out = mds.orphan_cleanup(mds.osts, group=0)
+    destroyed = sum(len(v) for v in out.values())
+    assert destroyed == 2
+    fh = fs.open("/real")
+    assert fs.read(fh, 4) == b"keep"             # referenced data intact
+
+
+def test_pinger_detects_down_targets(cluster):
+    rpc = cluster.make_client_rpc(0)
+    oscs = cluster.make_oscs(rpc, writeback=False)
+    oscs[0].statfs()
+    p = Pinger([o.imp for o in oscs])
+    assert all(p.tick().values())
+    cluster.fail_node("ost2")
+    cluster.fail_node("ost3")                     # kill its standby too
+    res = p.tick()
+    assert not res["OST0002"]
+    assert "OST0002" in p.down
+
+
+# ------------------------------------------------------ consistent cut
+
+def test_cut_pure_no_deps():
+    states = {"a": {"committed": 5, "deps": []},
+              "b": {"committed": 9, "deps": []}}
+    assert compute_consistent_cut(states) == {"a": 5, "b": 9}
+
+
+def test_cut_excludes_dependent_txn():
+    # a's txn 5 depends on b's txn 10 which b lost (committed 9)
+    states = {"a": {"committed": 5, "deps": [(5, {"b": 10})]},
+              "b": {"committed": 9, "deps": []}}
+    assert compute_consistent_cut(states) == {"a": 4, "b": 9}
+
+
+def test_cut_bidirectional():
+    # b committed the subordinate half (txn 7) of a's lost txn 6
+    states = {"a": {"committed": 5, "deps": [(6, {"b": 7})]},
+              "b": {"committed": 8, "deps": []}}
+    cut = compute_consistent_cut(states)
+    assert cut == {"a": 5, "b": 6}
+
+
+def test_cut_cascades():
+    states = {
+        "a": {"committed": 3, "deps": [(2, {"b": 2})]},
+        "b": {"committed": 1, "deps": [(1, {"c": 4})]},
+        "c": {"committed": 3, "deps": []},
+    }
+    cut = compute_consistent_cut(states)
+    # b2 excluded (b committed only 1) -> a2 excluded -> a=1
+    # b1 depends on c4 excluded (c committed 3) -> b=0
+    assert cut == {"a": 1, "b": 0, "c": 3}
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.dictionaries(
+    st.sampled_from(["a", "b", "c"]),
+    st.fixed_dictionaries({
+        "committed": st.integers(0, 10),
+        "deps": st.lists(st.tuples(
+            st.integers(1, 10),
+            st.dictionaries(st.sampled_from(["a", "b", "c"]),
+                            st.integers(1, 10), max_size=2)),
+            max_size=5)}),
+    min_size=1, max_size=3))
+def test_cut_properties(states):
+    cut = compute_consistent_cut(states)
+    for u, s in states.items():
+        assert 0 <= cut[u] <= s["committed"]
+        # closure: any included txn's dependencies are included
+        for t, deps in s["deps"]:
+            included = t <= cut[u]
+            for peer, pt in deps.items():
+                if peer in cut:
+                    if included:
+                        assert pt <= cut[peer]
+                    if pt <= cut[peer]:
+                        assert included or t > s["committed"] or included
+
+
+def test_double_mds_failure_rolls_back_consistently():
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=6)
+    fs = LustreClient(c).mount()
+    dfid = fs.mkdir("/d")
+    fs.creat("/d/committed")
+    for t in c.mds_targets:
+        t.commit()
+    fs.creat("/x")
+    fs.rename("/x", "/d/x2")                     # cross-MDS, uncommitted
+    c.fail_node("mds0")
+    c.fail_node("mds1")
+    c.restart_node("mds0")
+    c.restart_node("mds1")
+    rec = c.mds_recovery(LustreClient(c).mount().rpc)
+    rec.rollback_after_failure()
+    fresh = LustreClient(c).mount()
+    d = fresh.readdir("/d")
+    assert "committed" in d and "x2" not in d
+    assert "x" not in fresh.readdir("/")
+
+
+def test_steady_state_snapshot_prunes_history():
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=4)
+    fs = LustreClient(c).mount()
+    for i in range(8):
+        fs.creat(f"/f{i}")
+    for t in c.mds_targets:
+        t.commit()
+    rec = c.mds_recovery(fs.rpc)
+    cut = rec.snapshot()
+    assert cut["MDS0000"] > 0          # all activity was on mds0
+    assert all(len(t.undo_history) == 0 or
+               min(tr for tr, _ in t.undo_history) > cut[t.uuid]
+               for t in c.mds_targets)
+
+
+def test_gateway_failover_with_lctl():
+    from repro.core import osc as osc_mod
+    c = LustreCluster(osts=1, mdses=1, clients=0)
+    gw0 = R.Node("gw0", "elan", c)
+    gw1 = R.Node("gw1", "elan", c)
+    for net in ("elan", "tcp"):
+        c.network.add_route(net, gw0.nid)
+        c.network.add_route(net, gw1.nid)
+    cl = R.Node("tclient", "tcp", c)
+    rpc = R.RpcClient(cl)
+    osc = osc_mod.Osc(rpc, "OST0000", [c.ost_targets[0].node.nid],
+                      writeback=False)
+    oid = osc.create(0)["oid"]
+    osc.write(0, oid, 0, b"via-gw")
+    c.sim.faults.down_nids.add(gw0.nid)
+    c.lctl("set_gw", gw0.nid, "down")
+    assert osc.read(0, oid, 0, 6) == b"via-gw"

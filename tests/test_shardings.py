@@ -1,0 +1,108 @@
+"""Sharding resolution + HLO cost analyzer properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel import shardings as sh
+from repro.tools import hlo_cost
+
+
+def mesh2(d=2, m=2):
+    devs = np.array(jax.devices()[:1] * (d * m)).reshape(d, m)
+    return Mesh(devs, ("data", "model"))
+
+
+# resolve_spec is pure given mesh axis sizes: test the logic via a real
+# 1-device mesh is impossible for >1 axes, so fabricate with repeated
+# device (allowed for spec computation only).
+
+def test_resolve_divisibility():
+    m = mesh2(2, 2)
+    assert sh.resolve_spec(m, ("batch", None), (4, 3)) == P("data", None)
+    assert sh.resolve_spec(m, ("batch", None), (3, 3)) == P(None, None)
+    assert sh.resolve_spec(m, (None, "model"), (3, 4)) == P(None, "model")
+    assert sh.resolve_spec(m, (None, "model"), (3, 5)) == P(None, None)
+
+
+def test_model2_fallback():
+    m = mesh2(2, 2)
+    # kv-heads (3) not divisible -> head_dim picks up the model axis
+    spec = sh.resolve_spec(m, (None, "model", "model2"), (8, 3, 4))
+    assert spec == P(None, None, "model")
+    # kv-heads divisible -> head_dim stays replicated
+    spec = sh.resolve_spec(m, (None, "model", "model2"), (8, 4, 4))
+    assert spec == P(None, "model", None)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       st.lists(st.sampled_from(["batch", "model", "model2", None]),
+                min_size=1, max_size=4))
+def test_resolve_never_overshards(dims, logical):
+    n = min(len(dims), len(logical))
+    dims, logical = dims[:n], logical[:n]
+    m = mesh2(2, 2)
+    spec = sh.resolve_spec(m, logical, dims)
+    sizes = {"data": 2, "model": 2, ("pod", "data"): 4}
+    model_used = 0
+    for dim, s in zip(dims, spec):
+        if s is None:
+            continue
+        ax = 2 if isinstance(s, str) else 4
+        assert dim % ax == 0           # sharded dims always divide
+        if s == "model" or (isinstance(s, tuple) and "model" in s):
+            model_used += 1
+    assert model_used <= 1             # model axis claimed at most once
+
+
+# ------------------------------------------------------------- hlo cost
+
+def test_flops_counting_simple_matmul():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 512), jnp.float32)
+    compiled = jax.jit(lambda x, y: x @ y).lower(a, b).compile()
+    rep = hlo_cost.analyze(compiled.as_text())
+    want = 2 * 128 * 256 * 512
+    assert abs(rep.flops - want) / want < 0.01
+
+
+def test_flops_scan_multiplied_by_trip_count():
+    w = jnp.zeros((4, 64, 64), jnp.float32)
+
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        out, _ = jax.lax.scan(body, x, w)
+        return out
+
+    x = jnp.zeros((64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(x, w).compile()
+    rep = hlo_cost.analyze(compiled.as_text())
+    want = 4 * 2 * 64 * 64 * 64
+    assert abs(rep.flops - want) / want < 0.01
+    assert rep.n_while == 1
+    # XLA's own analysis undercounts the loop (this is WHY hlo_cost exists)
+    xla = compiled.cost_analysis()
+    if xla and xla.get("flops"):
+        assert xla["flops"] <= rep.flops
+
+
+def test_collective_bytes_counted():
+    try:
+        mesh = jax.make_mesh((1,), ("x",))
+    except Exception:
+        pytest.skip("no mesh")
+    # single-device: no collectives expected
+    f = jax.jit(lambda x: x * 2)
+    rep = hlo_cost.analyze(f.lower(jnp.zeros((8, 8))).compile().as_text())
+    assert rep.collective_bytes == 0
+
+
+def test_shape_bytes_parser():
+    assert hlo_cost.shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert hlo_cost.shape_bytes("bf16[2,2]") == 8
+    assert hlo_cost.shape_bytes("(f32[4], s32[2])") == 24
+    assert hlo_cost.shape_bytes("token[]") == 0
