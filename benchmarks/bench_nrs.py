@@ -1,0 +1,83 @@
+"""NRS policies under multi-client contention (ISSUE 1).
+
+Two scenarios on a single shared OST:
+  * fairness — a heavy client bursts 32 writes while a light client needs
+    one; CRR keeps the light client's latency flat while FIFO makes it
+    wait behind the whole backlog;
+  * TBF QoS — a rate rule throttles one tenant to `rate` requests/sec
+    while the other tenant runs at full speed.
+"""
+from __future__ import annotations
+
+from benchmarks.common import save, table, vtime
+from repro.core import LustreCluster
+
+SVC_COST = 2e-3          # make the OST CPU the bottleneck, not the links
+
+
+def _osc(c, idx):
+    return c.make_oscs(c.make_client_rpc(idx), writeback=False)[0]
+
+
+def fairness(policy: str) -> dict:
+    c = LustreCluster(osts=1, mdses=1, clients=2, commit_interval=256,
+                      nrs_policy=policy)
+    c.ost_targets[0].service.cpu_cost = SVC_COST
+    heavy, light = _osc(c, 0), _osc(c, 1)
+    h_oid = heavy.create(0)["oid"]
+    l_oid = light.create(0)["oid"]
+    out = {}
+
+    def l_one():
+        t0 = c.now
+        light.write(0, l_oid, 0, b"l" * 64)
+        out["light_latency_ms"] = (c.now - t0) * 1e3
+    t0 = c.now
+    c.sim.parallel(
+        [(lambda i=i: heavy.write(0, h_oid, i * 64, b"h" * 64))
+         for i in range(32)] + [l_one])
+    out["makespan_ms"] = (c.now - t0) * 1e3
+    return out
+
+
+def tbf() -> dict:
+    c = LustreCluster(osts=1, mdses=1, clients=2, commit_interval=256)
+    slow, fast = _osc(c, 0), _osc(c, 1)
+    c.lctl("nrs", "OST0000", "tbf",
+           {"rate": 1e9, "burst": 1.0, "rules": {slow.rpc.uuid: 100.0}})
+    s_oid = slow.create(0)["oid"]
+    f_oid = fast.create(0)["oid"]
+    n = 50
+
+    def run(osc, oid):
+        for i in range(n):
+            osc.write(0, oid, i * 64, b"x" * 64)
+    _, t_fast = vtime(c, lambda: run(fast, f_oid))
+    _, t_slow = vtime(c, lambda: run(slow, s_oid))
+    return {"rate_limit_rps": 100.0,
+            "throttled_rps": round(n / t_slow, 1),
+            "unthrottled_rps": round(n / t_fast, 1),
+            "throttled_s": t_slow, "unthrottled_s": t_fast}
+
+
+def run() -> dict:
+    fair = {p: fairness(p) for p in ("fifo", "crr", "orr")}
+    qos = tbf()
+    rows = [[p, f"{v['light_latency_ms']:.1f}", f"{v['makespan_ms']:.1f}"]
+            for p, v in fair.items()]
+    table("light-client latency vs heavy 32-write burst (1 OST)",
+          ["policy", "light lat ms", "makespan ms"], rows)
+    table("TBF QoS: 100 req/s rule on one tenant",
+          ["tenant", "req/s"],
+          [["throttled", qos["throttled_rps"]],
+           ["unthrottled", qos["unthrottled_rps"]]])
+    out = {"fairness": fair, "tbf": qos}
+    save("nrs", out)
+    assert fair["crr"]["light_latency_ms"] < \
+        fair["fifo"]["light_latency_ms"] / 3
+    assert qos["throttled_rps"] <= 110.0
+    return out
+
+
+if __name__ == "__main__":
+    run()

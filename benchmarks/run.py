@@ -3,15 +3,64 @@
     PYTHONPATH=src python -m benchmarks.run [--only striping,...]
 
 Results land in results/bench/*.json; a summary prints per bench.
+Every run also emits BENCH_rpc.json (repo root): OST_WRITE RPC count +
+wall/virtual time for a striped-write workload, seed-style one-RPC-per-
+extent vs the vectored BRW pipeline — the perf trajectory tracked from
+ISSUE 1 onward.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
-BENCHES = ["striping", "intents", "dlm", "recovery", "cobd",
+BENCHES = ["striping", "nrs", "intents", "dlm", "recovery", "cobd",
            "checkpoint", "parity"]
+
+RPC_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_rpc.json")
+
+
+def bench_rpc() -> dict:
+    """Striped-write RPC trajectory: 8 MiB over 4 stripes, written in
+    64 KiB logical chunks, flushed once — legacy (vectored_brw=False,
+    the seed's one-RPC-per-dirty-extent) vs the vectored BRW pipeline."""
+    from repro.core import LustreCluster
+    from repro.fsio import LustreClient
+
+    size, chunk = 8 << 20, 64 << 10
+    out = {}
+    for mode, vectored in (("seed_like", False), ("vectored", True)):
+        wall0 = time.time()
+        c = LustreCluster(osts=4, mdses=1, clients=1, commit_interval=512,
+                          vectored_brw=vectored)
+        fs = LustreClient(c).mount()
+        fh = fs.creat("/rpc.bin", stripe_count=4, stripe_size=1 << 20)
+        data = bytes(chunk)
+        t0 = c.now
+        for off in range(0, size, chunk):
+            fs.write(fh, data, offset=off)
+        fs.fsync(fh)
+        out[mode] = {
+            "ost_write_rpcs": c.stats.counters.get("rpc.ost.write", 0),
+            "write_vtime_s": round(c.now - t0, 6),
+            "wall_time_s": round(time.time() - wall0, 3),
+            "bytes": size,
+        }
+        fs.close(fh)
+    v, s = out["vectored"], out["seed_like"]
+    out["rpc_reduction"] = round(
+        s["ost_write_rpcs"] / max(1, v["ost_write_rpcs"]), 2)
+    with open(RPC_JSON, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\n== BENCH_rpc: striped 8 MiB write ==\n"
+          f"  seed-like: {s['ost_write_rpcs']} OST_WRITE RPCs "
+          f"({s['write_vtime_s']:.4f}s vtime)\n"
+          f"  vectored:  {v['ost_write_rpcs']} OST_WRITE RPCs "
+          f"({v['write_vtime_s']:.4f}s vtime)  "
+          f"[{out['rpc_reduction']}x fewer]")
+    return out
 
 
 def main():
@@ -21,19 +70,29 @@ def main():
     todo = args.only.split(",") if args.only else BENCHES
     failures = []
     for name in todo:
-        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
         t0 = time.time()
         try:
+            mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
             mod.run()
             print(f"[{name}] done in {time.time()-t0:.1f}s wall")
         except Exception as e:  # noqa: BLE001
             import traceback
             traceback.print_exc()
             failures.append((name, repr(e)))
+    try:
+        rpc = bench_rpc()
+        if rpc["vectored"]["ost_write_rpcs"] >= \
+                rpc["seed_like"]["ost_write_rpcs"]:
+            failures.append(("BENCH_rpc", "vectored BRW did not reduce "
+                             "OST_WRITE RPC count"))
+    except Exception as e:  # noqa: BLE001
+        import traceback
+        traceback.print_exc()
+        failures.append(("BENCH_rpc", repr(e)))
     if failures:
         print("FAILURES:", failures)
         sys.exit(1)
-    print(f"\nall {len(todo)} benchmarks OK")
+    print(f"\nall {len(todo)} benchmarks OK (+ BENCH_rpc.json)")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,8 @@ Layers (bottom up, mirroring Part 1 of the paper):
     portals    — message passing: portals, match entries, MDs, events (ch.4)
     ptlrpc     — request processing: xids, exports/imports, bulk,
                  transactions + replay/resend recovery (ch.4, 22, 23, 29)
+    nrs        — network request scheduler: pluggable per-target request
+                 ordering policies (fifo/crr/orr/tbf) + accounting
     dlm        — distributed lock manager: 6 modes, extents, intents, ASTs
                  (ch.7, 27)
     obd        — object devices: class driver + filter direct driver (ch.5)

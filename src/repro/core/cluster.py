@@ -28,9 +28,18 @@ class LustreCluster(R.ClusterBase):
     def __init__(self, *, osts: int = 2, mdses: int = 1, clients: int = 1,
                  net: str = "elan", ost_capacity: int = 1 << 40,
                  ost_failover: bool = False, seed: int = 0,
-                 commit_interval: int = 64, mds_split_threshold: int = 0):
+                 commit_interval: int = 64, mds_split_threshold: int = 0,
+                 nrs_policy: str = "fifo", nrs_params: dict | None = None,
+                 max_pages_per_rpc: int = osc_mod.DEFAULT_MAX_PAGES_PER_RPC,
+                 max_rpcs_in_flight: int = osc_mod.DEFAULT_MAX_RPCS_IN_FLIGHT,
+                 vectored_brw: bool = True):
         super().__init__(seed)
         self.net = net
+        # client-side BRW pipeline knobs, handed to every OSC built via
+        # make_oscs/make_lov (overridable per call)
+        self.max_pages_per_rpc = max_pages_per_rpc
+        self.max_rpcs_in_flight = max_rpcs_in_flight
+        self.vectored_brw = vectored_brw
         self.ost_targets: list[ost_mod.OstTarget] = []
         self.mds_targets: list[mds_mod.MdsTarget] = []
         self.client_nodes: list[R.Node] = []
@@ -41,6 +50,8 @@ class LustreCluster(R.ClusterBase):
             node = R.Node(f"ost{i}", net, self)
             t = ost_mod.OstTarget(f"OST{i:04d}", node, ost_capacity)
             t.commit_interval = commit_interval
+            if nrs_policy != "fifo" or nrs_params:
+                t.service.set_policy(nrs_policy, **(nrs_params or {}))
             self.ost_targets.append(t)
         self.ost_nids = {}
         for i, t in enumerate(self.ost_targets):
@@ -82,13 +93,24 @@ class LustreCluster(R.ClusterBase):
     def make_client_rpc(self, idx: int = 0) -> R.RpcClient:
         return R.RpcClient(self.client_nodes[idx])
 
-    def make_oscs(self, rpc: R.RpcClient, writeback=True):
+    def make_oscs(self, rpc: R.RpcClient, writeback=True, **osc_kw):
+        osc_kw.setdefault("max_pages_per_rpc", self.max_pages_per_rpc)
+        osc_kw.setdefault("max_rpcs_in_flight", self.max_rpcs_in_flight)
+        osc_kw.setdefault("vectored_brw", self.vectored_brw)
         return [osc_mod.Osc(rpc, t.uuid, self.ost_nids[t.uuid],
-                            writeback=writeback)
+                            writeback=writeback, **osc_kw)
                 for t in self.ost_targets]
 
-    def make_lov(self, rpc: R.RpcClient, **kw) -> lov_mod.Lov:
-        return lov_mod.Lov(self.make_oscs(rpc), **kw)
+    def make_lov(self, rpc: R.RpcClient, policy: str = "round_robin",
+                 group: int = 0, writeback=True, **osc_kw) -> lov_mod.Lov:
+        return lov_mod.Lov(self.make_oscs(rpc, writeback, **osc_kw),
+                           group=group, policy=policy)
+
+    def target(self, uuid: str):
+        for t in self.ost_targets + self.mds_targets:
+            if t.uuid == uuid:
+                return t
+        raise KeyError(uuid)
 
     def make_lmv(self, rpc: R.RpcClient) -> mdc_mod.Lmv:
         return mdc_mod.Lmv([
@@ -115,6 +137,11 @@ class LustreCluster(R.ClusterBase):
             self.restart_node(args[0])
         elif verb == "drop_next":
             self.sim.faults.drop_next[args[0]] += int(args[1])
+        elif verb == "nrs":
+            # lctl("nrs", target_uuid, policy_name[, params_dict])
+            uuid, policy = args[0], args[1]
+            params = args[2] if len(args) > 2 else {}
+            self.target(uuid).service.set_policy(policy, **params)
         else:
             raise ValueError(verb)
 
@@ -136,6 +163,7 @@ class LustreCluster(R.ClusterBase):
                 "num_objects": len(t.obd.objects),
                 "locks": sum(len(r.granted)
                              for r in t.ldlm.resources.values()),
+                "nrs": t.service.policy.info(),
             }
         for t in self.mds_targets:
             out["targets"][t.uuid] = {
@@ -149,6 +177,7 @@ class LustreCluster(R.ClusterBase):
                 "pending_unlink_llog": len(t.unlink_llog.pending()),
                 "locks": sum(len(r.granted)
                              for r in t.ldlm.resources.values()),
+                "nrs": t.service.policy.info(),
             }
         return out
 

@@ -37,8 +37,14 @@ class StripeMd:
 
 
 def _chunks(lsm: StripeMd, offset: int, length: int):
-    """Split a logical extent into (stripe_idx, obj_offset, length) runs."""
+    """Split a logical extent into (stripe_idx, obj_offset, length, lpos)
+    runs.  Zero-length I/O yields no runs, every emitted run has length
+    > 0 (extents ending exactly on a stripe boundary never produce an
+    empty trailing run), and object-contiguous runs of the same stripe
+    (stripe_count == 1) are merged so they coalesce into one niobuf."""
     ssz, cnt = lsm.stripe_size, lsm.stripe_count
+    if length <= 0 or ssz <= 0 or cnt <= 0:
+        return []
     out = []
     pos = offset
     end = offset + length
@@ -48,7 +54,14 @@ def _chunks(lsm: StripeMd, offset: int, length: int):
         in_off = pos % ssz
         run = min(ssz - in_off, end - pos)
         obj_off = (snum // cnt) * ssz + in_off
-        out.append((sidx, obj_off, run, pos))
+        prev = out[-1] if out else None
+        if (prev is not None and prev[0] == sidx
+                and prev[1] + prev[2] == obj_off
+                and prev[3] + prev[2] == pos):
+            # same object, contiguous on both axes: extend the run
+            out[-1] = (sidx, prev[1], prev[2] + run, prev[3])
+        else:
+            out.append((sidx, obj_off, run, pos))
         pos += run
     return out
 
@@ -58,7 +71,7 @@ def logical_size(lsm: StripeMd, obj_sizes: list[int]) -> int:
     ssz, cnt = lsm.stripe_size, lsm.stripe_count
     best = 0
     for i, s in enumerate(obj_sizes):
-        if s <= 0:
+        if s <= 0 or i >= cnt:
             continue
         last = s - 1
         logical_last = ((last // ssz) * cnt + i) * ssz + (last % ssz)
@@ -115,30 +128,48 @@ class Lov:
 
     def write(self, lsm: StripeMd, offset: int, data: bytes,
               gid: int = 0) -> int:
+        """Striped write: logical runs are grouped per stripe object and
+        dispatched concurrently as ONE vectored call per object (the OSC
+        coalesces them into BRW niobuf vectors)."""
         runs = _chunks(lsm, offset, len(data))
+        if not runs:
+            return 0
+        by_stripe: dict[int, list] = {}
+        for sidx, obj_off, ln, lpos in runs:
+            by_stripe.setdefault(sidx, []).append(
+                (obj_off, data[lpos - offset:lpos - offset + ln]))
 
-        def wr(sidx, obj_off, ln, lpos):
+        def wr(sidx, iov):
             o = lsm.objects[sidx]
-            self._osc(lsm, sidx).write(
-                o["group"], o["oid"], obj_off,
-                data[lpos - offset:lpos - offset + ln], gid=gid)
-            return ln
+            self._osc(lsm, sidx).writev(o["group"], o["oid"], iov, gid=gid)
 
-        self.sim.parallel([(lambda a=r: wr(*a)) for r in runs])
+        self.sim.parallel([(lambda s=s, v=v: wr(s, v))
+                           for s, v in by_stripe.items()])
         return len(data)
 
     def read(self, lsm: StripeMd, offset: int, length: int) -> bytes:
+        """Striped read: one vectored OST_READ per stripe object, issued
+        concurrently; partial results are merged by logical position."""
         runs = _chunks(lsm, offset, length)
+        if not runs:
+            return b""
+        by_stripe: dict[int, list] = {}
+        for sidx, obj_off, ln, lpos in runs:
+            by_stripe.setdefault(sidx, []).append((obj_off, ln, lpos))
 
-        def rd(sidx, obj_off, ln, lpos):
+        def rd(sidx, iov):
             o = lsm.objects[sidx]
-            return lpos, self._osc(lsm, sidx).read(
-                o["group"], o["oid"], obj_off, ln)
+            chunks = self._osc(lsm, sidx).readv(
+                o["group"], o["oid"], [(off, ln) for off, ln, _ in iov])
+            return [(lpos, chunk)
+                    for (_, _, lpos), chunk in zip(iov, chunks)]
 
-        parts = self.sim.parallel([(lambda a=r: rd(*a)) for r in runs])
+        parts = self.sim.parallel([(lambda s=s, v=v: rd(s, v))
+                                   for s, v in by_stripe.items()])
         buf = bytearray(length)
-        for lpos, chunk in parts:
-            buf[lpos - offset:lpos - offset + len(chunk)] = chunk
+        for group in parts:
+            for lpos, chunk in group:
+                buf[lpos - offset:lpos - offset + len(chunk)] = chunk
         return bytes(buf)
 
     def getattr(self, lsm: StripeMd) -> dict:

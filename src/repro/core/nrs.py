@@ -1,0 +1,229 @@
+"""Network Request Scheduler (NRS): pluggable per-target request ordering.
+
+The paper's service loops (ch. 22-23) drain each request queue strictly
+FIFO.  At scale that lets one aggressive client starve everyone sharing an
+OST, so production Lustre grew an NRS framework between the request-in
+event and the handler.  This module reproduces that layer for our
+synchronous simulator.
+
+Because the cluster runs synchronously with an analytic virtual clock,
+policies do not physically reorder a queue; they decide *when in virtual
+time* the service picks each request up.  `schedule(req, arrival, cost)`
+returns the virtual start instant and advances the policy's internal
+chains:
+
+  * ``fifo`` — one busy chain: start = max(arrival, busy_until).  Exactly
+    the seed service-loop behaviour.
+  * ``crr``  — client round-robin via start-time fair queueing: one chain
+    per client, each charged cost x n_active (every active client gets a
+    1/n share), so a light client's latency is independent of a heavy
+    client's backlog.
+  * ``orr``  — object round-robin: the same fair chains keyed by
+    (group, oid), modelling per-object batched ordering (disk-friendly
+    grouping; requests to a cold object never wait behind a hot one).
+  * ``tbf``  — token bucket filter QoS: per-class buckets (class = client
+    uuid, or a ``rules`` override per uuid) delay a request's start until
+    a token is available, enforcing requests/sec rate limits.
+
+Every policy keeps request accounting (per-client and per-object counts,
+total queue wait) exposed through ``info()`` — the substrate for the
+fairness/observability work Brim et al. and Doreau motivate — surfaced in
+``LustreCluster.procfs()["targets"][uuid]["nrs"]``.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+# Control-plane ops are never throttled or fair-queued: delaying a
+# connect/ping turns QoS into a recovery hazard.
+CONTROL_OPS = {"connect", "disconnect", "ping"}
+
+
+class NrsPolicy:
+    """Base policy: accounting + the FIFO busy chain helpers."""
+
+    name = "fifo"
+
+    def __init__(self, sim, **params):
+        self.sim = sim
+        self.params = dict(params)
+        self.busy_until = 0.0
+        self.n_reqs = 0
+        self.total_wait = 0.0
+        self.per_client = defaultdict(int)
+        self.per_object = defaultdict(int)
+
+    # ------------------------------------------------------------ schedule
+    def schedule(self, req, arrival: float, cost: float) -> float:
+        """Return the virtual-time start for `req` arriving at `arrival`
+        whose handler occupies the service for `cost` seconds."""
+        raise NotImplementedError
+
+    # ---------------------------------------------------------- accounting
+    def _account(self, req, arrival: float, start: float):
+        self.n_reqs += 1
+        self.total_wait += max(0.0, start - arrival)
+        self.per_client[req.client_uuid] += 1
+        oid = req.body.get("oid")
+        if oid is not None:
+            self.per_object[(req.body.get("group", 0), oid)] += 1
+
+    def info(self) -> dict:
+        return {
+            "policy": self.name,
+            "reqs": self.n_reqs,
+            "clients": len(self.per_client),
+            "objects": len(self.per_object),
+            "total_queue_wait_s": round(self.total_wait, 6),
+            "avg_queue_wait_us": round(
+                1e6 * self.total_wait / self.n_reqs, 3) if self.n_reqs else 0.0,
+            "per_client": dict(self.per_client),
+        }
+
+
+class FifoPolicy(NrsPolicy):
+    """Strict arrival order — the seed's implicit policy."""
+
+    name = "fifo"
+
+    def schedule(self, req, arrival, cost):
+        start = max(arrival, self.busy_until)
+        self.busy_until = start + cost
+        self._account(req, arrival, start)
+        return start
+
+
+class RoundRobinPolicy(NrsPolicy):
+    """Client round-robin (CRR): start-time fair queueing across clients.
+
+    Each class keeps its own busy chain; a request starts at
+    max(arrival, own chain) and extends the chain by cost x n_active, so
+    n concurrently active classes each see ~1/n of the service rate and
+    none waits behind another's backlog.
+    """
+
+    name = "crr"
+
+    def __init__(self, sim, **params):
+        super().__init__(sim, **params)
+        self.chains: dict = {}
+
+    def classify(self, req):
+        return req.client_uuid
+
+    def schedule(self, req, arrival, cost):
+        if req.opcode in CONTROL_OPS:
+            self._account(req, arrival, arrival)
+            return arrival
+        key = self.classify(req)
+        # chains still running at this arrival are the active sharers
+        active = {k for k, t in self.chains.items() if t > arrival}
+        active.add(key)
+        start = max(arrival, self.chains.get(key, 0.0))
+        self.chains[key] = start + cost * len(active)
+        self.busy_until = max(self.busy_until, self.chains[key])
+        self._account(req, arrival, start)
+        return start
+
+
+class OrrPolicy(RoundRobinPolicy):
+    """Object round-robin (ORR): fair chains keyed by (group, oid), so
+    requests batch per object; a cold object is served immediately even
+    while a hot object has a deep backlog."""
+
+    name = "orr"
+
+    def __init__(self, sim, **params):
+        super().__init__(sim, **params)
+        self._last_key = None
+        self.batch_switches = 0
+
+    def classify(self, req):
+        oid = req.body.get("oid")
+        if oid is None:
+            return ("client", req.client_uuid)
+        key = ("obj", req.body.get("group", 0), oid)
+        if key != self._last_key:
+            self.batch_switches += 1
+            self._last_key = key
+        return key
+
+    def info(self):
+        out = super().info()
+        out["batch_switches"] = self.batch_switches
+        out["per_object"] = {f"{g}:{o}": n
+                             for (g, o), n in self.per_object.items()}
+        return out
+
+
+class TbfPolicy(NrsPolicy):
+    """Token Bucket Filter QoS: rate-limit request starts per class.
+
+    params:
+      rate  — default tokens/sec for every class (1 token per request)
+      burst — bucket depth (allows short bursts at line rate)
+      rules — {client_uuid: rate} overrides (a tenant-throttling rule)
+    """
+
+    name = "tbf"
+
+    def __init__(self, sim, rate: float = 1000.0, burst: float = 4.0,
+                 rules: dict | None = None, **params):
+        super().__init__(sim, **params)
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.rules = dict(rules or {})
+        # class -> (tokens, last_update_time)
+        self.buckets: dict = {}
+        self.throttled = 0
+
+    def rate_for(self, key) -> float:
+        return float(self.rules.get(key, self.rate))
+
+    def schedule(self, req, arrival, cost):
+        if req.opcode in CONTROL_OPS:
+            self._account(req, arrival, arrival)
+            return arrival
+        key = req.client_uuid
+        rate = max(1e-9, self.rate_for(key))
+        tokens, last = self.buckets.get(key, (self.burst, arrival))
+        # refill up to the arrival instant (clock may rewind between
+        # parallel thunks — never refill backwards)
+        now = max(arrival, last)
+        tokens = min(self.burst, tokens + (now - last) * rate)
+        if tokens >= 1.0:
+            token_ready = now
+        else:
+            token_ready = now + (1.0 - tokens) / rate
+            self.throttled += 1
+        svc_free = max(arrival, self.busy_until)
+        start = max(svc_free, token_ready)
+        # spend the token at `start` (refill any wait time first)
+        tokens = min(self.burst, tokens + (start - now) * rate) - 1.0
+        self.buckets[key] = (tokens, start)
+        # the busy chain advances by service occupancy only: while a
+        # throttled class idles waiting for tokens, other classes run —
+        # one tenant's rate limit must not head-of-line-block the rest
+        self.busy_until = svc_free + cost
+        self._account(req, arrival, start)
+        return start
+
+    def info(self):
+        out = super().info()
+        out["rate"] = self.rate
+        out["burst"] = self.burst
+        out["rules"] = dict(self.rules)
+        out["throttled"] = self.throttled
+        return out
+
+
+POLICIES = {p.name: p for p in
+            (FifoPolicy, RoundRobinPolicy, OrrPolicy, TbfPolicy)}
+
+
+def make_policy(name: str, sim, **params) -> NrsPolicy:
+    cls = POLICIES.get(name)
+    if cls is None:
+        raise ValueError(f"unknown NRS policy {name!r} "
+                         f"(have: {sorted(POLICIES)})")
+    return cls(sim, **params)

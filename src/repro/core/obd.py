@@ -196,6 +196,38 @@ class FilterDevice(ObdDevice):
             obj.mtime = old_mtime
         return {"transno": self._txn(undo), "size": obj.size}
 
+    def writev(self, group: int, oid: int, iov: list, mtime: float = 0.0):
+        """Apply a whole niobuf vector [(offset, data), ...] as ONE
+        transaction (§4.5.6: bulk moves vectors of niobufs; the OST's BRW
+        handler commits them under a single transno / single undo record).
+        """
+        obj = self._get(group, oid)
+        old_len = obj.size
+        max_end = max((off + len(d) for off, d in iov), default=old_len)
+        if max_end - old_len > self.capacity - self.used:
+            raise ObdError(28, "no space")                   # ENOSPC
+        undos = []
+        for off, data in iov:
+            end = off + len(data)
+            overlap = bytes(obj.data[off:min(end, obj.size)])
+            if end > obj.size:
+                self.used += end - obj.size
+                obj.data.extend(b"\0" * (end - obj.size))
+            obj.data[off:end] = data
+            undos.append((off, overlap))
+        grew = obj.size - old_len
+        old_mtime = obj.mtime
+        obj.mtime = max(obj.mtime, mtime)
+
+        def undo():
+            for off, overlap in reversed(undos):
+                obj.data[off:off + len(overlap)] = overlap
+            if grew:
+                del obj.data[old_len:]
+                self.used -= grew
+            obj.mtime = old_mtime
+        return {"transno": self._txn(undo), "size": obj.size}
+
     def punch(self, group: int, oid: int, size: int):
         """Truncate to `size`."""
         obj = self._get(group, oid)

@@ -8,6 +8,10 @@ an OST. It owns:
   * a write-back cache of dirty extents flushed on lock revocation, grant
     exhaustion, or explicit sync (ch. 28.5);
   * the client half of the grant protocol (ch. 10.12);
+  * the vectored BRW engine (§4.5.6): adjacent/overlapping dirty extents
+    are coalesced, flushes ship *niobuf vectors* (many extents per
+    OST_WRITE RPC) bounded by `max_pages_per_rpc`, and RPC dispatch is
+    flow-controlled by `max_rpcs_in_flight`;
   * referral handling: reads bounced to a collaborative cache follow the
     referral to the caching OST (§5.5).
 """
@@ -20,6 +24,14 @@ from typing import Optional
 from repro.core import dlm as dlm_mod
 from repro.core import ptlrpc as R
 
+PAGE_SIZE = 4096
+DEFAULT_MAX_PAGES_PER_RPC = 1024      # 4 MiB per BRW RPC
+DEFAULT_MAX_RPCS_IN_FLIGHT = 8
+
+
+def _pages(nbytes: int) -> int:
+    return max(1, (nbytes + PAGE_SIZE - 1) // PAGE_SIZE)
+
 
 @dataclasses.dataclass
 class DirtyExtent:
@@ -29,16 +41,26 @@ class DirtyExtent:
     data: bytes
     mtime: float
 
+    @property
+    def end(self) -> int:
+        return self.offset + len(self.data)
+
 
 class Osc:
     def __init__(self, rpc: R.RpcClient, target_uuid: str, nids: list[str],
-                 *, writeback: bool = True):
+                 *, writeback: bool = True,
+                 max_pages_per_rpc: int = DEFAULT_MAX_PAGES_PER_RPC,
+                 max_rpcs_in_flight: int = DEFAULT_MAX_RPCS_IN_FLIGHT,
+                 vectored_brw: bool = True):
         self.rpc = rpc
         self.sim = rpc.sim
         self.uuid = target_uuid
         self.imp = rpc.import_target(target_uuid, nids, "ost")
         self.locks = dlm_mod.LockClient(rpc, self.imp, flush_cb=self._flush_lock)
         self.writeback = writeback
+        self.max_pages_per_rpc = max(1, max_pages_per_rpc)
+        self.max_rpcs_in_flight = max(1, max_rpcs_in_flight)
+        self.vectored_brw = vectored_brw
         self.dirty: list[DirtyExtent] = []
         self.dirty_bytes = 0
         self.grant = 0
@@ -57,11 +79,7 @@ class Osc:
     def _flush_lock(self, lk: dlm_mod.Lock):
         """Blocking AST on a PW lock: write back dirty extents under it."""
         _, group, oid = lk.res_name
-        mine = [d for d in self.dirty if (d.group, d.oid) == (group, oid)]
-        for d in mine:
-            self._write_through(d)
-            self.dirty.remove(d)
-            self.dirty_bytes -= len(d.data)
+        self.flush(group, oid)
 
     # --------------------------------------------------------------- api
     def create(self, group: int, oid: int | None = None, **attrs) -> dict:
@@ -104,6 +122,8 @@ class Osc:
 
     def write(self, group: int, oid: int, offset: int, data: bytes,
               *, lock: bool = True, gid: int = 0):
+        if not data:
+            return {"cached": False, "size": None}
         if lock:
             self.lock(group, oid, "GR" if gid else "PW",
                       (offset, offset + len(data)), gid=gid)
@@ -111,19 +131,144 @@ class Osc:
         if self.writeback and len(data) <= self.grant:
             # cached write consumes grant; flushed lazily (ch. 10.12)
             self.grant -= len(data)
-            self.dirty.append(DirtyExtent(group, oid, offset, bytes(data),
-                                          self.sim.now))
-            self.dirty_bytes += len(data)
+            self._cache_dirty(group, oid, offset, data)
             for lk in self.locks.by_res.get(self._res(group, oid), ()):
                 lk.dirty = True
             self.sim.stats.count("osc.cached_write")
             return {"cached": True}
+        # write-through: older cached extents of this object must land
+        # FIRST or a later flush would overwrite this newer data
+        self.flush(group, oid)
         return self._write_through(
             DirtyExtent(group, oid, offset, bytes(data), self.sim.now))
 
+    def writev(self, group: int, oid: int, iov: list, *, lock: bool = True,
+               gid: int = 0):
+        """Vectored write: iov = [(offset, data), ...] for ONE object.
+        Takes a single lock spanning the runs, then either caches the runs
+        (write-back) or ships them as coalesced BRW niobuf vectors."""
+        iov = [(off, d) for off, d in iov if d]
+        if not iov:
+            return {"cached": False}
+        total = sum(len(d) for _, d in iov)
+        if lock:
+            span = (min(off for off, _ in iov),
+                    max(off + len(d) for off, d in iov))
+            self.lock(group, oid, "GR" if gid else "PW", span, gid=gid)
+        self._ensure_grant()
+        if self.writeback and total <= self.grant:
+            self.grant -= total
+            for off, d in iov:
+                self._cache_dirty(group, oid, off, d)
+            for lk in self.locks.by_res.get(self._res(group, oid), ()):
+                lk.dirty = True
+            self.sim.stats.count("osc.cached_write", len(iov))
+            return {"cached": True}
+        # write-through (see write()): flush older cached data first
+        self.flush(group, oid)
+        now = self.sim.now
+        exts = [DirtyExtent(group, oid, off, bytes(d), now) for off, d in iov]
+        if not self.vectored_brw:
+            outs = self.sim.parallel([
+                (lambda dd=d: self._write_through(dd)) for d in exts])
+            return outs[-1] if outs else {"cached": False}
+        outs = self._send_vectors(self._build_vectors(exts))
+        return outs[-1] if outs else {"cached": False}
+
+    # ------------------------------------------------------- dirty cache
+    def _cache_dirty(self, group: int, oid: int, offset: int, data: bytes):
+        """Insert a dirty extent, coalescing with overlapping/adjacent
+        extents of the same object (new data wins over old) so the cache
+        stays normalized: per-object extents are sorted and disjoint."""
+        if not self.vectored_brw:
+            self.dirty.append(DirtyExtent(group, oid, offset, bytes(data),
+                                          self.sim.now))
+            self.dirty_bytes += len(data)
+            return
+        end = offset + len(data)
+        touch = [d for d in self.dirty
+                 if (d.group, d.oid) == (group, oid)
+                 and d.offset <= end and offset <= d.end]
+        if not touch:
+            merged = DirtyExtent(group, oid, offset, bytes(data),
+                                 self.sim.now)
+        else:
+            lo = min(offset, min(d.offset for d in touch))
+            hi = max(end, max(d.end for d in touch))
+            buf = bytearray(hi - lo)
+            # lay old extents in temporal (list) order, newest write last
+            for d in touch:
+                buf[d.offset - lo:d.end - lo] = d.data
+                self.dirty.remove(d)
+                self.dirty_bytes -= len(d.data)
+            buf[offset - lo:end - lo] = data
+            merged = DirtyExtent(group, oid, lo, bytes(buf), self.sim.now)
+            self.sim.stats.count("osc.extents_coalesced", len(touch))
+        self.dirty.append(merged)
+        self.dirty_bytes += len(merged.data)
+
+    # ------------------------------------------------------- BRW engine
+    def _pack(self, items: list, nbytes_of) -> list[list]:
+        """Pack items (pre-sorted by offset) into batches whose combined
+        page count stays within max_pages_per_rpc."""
+        batches, vec, pages = [], [], 0
+        for it in items:
+            npg = _pages(nbytes_of(it))
+            if vec and pages + npg > self.max_pages_per_rpc:
+                batches.append(vec)
+                vec, pages = [], 0
+            vec.append(it)
+            pages += npg
+        if vec:
+            batches.append(vec)
+        return batches
+
+    def _build_vectors(self, extents: list[DirtyExtent]) -> list[tuple]:
+        """Group extents by object and pack them, sorted by offset, into
+        niobuf vectors of at most max_pages_per_rpc pages each.
+        Returns [(group, oid, [DirtyExtent, ...]), ...]."""
+        max_bytes = self.max_pages_per_rpc * PAGE_SIZE
+        by_obj: dict[tuple, list[DirtyExtent]] = defaultdict(list)
+        for d in extents:
+            # an extent larger than one RPC's page budget is sliced first
+            for cut in range(0, len(d.data), max_bytes):
+                by_obj[(d.group, d.oid)].append(
+                    DirtyExtent(d.group, d.oid, d.offset + cut,
+                                d.data[cut:cut + max_bytes], d.mtime))
+        rpcs = []
+        for (g, o), exts in by_obj.items():
+            for vec in self._pack(sorted(exts, key=lambda d: d.offset),
+                                  lambda d: len(d.data)):
+                rpcs.append((g, o, vec))
+        return rpcs
+
+    def _brw_write(self, group: int, oid: int, vec: list[DirtyExtent]) -> dict:
+        # bulk bytes ride in the body niobufs: wire_size counts them once;
+        # no extra bulk_nbytes or we double-charge the link
+        rep = self.imp.request(
+            "write", {"group": group, "oid": oid,
+                      "niobufs": [{"offset": d.offset, "data": d.data}
+                                  for d in vec],
+                      "mtime": max(d.mtime for d in vec)})
+        self.grant = rep.data.get("grant", self.grant)
+        self.sim.stats.count("osc.brw_write_rpc")
+        self.sim.stats.count("osc.brw_write_niobufs", len(vec))
+        return rep.data
+
+    def _send_vectors(self, rpcs: list[tuple]) -> list:
+        """Dispatch BRW RPCs with at most max_rpcs_in_flight concurrent."""
+        outs = []
+        for i in range(0, len(rpcs), self.max_rpcs_in_flight):
+            window = rpcs[i:i + self.max_rpcs_in_flight]
+            outs.extend(self.sim.parallel(
+                [(lambda r=r: self._brw_write(*r)) for r in window]))
+        return outs
+
     def _write_through(self, d: DirtyExtent) -> dict:
-        # bulk bytes already ride in the body ("data"): wire_size counts
-        # them once; no extra bulk_nbytes or we double-charge the link
+        if self.vectored_brw:
+            outs = self._send_vectors(self._build_vectors([d]))
+            return outs[-1]
+        # legacy (seed) path: one RPC per extent, data in the body
         rep = self.imp.request(
             "write", {"group": d.group, "oid": d.oid, "offset": d.offset,
                       "data": d.data, "mtime": d.mtime})
@@ -131,13 +276,19 @@ class Osc:
         return rep.data
 
     def flush(self, group=None, oid=None):
-        """Write back dirty extents (all, or one object's)."""
+        """Write back dirty extents (all, or one object's), coalesced into
+        vectored BRW RPCs under in-flight flow control."""
         todo = [d for d in self.dirty
                 if group is None or (d.group, d.oid) == (group, oid)]
         if not todo:
             return 0
-        self.sim.parallel([
-            (lambda dd=d: self._write_through(dd)) for d in todo])
+        if self.vectored_brw:
+            self._send_vectors(self._build_vectors(todo))
+        else:
+            self.sim.parallel([
+                (lambda dd=d: self._write_through(dd)) for d in todo])
+        # drop from the cache only once the writes went out: a failed
+        # flush (ENOSPC, unreachable target) must not discard dirty data
         for d in todo:
             self.dirty.remove(d)
             self.dirty_bytes -= len(d.data)
@@ -149,14 +300,21 @@ class Osc:
                 self.dirty.remove(d)
                 self.dirty_bytes -= len(d.data)
 
+    # --------------------------------------------------------------- read
+    def _cached_read(self, group, oid, offset, length) -> bytes | None:
+        for d in self.dirty:
+            if (d.group, d.oid) == (group, oid) and d.offset <= offset and \
+                    offset + length <= d.end:
+                o = offset - d.offset
+                return d.data[o:o + length]
+        return None
+
     def read(self, group: int, oid: int, offset: int, length: int,
              *, lock: bool = True, from_cobd: str | None = None) -> bytes:
         # serve from own dirty cache when fully covered
-        for d in self.dirty:
-            if (d.group, d.oid) == (group, oid) and d.offset <= offset and \
-                    offset + length <= d.offset + len(d.data):
-                o = offset - d.offset
-                return d.data[o:o + length]
+        hit = self._cached_read(group, oid, offset, length)
+        if hit is not None:
+            return hit
         self.flush(group, oid)             # partial overlap: write back first
         if lock:
             self.lock(group, oid, "PR", (offset, offset + length))
@@ -170,6 +328,59 @@ class Osc:
             self.sim.stats.count("osc.followed_referral")
             return self._read_via(ref, group, oid, offset, length)
         return rep.bulk
+
+    def readv(self, group: int, oid: int, iov: list,
+              *, lock: bool = True) -> list[bytes]:
+        """Vectored read: iov = [(offset, length), ...] for ONE object.
+        One lock spanning the runs; uncached runs travel as niobuf vectors
+        in as few OST_READ RPCs as max_pages_per_rpc allows; replies are
+        merged with cache hits positionally."""
+        iov = list(iov)
+        if not iov:
+            return []
+        if not self.vectored_brw:
+            return [self.read(group, oid, off, ln, lock=lock)
+                    for off, ln in iov]
+        out: list[Optional[bytes]] = [None] * len(iov)
+        miss: list[tuple[int, int, int]] = []      # (iov_idx, offset, length)
+        for i, (off, ln) in enumerate(iov):
+            hit = self._cached_read(group, oid, off, ln)
+            if hit is not None:
+                out[i] = hit
+            else:
+                miss.append((i, off, ln))
+        if not miss:
+            return out                       # fully served from cache
+        self.flush(group, oid)               # partial overlap: write back
+        if lock:
+            span = (min(off for _, off, _ in miss),
+                    max(off + ln for _, off, ln in miss))
+            self.lock(group, oid, "PR", span)
+        # pack misses into vectors bounded by max_pages_per_rpc
+        batches = self._pack(sorted(miss, key=lambda m: m[1]),
+                             lambda m: m[2])
+
+        def one(batch):
+            rep = self.imp.request(
+                "read", {"group": group, "oid": oid,
+                         "niobufs": [{"offset": off, "length": ln}
+                                     for _, off, ln in batch]})
+            if rep.data and "referral" in (rep.data or {}):
+                # collaborative-cache referral: fall back to per-run reads
+                # (they follow the referral chain)
+                self.sim.stats.count("osc.followed_referral")
+                return [self.read(group, oid, off, ln, lock=False)
+                        for _, off, ln in batch]
+            self.sim.stats.count("osc.brw_read_rpc")
+            return rep.bulk
+        for i in range(0, len(batches), self.max_rpcs_in_flight):
+            window = batches[i:i + self.max_rpcs_in_flight]
+            chunk_lists = self.sim.parallel(
+                [(lambda b=b: one(b)) for b in window])
+            for batch, chunks in zip(window, chunk_lists):
+                for (idx, _, _), chunk in zip(batch, chunks):
+                    out[idx] = chunk
+        return out
 
     def _read_via(self, ref: dict, group, oid, offset, length) -> bytes:
         imp = self._cobd_imports.get(ref["uuid"])

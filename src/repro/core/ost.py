@@ -118,34 +118,56 @@ class OstTarget(R.Target):
                          **b.get("attrs", {}))
         return R.Reply(data=out, transno=out["transno"])
 
+    def _maybe_refer(self, req: R.Request, group: int, oid: int,
+                     ext: tuple) -> R.Reply | None:
+        """Referral module: redirect to a collaborative cache when some
+        caching OST holds a PR lock covering the extent (§5.5.2), or --
+        cache-population policy -- round-robin when none does. Reads
+        FROM a COBD (populating its cache) are never re-referred."""
+        b = req.body
+        if not self.caching_osts or b.get("no_referral") \
+                or b.get("_from_cobd"):
+            return None
+        holders = self.ldlm.resources.get(("ext", group, oid))
+        cached = []
+        if holders:
+            for lk in holders.granted:
+                if (lk.client_uuid in self.caching_osts
+                        and lk.mode == "PR"
+                        and dlm_mod.overlaps(lk.extent, ext)):
+                    cached.append(lk.client_uuid)
+        if cached:
+            pick = cached[self.referral_rr % len(cached)]
+        else:
+            pick = list(self.caching_osts)[
+                self.referral_rr % len(self.caching_osts)]
+        self.referral_rr += 1
+        self.sim.stats.count("ost.referral")
+        return R.Reply(data={"referral": {
+            "uuid": pick, "nid": self.caching_osts[pick]}})
+
     def op_read(self, req: R.Request) -> R.Reply:
         b = req.body
         group, oid = b["group"], b["oid"]
-        # referral module: redirect to a collaborative cache when some
-        # caching OST holds a PR lock covering the extent (§5.5.2), or --
-        # cache-population policy -- round-robin when none does. Reads
-        # FROM a COBD (populating its cache) are never re-referred.
-        if self.caching_osts and not b.get("no_referral") \
-                and not b.get("_from_cobd"):
-            ext = (b["offset"], b["offset"] + b["length"])
-            holders = self.ldlm.resources.get(("ext", group, oid))
-            cached = []
-            if holders:
-                for lk in holders.granted:
-                    if (lk.client_uuid in self.caching_osts
-                            and lk.mode == "PR"
-                            and dlm_mod.overlaps(lk.extent, ext)):
-                        cached.append(lk.client_uuid)
-            if cached:
-                pick = cached[self.referral_rr % len(cached)]
-            else:
-                pick = list(self.caching_osts)[
-                    self.referral_rr % len(self.caching_osts)]
-            self.referral_rr += 1
-            if pick != req.body.get("_from_cobd"):
-                self.sim.stats.count("ost.referral")
-                return R.Reply(data={"referral": {
-                    "uuid": pick, "nid": self.caching_osts[pick]}})
+        if "niobufs" in b:
+            # vectored BRW read: one reply carries the whole niobuf vector
+            nio = b["niobufs"]
+            span = (min(n["offset"] for n in nio),
+                    max(n["offset"] + n["length"] for n in nio))
+            ref = self._maybe_refer(req, group, oid, span)
+            if ref is not None:
+                return ref
+            chunks = [self._wrap(self.obd.read, group, oid,
+                                 n["offset"], n["length"]) for n in nio]
+            total = sum(len(c) for c in chunks)
+            self.sim.stats.add_bytes("ost.read", total)
+            self.sim.stats.count("ost.brw_read_niobufs", len(nio))
+            return R.Reply(data={"len": total, "niobufs": len(nio)},
+                           bulk=chunks, bulk_nbytes=total)
+        ref = self._maybe_refer(req, group, oid,
+                                (b["offset"], b["offset"] + b["length"]))
+        if ref is not None:
+            return ref
         data = self._wrap(self.obd.read, group, oid, b["offset"], b["length"])
         self.sim.stats.add_bytes("ost.read", len(data))
         return R.Reply(data={"len": len(data)}, bulk=data,
@@ -153,12 +175,23 @@ class OstTarget(R.Target):
 
     def op_write(self, req: R.Request) -> R.Reply:
         b = req.body
-        data = req.body["data"]
-        out = self._wrap(self.obd.write, b["group"], b["oid"], b["offset"],
-                         data, b.get("mtime", self.sim.now))
-        self.sim.stats.add_bytes("ost.write", len(data))
+        if "niobufs" in b:
+            # vectored BRW write: apply the whole niobuf vector in ONE
+            # backend transaction and answer with a single reply
+            iov = [(n["offset"], n["data"]) for n in b["niobufs"]]
+            out = self._wrap(self.obd.writev, b["group"], b["oid"], iov,
+                             b.get("mtime", self.sim.now))
+            total = sum(len(d) for _, d in iov)
+            self.sim.stats.count("ost.brw_write_niobufs", len(iov))
+        else:
+            data = b["data"]
+            out = self._wrap(self.obd.write, b["group"], b["oid"],
+                             b["offset"], data,
+                             b.get("mtime", self.sim.now))
+            total = len(data)
+        self.sim.stats.add_bytes("ost.write", total)
         exp = self.exports[req.client_uuid]
-        exp.data["grant"] = max(0, exp.data.get("grant", 0) - len(data))
+        exp.data["grant"] = max(0, exp.data.get("grant", 0) - total)
         self.ldlm.bump_version(("ext", b["group"], b["oid"]), size=out["size"])
         return R.Reply(data={"size": out["size"],
                              "grant": self._grant_for(exp, GRANT_CHUNK)},

@@ -16,6 +16,29 @@ Concepts kept from the paper:
     to a failover nid) -> replay committed-but-lost transnos in order ->
     resend unreplied requests; the server answers resends of executed
     requests from the reply cache keyed (client_uuid, xid).
+
+Portal / NRS layering (ch. 22-23 + the NRS refactor):
+
+    client Import.request()                 server Node
+      |  PUT on REQUEST_PORTALS[kind]        |  pre-posted MD, EQ handler
+      v                                      v
+    portals.transmit  ------------------>  Node._request_in(ev)
+                                             |  target lookup (body._target)
+                                             v
+                                           Service.process(req, arrival)
+                                             |  NRS policy picks the virtual
+                                             |  start (fifo/crr/orr/tbf,
+                                             |  see core.nrs) + accounting
+                                             v
+                                           Target.handle(req)  -> Reply
+                                             |
+      reply MD matched on xid  <-----------  PUT on REPLY_PORTALS[kind]
+
+The Service sits between the Portals event and the Target handler table:
+every target owns one (`target.service`), its policy is switchable at
+runtime (`service.set_policy("tbf", rate=100)` or `lctl("nrs", ...)`),
+and bulk-heavy requests (niobuf vectors from the OSC's BRW path) are
+charged a per-niobuf service cost so scheduling sees their true weight.
 """
 from __future__ import annotations
 
@@ -24,6 +47,7 @@ import itertools
 from collections import defaultdict
 from typing import Any, Callable, Optional
 
+from repro.core import nrs as nrs_mod
 from repro.core import portals as P
 from repro.core.sim import Simulator
 
@@ -126,6 +150,51 @@ class Export:
     data: dict = dataclasses.field(default_factory=dict)  # per-svc (opens..)
 
 
+# ---------------------------------------------------------------- service
+
+class Service:
+    """Request-processing service for one target (ch. 22-23).
+
+    The seed's ad-hoc service loop (portals event -> handler, strictly in
+    arrival order) is extracted here and given a pluggable Network Request
+    Scheduler: the policy decides the virtual instant the service thread
+    picks a request up, then the handler runs and the reply departs no
+    earlier than start + service cost.  Costs model per-request CPU plus
+    per-niobuf overhead so vectored BRW requests are weighted fairly.
+    """
+
+    def __init__(self, target: "Target", policy: str = "fifo",
+                 cpu_cost: float = 5e-6, niobuf_cost: float = 1e-6,
+                 **params):
+        self.target = target
+        self.sim = target.sim
+        self.cpu_cost = cpu_cost
+        self.niobuf_cost = niobuf_cost
+        self.policy: nrs_mod.NrsPolicy = nrs_mod.make_policy(
+            policy, self.sim, **params)
+
+    def set_policy(self, name: str, **params):
+        """Switch the NRS policy at runtime (lctl nrs ...); accounting
+        restarts with the new policy."""
+        self.policy = nrs_mod.make_policy(name, self.sim, **params)
+        return self.policy
+
+    def request_cost(self, req: Request) -> float:
+        nio = req.body.get("niobufs")
+        n = len(nio) if isinstance(nio, (list, tuple)) else 1
+        return self.cpu_cost + self.niobuf_cost * n
+
+    def process(self, req: Request, arrival: float) -> Reply:
+        cost = self.request_cost(req)
+        start = self.policy.schedule(req, arrival, cost)
+        self.sim.clock.advance_to(start)
+        reply = self.target.handle(req)
+        # the reply departs no earlier than the scheduled completion
+        # (handlers issuing nested RPCs may already be later than this)
+        self.sim.clock.advance_to(start + cost)
+        return reply
+
+
 # ----------------------------------------------------------------- target
 
 class Target:
@@ -153,6 +222,7 @@ class Target:
         self.recovery_deadline = 0.0
         self.commit_callbacks: list[Callable[[int], None]] = []
         self.evicted: set = set()
+        self.service = Service(self)
         self.ops["connect"] = self.op_connect
         self.ops["disconnect"] = self.op_disconnect
         self.ops["ping"] = self.op_ping
@@ -329,7 +399,7 @@ class Node:
         if target is None:
             reply = Reply(status=-19)      # ENODEV
         else:
-            reply = target.handle(req)
+            reply = target.service.process(req, ev.arrival_time)
         # reply PUT matched on xid (paper §4.5.2)
         nbytes = wire_size(reply) + reply.bulk_nbytes
         self.ni.put(reply_nid, reply_portal, req.xid, reply, nbytes)

@@ -58,11 +58,19 @@ class Dentry:
 class LustreClient:
     def __init__(self, cluster: LustreCluster, node_idx: int = 0,
                  default_stripe_count: int = 0,
-                 default_stripe_size: int = 1 << 20):
+                 default_stripe_size: int = 1 << 20,
+                 max_pages_per_rpc: int | None = None,
+                 max_rpcs_in_flight: int | None = None,
+                 vectored_brw: bool | None = None):
         self.cluster = cluster
         self.rpc = cluster.make_client_rpc(node_idx)
         self.lmv = cluster.make_lmv(self.rpc)
-        self.lov = cluster.make_lov(self.rpc)
+        # BRW pipeline knobs: per-client override of the cluster defaults
+        osc_kw = {k: v for k, v in (
+            ("max_pages_per_rpc", max_pages_per_rpc),
+            ("max_rpcs_in_flight", max_rpcs_in_flight),
+            ("vectored_brw", vectored_brw)) if v is not None}
+        self.lov = cluster.make_lov(self.rpc, **osc_kw)
         self.sim = cluster.sim
         self.default_stripe_count = default_stripe_count or len(
             cluster.ost_targets)

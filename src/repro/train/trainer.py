@@ -163,8 +163,10 @@ class Trainer:
         pspecs, ospecs, _ = t.bundle.in_shardings
 
         def build(prefix, structs, specs):
-            leaves_s = jax.tree.leaves_with_path(structs)
-            leaves_p = jax.tree.leaves_with_path(specs)
+            # jax.tree.leaves_with_path only exists in newer jax;
+            # tree_util has carried it for much longer
+            leaves_s = jax.tree_util.tree_leaves_with_path(structs)
+            leaves_p = jax.tree_util.tree_leaves_with_path(specs)
             out_leaves = []
             for (path, s), (_, spec) in zip(leaves_s, leaves_p):
                 name = prefix + ".".join(

@@ -1,0 +1,102 @@
+"""Minimal stand-in for `hypothesis` when it isn't installed.
+
+The real library is preferred (see requirements-dev.txt); this shim keeps
+the property-based tests *runnable* in bare environments by sampling a
+fixed number of pseudo-random examples from the same strategy expressions.
+Only the strategy surface the test-suite uses is implemented: integers,
+binary, lists, tuples, sampled_from, dictionaries, fixed_dictionaries.
+No shrinking, no database — a deterministic seed keeps failures
+reproducible.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_SEED = 0xC0FFEE
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, gen):
+        self.gen = gen
+
+
+class strategies:  # noqa: N801 — mimics `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 16):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def binary(min_size=0, max_size=64):
+        return _Strategy(lambda r: bytes(
+            r.getrandbits(8) for _ in range(r.randint(min_size, max_size))))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None, unique=False):
+        cap = 8 if max_size is None else max_size
+
+        def gen(r):
+            out = [elements.gen(r) for _ in range(r.randint(min_size, cap))]
+            if unique:
+                seen, uniq = set(), []
+                for v in out:
+                    if v not in seen:
+                        seen.add(v)
+                        uniq.append(v)
+                out = uniq
+            return out
+        return _Strategy(gen)
+
+    @staticmethod
+    def tuples(*elems):
+        return _Strategy(lambda r: tuple(e.gen(r) for e in elems))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: r.choice(seq))
+
+    @staticmethod
+    def dictionaries(keys, values, min_size=0, max_size=None):
+        cap = 8 if max_size is None else max_size
+
+        def gen(r):
+            out = {}
+            for _ in range(r.randint(min_size, cap)):
+                out[keys.gen(r)] = values.gen(r)
+            return out
+        return _Strategy(gen)
+
+    @staticmethod
+    def fixed_dictionaries(mapping):
+        return _Strategy(
+            lambda r: {k: v.gen(r) for k, v in mapping.items()})
+
+
+def settings(**kw):
+    """Decorator: records max_examples on the @given wrapper below it."""
+    def deco(fn):
+        setattr(fn, "_shim_settings", kw)
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            conf = getattr(run, "_shim_settings", {})
+            n = min(conf.get("max_examples", _DEFAULT_EXAMPLES), 30)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                fn(*args, *[s.gen(rng) for s in strats], **kwargs)
+        # hide the generated parameters from pytest's fixture resolution:
+        # the trailing len(strats) params are filled by the strategies
+        params = list(inspect.signature(fn).parameters.values())
+        run.__signature__ = inspect.Signature(params[:-len(strats)])
+        del run.__wrapped__              # keep pytest off the original sig
+        run.hypothesis_shim = True
+        return run
+    return deco

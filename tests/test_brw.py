@@ -1,0 +1,207 @@
+"""Vectored BRW pipeline: niobuf coalescing, flow control, single-txn
+server apply (ISSUE 1 tentpole, paper §4.5.6 + ch. 23.4)."""
+import pytest
+
+from repro.core import LustreCluster
+from repro.core import lov as LV
+
+
+def mk(**kw):
+    c = LustreCluster(osts=4, mdses=1, clients=2, commit_interval=256, **kw)
+    rpc = c.make_client_rpc(0)
+    return c, rpc
+
+
+def writes(c):
+    return c.stats.counters.get("rpc.ost.write", 0)
+
+
+def reads(c):
+    return c.stats.counters.get("rpc.ost.read", 0)
+
+
+# ------------------------------------------------------------ coalescing
+
+def test_adjacent_dirty_extents_flush_as_one_rpc():
+    c, rpc = mk()
+    osc = c.make_oscs(rpc)[0]
+    oid = osc.create(0)["oid"]
+    for i in range(8):
+        osc.write(0, oid, i * 4096, bytes([i]) * 4096)
+    assert writes(c) == 0                      # all cached
+    base = writes(c)
+    osc.flush()
+    assert writes(c) - base == 1               # ONE vectored OST_WRITE
+    assert osc.read(0, oid, 0, 8 * 4096) == b"".join(
+        bytes([i]) * 4096 for i in range(8))
+
+
+def test_disjoint_extents_ride_one_rpc_as_niobufs():
+    c, rpc = mk()
+    osc = c.make_oscs(rpc)[0]
+    oid = osc.create(0)["oid"]
+    osc.write(0, oid, 0, b"a" * 100)
+    osc.write(0, oid, 10_000, b"b" * 100)      # hole between extents
+    osc.flush()
+    assert writes(c) == 1
+    assert c.stats.counters["osc.brw_write_niobufs"] == 2
+    assert c.stats.counters["ost.brw_write_niobufs"] == 2
+    assert osc.read(0, oid, 0, 100) == b"a" * 100
+    assert osc.read(0, oid, 10_000, 100) == b"b" * 100
+    assert osc.read(0, oid, 5_000, 10) == b"\0" * 10   # hole reads zeros
+
+
+def test_overlapping_writes_merge_newest_wins():
+    c, rpc = mk()
+    osc = c.make_oscs(rpc)[0]
+    oid = osc.create(0)["oid"]
+    osc.write(0, oid, 0, b"x" * 100)
+    osc.write(0, oid, 50, b"y" * 100)          # overlaps the tail
+    assert len([d for d in osc.dirty if d.oid == oid]) == 1   # coalesced
+    osc.flush()
+    assert writes(c) == 1
+    assert osc.read(0, oid, 0, 150) == b"x" * 50 + b"y" * 100
+
+
+def test_max_pages_per_rpc_splits_vectors():
+    c, rpc = mk()
+    osc = c.make_oscs(rpc, max_pages_per_rpc=2)[0]
+    oid = osc.create(0)["oid"]
+    osc.write(0, oid, 0, b"z" * (8 * 4096))    # 8 pages, 2 per RPC
+    osc.flush()
+    assert writes(c) == 4
+
+
+def test_max_rpcs_in_flight_windows_dispatch():
+    c, rpc = mk()
+    osc = c.make_oscs(rpc, max_pages_per_rpc=1, max_rpcs_in_flight=2)[0]
+    oid = osc.create(0)["oid"]
+    osc.write(0, oid, 0, b"w" * (6 * 4096))
+    osc.flush()
+    assert writes(c) == 6                      # correctness under windowing
+    assert osc.read(0, oid, 0, 6 * 4096) == b"w" * (6 * 4096)
+
+
+def test_legacy_mode_matches_seed_rpc_counts():
+    c, rpc = mk(vectored_brw=False)
+    osc = c.make_oscs(rpc)[0]
+    oid = osc.create(0)["oid"]
+    for i in range(8):
+        osc.write(0, oid, i * 4096, bytes([i]) * 4096)
+    osc.flush()
+    assert writes(c) == 8                      # one RPC per dirty extent
+
+
+# --------------------------------------------------------- server side
+
+def test_niobuf_vector_is_one_transaction():
+    c, rpc = mk()
+    osc = c.make_oscs(rpc)[0]
+    t = c.ost_targets[0]
+    oid = osc.create(0)["oid"]
+    osc.write(0, oid, 0, b"a" * 64)
+    osc.write(0, oid, 1000, b"b" * 64)
+    osc.write(0, oid, 2000, b"c" * 64)
+    before = t.transno
+    rl0 = len(osc.imp.replay_list)
+    osc.flush()
+    assert t.transno == before + 1             # single transno for 3 niobufs
+    assert len(osc.imp.replay_list) == rl0 + 1   # single reply retained
+
+
+def test_writev_crash_rolls_back_whole_vector():
+    c, rpc = mk()
+    osc = c.make_oscs(rpc)[0]
+    t = c.ost_targets[0]
+    oid = osc.create(0)["oid"]
+    osc.write(0, oid, 0, b"base" * 16)
+    osc.flush()
+    t.commit()                                 # persist the base state
+    osc.write(0, oid, 8, b"X" * 8)
+    osc.write(0, oid, 200, b"Y" * 8)           # grows the object
+    osc.flush()
+    size_before = t.obd.getattr(0, oid)["size"]
+    assert size_before == 208
+    t.crash()                                  # lose the uncommitted vector
+    a = t.obd.getattr(0, oid)
+    assert a["size"] == 64                     # growth undone
+    assert t.obd.read(0, oid, 0, 64) == b"base" * 16
+
+
+# ------------------------------------------------------------- striped
+
+def test_lov_write_is_one_vectored_rpc_per_stripe():
+    c, rpc = mk()
+    lov = c.make_lov(rpc)
+    lsm = lov.create(stripe_count=4, stripe_size=1 << 16)
+    data = bytes(range(256)) * 1024            # 256 KiB = 4 runs of 64 KiB
+    lov.write(lsm, 0, data)
+    lov.flush()
+    assert writes(c) == 4                      # one OST_WRITE per stripe
+    assert lov.read(lsm, 0, len(data)) == data
+
+
+def test_lov_read_vectored_per_stripe():
+    c, rpc = mk()
+    lov = c.make_lov(rpc)
+    lsm = lov.create(stripe_count=2, stripe_size=1 << 12)
+    data = bytes(range(256)) * 64              # 16 KiB = 4 runs of 4 KiB
+    lov.write(lsm, 0, data)
+    lov.flush()
+    base = reads(c)
+    fresh = LV.Lov(c.make_oscs(c.make_client_rpc(1)))   # cold client cache
+    assert fresh.read(lsm, 0, len(data)) == data
+    # 2 stripe objects, 2 runs each -> 2 vectored OST_READs, not 4
+    assert reads(c) - base == 2
+
+
+def test_zero_length_io_is_a_noop():
+    c, rpc = mk()
+    lov = c.make_lov(rpc)
+    lsm = lov.create(stripe_count=2, stripe_size=4096)
+    before = dict(c.stats.counters)
+    assert lov.write(lsm, 0, b"") == 0
+    assert lov.read(lsm, 0, 0) == b""
+    assert c.stats.counters.get("rpc.ost.write", 0) == \
+        before.get("rpc.ost.write", 0)
+
+
+def test_failed_flush_keeps_dirty_data():
+    """A flush that fails (ENOSPC) must NOT discard the cached extents."""
+    c = LustreCluster(osts=1, mdses=1, clients=2, commit_interval=256,
+                      ost_capacity=8192)
+    a = c.make_oscs(c.make_client_rpc(0))[0]
+    oid = a.create(0)["oid"]
+    a.write(0, oid, 0, b"g" * 512)             # cached under A's grant
+    assert a.dirty_bytes == 512
+    b = c.make_oscs(c.make_client_rpc(1), writeback=False)[0]
+    b_oid = b.create(0)["oid"]
+    b.write(0, b_oid, 0, b"f" * 8000)          # B fills the device
+    with pytest.raises(Exception):
+        a.flush()                              # ENOSPC at the server
+    assert a.dirty_bytes == 512                # data survives the failure
+    assert a.read(0, oid, 0, 512) == b"g" * 512   # served from cache
+
+
+def test_write_through_flushes_stale_cache_first():
+    """A write-through to a range with older cached data must not let the
+    stale extent overwrite it on a later flush."""
+    c, rpc = mk()
+    osc = c.make_oscs(rpc)[0]
+    oid = osc.create(0)["oid"]
+    osc.write(0, oid, 0, b"AAAA")              # cached
+    osc.grant = 1                              # next write won't fit grant
+    osc.writev(0, oid, [(0, b"BBBB")])         # write-through, newer data
+    osc.flush()                                # must NOT resurrect AAAA
+    assert c.ost_targets[0].obd.read(0, oid, 0, 4) == b"BBBB"
+    assert osc.read(0, oid, 0, 4) == b"BBBB"
+
+
+def test_writev_respects_legacy_mode():
+    c, rpc = mk(vectored_brw=False)
+    osc = c.make_oscs(rpc, writeback=False)[0]
+    oid = osc.create(0)["oid"]
+    osc.writev(0, oid, [(0, b"a" * 64), (1000, b"b" * 64)])
+    assert writes(c) == 2                      # one legacy RPC per run
+    assert c.stats.counters.get("osc.brw_write_rpc", 0) == 0
+    assert osc.read(0, oid, 0, 64) == b"a" * 64

@@ -1,6 +1,9 @@
 """DLM: modes, extents, ASTs, intents, group locks (paper ch. 7, 27)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: sampled fallback
+    from _hyposhim import given, settings, strategies as st
 
 from repro.core import LustreCluster
 from repro.core import dlm as D

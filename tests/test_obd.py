@@ -1,6 +1,9 @@
 """OBD devices, transactions, llog, snapshots (paper ch. 5, 8)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: sampled fallback
+    from _hyposhim import given, settings, strategies as st
 
 from repro.core import llog as L
 from repro.core import obd as O

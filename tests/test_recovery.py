@@ -1,6 +1,9 @@
 """Recovery: replay, failover, orphans, consistent cut (ch. 11, 29)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: sampled fallback
+    from _hyposhim import given, settings, strategies as st
 
 from repro.core import LustreCluster
 from repro.core import ptlrpc as R

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: sampled fallback
+    from _hyposhim import given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.parallel import shardings as sh
@@ -86,6 +89,8 @@ def test_flops_scan_multiplied_by_trip_count():
     assert rep.n_while == 1
     # XLA's own analysis undercounts the loop (this is WHY hlo_cost exists)
     xla = compiled.cost_analysis()
+    if isinstance(xla, list):                 # older jax returns a list
+        xla = xla[0] if xla else None
     if xla and xla.get("flops"):
         assert xla["flops"] <= rep.flops
 
