@@ -6,7 +6,8 @@ Results land in results/bench/*.json; a summary prints per bench.
 Every run also emits BENCH_rpc.json (repo root): OST_WRITE RPC count +
 wall/virtual time for a striped-write workload, seed-style one-RPC-per-
 extent vs the vectored BRW pipeline — the perf trajectory tracked from
-ISSUE 1 onward.
+ISSUE 1 onward. The committed BENCH_rpc.json doubles as a regression
+gate: exit status is non-zero if the vectored RPC count exceeds it.
 """
 from __future__ import annotations
 
@@ -25,9 +26,20 @@ RPC_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_rpc.json")
 def bench_rpc() -> dict:
     """Striped-write RPC trajectory: 8 MiB over 4 stripes, written in
     64 KiB logical chunks, flushed once — legacy (vectored_brw=False,
-    the seed's one-RPC-per-dirty-extent) vs the vectored BRW pipeline."""
+    the seed's one-RPC-per-dirty-extent) vs the vectored BRW pipeline.
+
+    The COMMITTED BENCH_rpc.json is the regression baseline: if this
+    run's vectored OST_WRITE RPC count exceeds it, main() exits non-zero
+    (the CI benchmark smoke job fails the PR)."""
     from repro.core import LustreCluster
     from repro.fsio import LustreClient
+
+    baseline = None
+    try:
+        with open(RPC_JSON) as f:
+            baseline = json.load(f)["vectored"]["ost_write_rpcs"]
+    except (OSError, KeyError, ValueError, TypeError):
+        pass                                   # no (usable) baseline yet
 
     size, chunk = 8 << 20, 64 << 10
     out = {}
@@ -52,14 +64,32 @@ def bench_rpc() -> dict:
     v, s = out["vectored"], out["seed_like"]
     out["rpc_reduction"] = round(
         s["ost_write_rpcs"] / max(1, v["ost_write_rpcs"]), 2)
-    with open(RPC_JSON, "w") as f:
-        json.dump(out, f, indent=1)
+    out["baseline_ost_write_rpcs"] = baseline
+    # single source of truth for the gate: main() keys its exit code off
+    # this flag, and the file writes below key off it too
+    regressed = baseline is not None and v["ost_write_rpcs"] > baseline
+    out["regressed"] = regressed
+    if not regressed:
+        # a failed gate must NOT overwrite its own baseline: the second
+        # run would compare against the regressed count and pass, and a
+        # blind "commit the regenerated json" would ratchet the committed
+        # baseline up. Only equal-or-better results become the baseline.
+        with open(RPC_JSON, "w") as f:
+            json.dump(out, f, indent=1)
+    else:
+        # keep the evidence without touching the baseline (CI uploads
+        # BENCH_rpc.json — the regressed counts land next to it)
+        failed_path = os.path.join(os.path.dirname(RPC_JSON),
+                                   "BENCH_rpc_failed.json")
+        with open(failed_path, "w") as f:
+            json.dump(out, f, indent=1)
     print(f"\n== BENCH_rpc: striped 8 MiB write ==\n"
           f"  seed-like: {s['ost_write_rpcs']} OST_WRITE RPCs "
           f"({s['write_vtime_s']:.4f}s vtime)\n"
           f"  vectored:  {v['ost_write_rpcs']} OST_WRITE RPCs "
           f"({v['write_vtime_s']:.4f}s vtime)  "
-          f"[{out['rpc_reduction']}x fewer]")
+          f"[{out['rpc_reduction']}x fewer]"
+          + (f"  (baseline: {baseline})" if baseline is not None else ""))
     return out
 
 
@@ -85,6 +115,11 @@ def main():
                 rpc["seed_like"]["ost_write_rpcs"]:
             failures.append(("BENCH_rpc", "vectored BRW did not reduce "
                              "OST_WRITE RPC count"))
+        if rpc.get("regressed"):
+            failures.append((
+                "BENCH_rpc", f"striped-write OST_WRITE RPC count "
+                f"regressed: {rpc['vectored']['ost_write_rpcs']} > "
+                f"committed baseline {rpc['baseline_ost_write_rpcs']}"))
     except Exception as e:  # noqa: BLE001
         import traceback
         traceback.print_exc()

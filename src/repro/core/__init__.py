@@ -11,6 +11,8 @@ Layers (bottom up, mirroring Part 1 of the paper):
                  (ch.7, 27)
     obd        — object devices: class driver + filter direct driver (ch.5)
     llog       — logging API: catalogs, cookies, cancellation (ch.8)
+    changelog  — per-MDT metadata activity streams on llog: typed records,
+                 consumer bookmarks, jobid tagging (ch.8 + audit tooling)
     ost / osc  — object storage target/client, grants, referral (ch.2, 10)
     lov        — striping + RAID1 redundant OSTs (ch.10, 15, 20)
     mds / mdc  — metadata service: fids, intents, reintegration, clustered

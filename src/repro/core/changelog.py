@@ -1,0 +1,182 @@
+"""Per-MDT changelog: a persistent stream of metadata activity.
+
+Layered on the llog machinery (paper ch. 8) exactly like the unlink log:
+every namespace update the MDS executes appends one typed record to a
+per-MDT `LlogCatalog` *inside the same transaction/undo scope as the
+operation itself* — a crashed (rolled-back) reint retracts its record, a
+replayed reint re-emits it, so consumers see each committed operation
+exactly once.
+
+The consumer model follows Doreau's *Distributed Lustre activity
+tracking* (arXiv:1505.02656) and the Robinhood policy engine it feeds:
+
+  * recording is active only while at least one consumer is registered
+    (``changelog_register`` -> "cl1", "cl2", ...);
+  * each consumer owns a persistent *bookmark* — the highest record index
+    it has acknowledged via ``changelog_clear``;
+  * records are purged from the catalog only past the MINIMUM bookmark
+    across all registered consumers: a slow auditor pins the stream, a
+    fast one never destroys data someone else still needs;
+  * ``changelog_read(user, since_idx)`` returns retained records above an
+    index, so multiple independent consumers (HSM, audit, mirror) tail
+    the same stream;
+  * a record handed to a consumer must be durable: the MDS commits its
+    journal before serving (or purging) an uncommitted tail, so a
+    single-MDT crash can never roll back a record a consumer has seen.
+    One documented exception remains: the multi-MDT consistent-cut
+    rollback (recovery.py §6.7.6.3) undoes *committed* cross-MDT
+    transactions whose peer half was lost, retracting their records —
+    a consumer that read past the cluster-committed cut must rescan
+    (ROADMAP follow-up; real DNE changelogs share this exposure).
+
+Records carry (fid, parent fid, name, timestamp, client uuid, jobid) so
+audit tooling (arXiv:2302.14824) can answer "who did what, where, when,
+and for which batch job" — the jobid is the same tag the TBF NRS policy
+classifies on (core.nrs), threaded through `ptlrpc.Request`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.core import llog as llog_mod
+
+# Record types (the CL_* subset our MDS emits).
+CL_CREAT = "CREAT"        # regular file create
+CL_MKDIR = "MKDIR"
+CL_SYMLINK = "SYMLINK"
+CL_UNLINK = "UNLINK"
+CL_RMDIR = "RMDIR"
+CL_RENAME = "RENAME"
+CL_LINK = "LINK"
+CL_SETATTR = "SETATTR"
+CL_CLOSE = "CLOSE"
+
+CL_TYPES = (CL_CREAT, CL_MKDIR, CL_SYMLINK, CL_UNLINK, CL_RMDIR,
+            CL_RENAME, CL_LINK, CL_SETATTR, CL_CLOSE)
+
+
+@dataclasses.dataclass
+class ChangelogRecord:
+    idx: int                  # per-MDT, strictly increasing (gaps allowed:
+                              # a rolled-back record's index is not reused)
+    cl_type: str
+    fid: tuple | None         # inode the operation applied to
+    pfid: tuple | None        # parent directory (name-bearing ops)
+    name: str                 # entry name under pfid ("" for inode ops)
+    time: float               # virtual timestamp (merge key across MDTs)
+    client: str               # originating client uuid
+    jobid: str                # batch-job tag (see core.nrs TBF rules)
+    extra: dict = dataclasses.field(default_factory=dict)
+    transno: int = 0          # owning transaction (server-internal: the
+                              # MDS commits it before serving the record)
+
+    def to_wire(self) -> dict:
+        d = {"idx": self.idx, "type": self.cl_type, "fid": self.fid,
+             "pfid": self.pfid, "name": self.name, "time": self.time,
+             "client": self.client, "jobid": self.jobid}
+        if self.extra:
+            d["extra"] = dict(self.extra)
+        return d
+
+
+class Changelog:
+    """One MDT's changelog catalog + consumer bookkeeping."""
+
+    def __init__(self, owner_uuid: str):
+        self.owner_uuid = owner_uuid
+        self.catalog = llog_mod.LlogCatalog(f"{owner_uuid}-changelog")
+        self.users: dict[str, int] = {}      # consumer id -> bookmark idx
+        self._user_seq = itertools.count(1)
+        self._idx = itertools.count(1)
+        self.last_idx = 0
+        self.purged_to = 0
+        self._cookies: dict[int, int] = {}   # record idx -> llog cookie
+
+    # --------------------------------------------------------- consumers
+    @property
+    def active(self) -> bool:
+        """Recording is on only while someone is listening (the register
+        RPC is what 'turns on' the changelog, as in real Lustre)."""
+        return bool(self.users)
+
+    def register(self) -> str:
+        uid = f"cl{next(self._user_seq)}"
+        # a new consumer can read everything still retained
+        self.users[uid] = self.purged_to
+        return uid
+
+    def deregister(self, uid: str):
+        if uid not in self.users:
+            raise KeyError(uid)
+        del self.users[uid]
+        self._purge()
+
+    # ------------------------------------------------------------ record
+    def emit(self, cl_type: str, fid, *, pfid=None, name: str = "",
+             time: float = 0.0, client: str = "", jobid: str = "",
+             transno: int = 0, **extra) -> ChangelogRecord | None:
+        """Append one record; returns None while no consumer is
+        registered. The CALLER's transaction undo must call `retract`
+        on the returned record so aborted operations leave no trace."""
+        if not self.users:
+            return None
+        idx = next(self._idx)
+        self.last_idx = idx
+        rec = ChangelogRecord(idx, cl_type,
+                              tuple(fid) if fid is not None else None,
+                              tuple(pfid) if pfid is not None else None,
+                              name, time, client, jobid, dict(extra),
+                              transno)
+        lrec = self.catalog.add("changelog", {"rec": rec})
+        self._cookies[idx] = lrec.cookie
+        return rec
+
+    def retract(self, rec: ChangelogRecord | None):
+        """Transaction rollback: remove an uncommitted record (no-op if it
+        was already purged by a consumer that read past it)."""
+        if rec is None:
+            return
+        cookie = self._cookies.pop(rec.idx, None)
+        if cookie is not None:
+            self.catalog.cancel([cookie])
+
+    # ------------------------------------------------------------- read
+    def records(self) -> list[ChangelogRecord]:
+        # already idx-ordered: records only ever append to the current
+        # plain log, and cancellation never reorders survivors
+        return [r.payload["rec"] for r in self.catalog.pending()]
+
+    def read(self, since_idx: int = 0, count: int = 0) \
+            -> list[ChangelogRecord]:
+        recs = [r for r in self.records() if r.idx > since_idx]
+        return recs[:count] if count else recs
+
+    def clear(self, uid: str, up_to: int):
+        """Acknowledge records up to `up_to` for one consumer; physically
+        purge only past the minimum bookmark across ALL consumers."""
+        if uid not in self.users:
+            raise KeyError(uid)
+        self.users[uid] = max(self.users[uid], min(up_to, self.last_idx))
+        self._purge()
+
+    def _purge(self):
+        keep_after = min(self.users.values()) if self.users else self.last_idx
+        doomed = []
+        for rec in self.records():
+            if rec.idx <= keep_after:
+                cookie = self._cookies.pop(rec.idx, None)
+                if cookie is not None:
+                    doomed.append(cookie)
+        if doomed:
+            self.catalog.cancel(doomed)
+        self.purged_to = max(self.purged_to, keep_after)
+
+    # ------------------------------------------------------------ procfs
+    def info(self) -> dict:
+        return {"active": self.active,
+                "users": dict(self.users),
+                "records": len(self.catalog.pending()),
+                "last_idx": self.last_idx,
+                "purged_to": self.purged_to,
+                "plain_logs": len(self.catalog.logs)}

@@ -142,6 +142,15 @@ class LustreCluster(R.ClusterBase):
             uuid, policy = args[0], args[1]
             params = args[2] if len(args) > 2 else {}
             self.target(uuid).service.set_policy(policy, **params)
+        elif verb == "changelog_register":
+            # lctl("changelog_register", mds_uuid) -> consumer id
+            return self.target(args[0]).changelog.register()
+        elif verb == "changelog_deregister":
+            # lctl("changelog_deregister", mds_uuid, consumer_id)
+            self.target(args[0]).changelog.deregister(args[1])
+        elif verb == "changelog_info":
+            # lctl("changelog_info", mds_uuid) -> consumer/record state
+            return self.target(args[0]).changelog.info()
         else:
             raise ValueError(verb)
 
@@ -178,6 +187,7 @@ class LustreCluster(R.ClusterBase):
                 "locks": sum(len(r.granted)
                              for r in t.ldlm.resources.values()),
                 "nrs": t.service.policy.info(),
+                "changelog": t.changelog.info(),
             }
         return out
 

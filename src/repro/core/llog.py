@@ -34,15 +34,21 @@ class LlogRecord:
 class LlogHandle:
     """One plain log (a special object on the backing store)."""
 
-    def __init__(self, logid: str):
+    def __init__(self, logid: str, cap: int | None = None):
         self.logid = logid
+        self.cap = cap
         self.records: list[LlogRecord] = []
-        self._idx = itertools.count(1)
+        self.added = 0               # index slots ever consumed (cancelling
+        self._idx = itertools.count(1)   # a record does not free its slot)
 
     def add(self, rec_type: str, payload: dict) -> LlogRecord:
         rec = LlogRecord(next(self._idx), rec_type, payload)
         self.records.append(rec)
+        self.added += 1
         return rec
+
+    def full(self) -> bool:
+        return self.cap is not None and self.added >= self.cap
 
     def cancel(self, cookies) -> int:
         """Cancel by cookie set; full logs get destroyed by the catalog."""
@@ -73,8 +79,9 @@ class LlogCatalog:
         self._seq = itertools.count(1)
 
     def _current(self) -> LlogHandle:
-        if not self.logs or len(self.logs[-1].records) >= self.LOG_CAP:
-            self.logs.append(LlogHandle(f"{self.name}-{next(self._seq)}"))
+        if not self.logs or self.logs[-1].full():
+            self.logs.append(LlogHandle(f"{self.name}-{next(self._seq)}",
+                                        cap=self.LOG_CAP))
         return self.logs[-1]
 
     def add(self, rec_type: str, payload: dict) -> LlogRecord:
@@ -84,7 +91,11 @@ class LlogCatalog:
         n = 0
         for lg in list(self.logs):
             n += lg.cancel(cookies)
-            if lg.empty() and lg is not self.logs[-1]:
+            # destroy drained logs. A FULL log is dead even when it is the
+            # current (last) one: its index slots are consumed, so the next
+            # add() rotates to a fresh log anyway — keeping it alive leaked
+            # one plain-log object per drained catalog tail.
+            if lg.empty() and (lg.full() or lg is not self.logs[-1]):
                 self.logs.remove(lg)
         return n
 

@@ -91,6 +91,29 @@ class Mdc:
                 self.imp.request("prealloc_fids",
                                  {"count": count}).data["fids"]]
 
+    # -------------------------------------------------- changelog consumer
+    def changelog_register(self) -> str:
+        """Register as a changelog consumer; returns the consumer id."""
+        return self.imp.request("changelog_register", {}).data["id"]
+
+    def changelog_deregister(self, user: str):
+        self.imp.request("changelog_deregister", {"id": user})
+
+    def changelog_read(self, user: str, since_idx: int | None = None,
+                       count: int = 0) -> list[dict]:
+        """Fetch retained records above `since_idx` (default: the
+        consumer's bookmark). Does NOT advance the bookmark — that is
+        `changelog_clear`'s job, after the consumer persisted them."""
+        return self.imp.request(
+            "changelog_read", {"id": user, "since_idx": since_idx,
+                               "count": count}).data["records"]
+
+    def changelog_clear(self, user: str, up_to: int) -> dict:
+        """Acknowledge records <= up_to; the MDT purges only past the
+        minimum bookmark across all registered consumers."""
+        return self.imp.request(
+            "changelog_clear", {"id": user, "up_to": up_to}).data
+
 
 class Lmv:
     """Logical Metadata Volume: routes ops across the MDS cluster

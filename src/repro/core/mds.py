@@ -21,7 +21,10 @@ Implemented:
   * metadata write-back-cache grants: a client may be granted a subtree
     lock + a preallocated fid range and reintegrate batched update records
     later (ch. 17, §6.5);
-  * open files tracked per-export so failed clients' orphans get cleaned.
+  * open files tracked per-export so failed clients' orphans get cleaned;
+  * per-MDT changelog (core.changelog): every reint/close/remote op emits
+    a typed record inside its transaction undo scope; consumers register/
+    read/clear over ptlrpc (changelog_* ops) with min-bookmark purging.
 """
 from __future__ import annotations
 
@@ -29,6 +32,7 @@ import dataclasses
 import itertools
 from typing import Any, Optional
 
+from repro.core import changelog as cl_mod
 from repro.core import dlm as dlm_mod
 from repro.core import llog as llog_mod
 from repro.core import ptlrpc as R
@@ -64,6 +68,11 @@ class Inode:
                 "has_buckets": "buckets" in self.ea}
 
 
+def _cl_create_type(ftype: str) -> str:
+    return {S_IFDIR: cl_mod.CL_MKDIR,
+            S_IFLNK: cl_mod.CL_SYMLINK}.get(ftype, cl_mod.CL_CREAT)
+
+
 def fhash(name: str, n: int) -> int:
     """Stable directory-bucket hash."""
     h = 2166136261
@@ -92,6 +101,7 @@ class MdsTarget(R.Target):
         self.peers: dict[str, R.Import] = {}      # peer mds uuid -> import
         self.peer_nids: dict[str, list] = peers or {}
         self.unlink_llog = llog_mod.LlogCatalog(f"{uuid}-unlink")
+        self.changelog = cl_mod.Changelog(uuid)
         # dependency records for the consistent cut (§6.7.6.3):
         # [(own_transno, {peer_uuid: peer_transno})]
         self.dep_log: list[tuple[int, dict]] = []
@@ -118,9 +128,15 @@ class MdsTarget(R.Target):
         ops["remote_create"] = self.op_remote_create
         ops["remote_link"] = self.op_remote_link
         ops["remote_unlink_inode"] = self.op_remote_unlink_inode
+        ops["dir_nonempty"] = self.op_dir_nonempty
+        ops["remote_nlink_adjust"] = self.op_remote_nlink_adjust
         ops["dep_records"] = self.op_dep_records
         ops["rollback_to"] = self.op_rollback_to
         ops["prune_history"] = self.op_prune_history
+        ops["changelog_register"] = self.op_changelog_register
+        ops["changelog_deregister"] = self.op_changelog_deregister
+        ops["changelog_read"] = self.op_changelog_read
+        ops["changelog_clear"] = self.op_changelog_clear
 
     # ------------------------------------------------------------- wiring
     def connect_peer(self, uuid: str, nids: list[str]):
@@ -146,6 +162,81 @@ class MdsTarget(R.Target):
         if ino is None:
             raise R.RpcError(-2, f"no inode {fid}")      # ENOENT
         return ino
+
+    # --------------------------------------------------------- changelog
+    def _cl(self, req: Optional[R.Request], cl_type: str, fid, *,
+            pfid=None, name: str = "", **extra):
+        """Emit one changelog record attributed to the requesting client.
+        Returns the record (or None while no consumer is registered) —
+        the caller's transaction undo MUST retract it so an aborted or
+        rolled-back reint leaves no phantom record. For MDS-MDS halves of
+        cross-MDT ops the coordinator forwards the real originator in the
+        request body (origin_client/origin_jobid); otherwise the requester
+        IS the originator. Every emit site opens its transaction right
+        after emitting, so the owning transno is the next one."""
+        client = jobid = ""
+        if req is not None:
+            client = req.body.get("origin_client", req.client_uuid)
+            jobid = req.body.get("origin_jobid", req.jobid)
+        return self.changelog.emit(
+            cl_type, fid, pfid=pfid, name=name, time=self.sim.now,
+            client=client, jobid=jobid, transno=self.transno + 1, **extra)
+
+    def _cl_origin(self, req: Optional[R.Request]) -> dict:
+        """Origin fields a coordinator forwards with MDS-MDS requests so
+        the peer's record half attributes the real client, not the
+        internal MDS RpcClient."""
+        if req is None:
+            return {}
+        return {"origin_client": req.body.get("origin_client",
+                                              req.client_uuid),
+                "origin_jobid": req.body.get("origin_jobid", req.jobid)}
+
+    def _cl_stabilize(self, recs):
+        """A record handed to a consumer (or purged on its behalf) must
+        be durable first — commit the journal if any of `recs` is still
+        in the uncommitted tail, so nothing a consumer has seen can be
+        rolled back by a crash."""
+        if any(r.transno > self.committed_transno for r in recs):
+            self.commit()
+
+    def op_changelog_register(self, req: R.Request) -> R.Reply:
+        uid = self.changelog.register()
+        return R.Reply(data={"id": uid, "last_idx": self.changelog.last_idx})
+
+    def op_changelog_deregister(self, req: R.Request) -> R.Reply:
+        try:
+            self.changelog.deregister(req.body["id"])
+        except KeyError:
+            raise R.RpcError(-2, req.body.get("id", ""))
+        return R.Reply()
+
+    def op_changelog_read(self, req: R.Request) -> R.Reply:
+        b = req.body
+        if b.get("id") not in self.changelog.users:
+            raise R.RpcError(-2, b.get("id", ""))
+        since = b.get("since_idx")
+        if since is None:
+            # default: everything the consumer has not cleared yet
+            since = self.changelog.users[b["id"]]
+        recs = self.changelog.read(since, b.get("count", 0))
+        self._cl_stabilize(recs)
+        # record payload moves like a bulk readdir page
+        wire = [r.to_wire() for r in recs]
+        return R.Reply(data={"records": wire,
+                             "last_idx": self.changelog.last_idx},
+                       bulk_nbytes=R.wire_size(wire))
+
+    def op_changelog_clear(self, req: R.Request) -> R.Reply:
+        if req.body.get("id") not in self.changelog.users:
+            raise R.RpcError(-22, req.body.get("id", ""))
+        up_to = req.body["up_to"]
+        # purging is destructive: anything acked must be durable first
+        self._cl_stabilize([r for r in self.changelog.records()
+                            if r.idx <= up_to])
+        self.changelog.clear(req.body["id"], up_to)
+        return R.Reply(data={"purged_to": self.changelog.purged_to,
+                             "records": len(self.changelog.catalog.pending())})
 
     # ---------------------------------------------------- txn w/ history
     def txn_meta(self, undo, deps: dict | None = None) -> int:
@@ -226,10 +317,13 @@ class MdsTarget(R.Target):
             self.inodes[fid] = inode
             self._dir_insert(parent, name, fid)
             created = True
+            clrec = self._cl(req, cl_mod.CL_CREAT, fid, pfid=parent.fid,
+                             name=name, mode=inode.mode)
 
             def undo():
                 self._dir_remove_raw(parent, name)
                 self.inodes.pop(fid, None)
+                self.changelog.retract(clrec)
             transno = self.txn_meta(undo)
         else:
             if "x" in flags and "c" in flags:
@@ -331,9 +425,12 @@ class MdsTarget(R.Target):
             if b.get("mtime") is not None:
                 inode.mtime = max(inode.mtime, b["mtime"])
             inode.mtime_on_ost = False
+            clrec = self._cl(req, cl_mod.CL_CLOSE, fid,
+                             size=inode.size, mtime=inode.mtime)
 
             def undo():
                 inode.size, inode.mtime, inode.mtime_on_ost = old
+                self.changelog.retract(clrec)
             return R.Reply(transno=self.txn_meta(undo))
         return R.Reply()
 
@@ -423,7 +520,7 @@ class MdsTarget(R.Target):
         self._last_deps = None
         if ftype == S_IFDIR and self.peer_nids and not r.get("fid") \
                 and r.get("remote_ok", True):
-            return self._mkdir_remote(parent, name, r)
+            return self._mkdir_remote(parent, name, r, req)
         fid = tuple(r["fid"]) if r.get("fid") else self.new_fid()
         if fid[0] != self.inode_group:
             # replay of a remote-MDS create: re-create the pinned fid on
@@ -432,14 +529,17 @@ class MdsTarget(R.Target):
             rep = self._peer(peer).request(
                 "remote_mkdir" if ftype == S_IFDIR else "remote_create",
                 {"mode": r.get("mode", 0o644), "fid": fid,
-                 "ftype": ftype})
+                 "ftype": ftype, **self._cl_origin(req)})
             self._dir_insert(parent, name, fid, is_dir=ftype == S_IFDIR)
             deps = {peer: rep.transno} if rep.transno else None
+            clrec = self._cl(req, _cl_create_type(ftype), fid,
+                             pfid=parent.fid, name=name)
 
             def undo_remote():
                 self._dir_remove_raw(parent, name)
                 if ftype == S_IFDIR:
                     parent.nlink -= 1
+                self.changelog.retract(clrec)
             return R.Reply(data={"fid": fid},
                            transno=self.txn_meta(undo_remote, deps))
         inode = Inode(fid, ftype, mode=r.get("mode", 0o644),
@@ -452,30 +552,40 @@ class MdsTarget(R.Target):
         self.inodes[fid] = inode
         self._dir_insert(parent, name, fid, is_dir=ftype == S_IFDIR)
         deps = self._last_deps
+        clrec = self._cl(req, _cl_create_type(ftype), fid, pfid=parent.fid,
+                         name=name, mode=inode.mode)
 
         def undo():
             self._dir_remove_raw(parent, name)
             self.inodes.pop(fid, None)
             if ftype == S_IFDIR:
                 parent.nlink -= 1
+            self.changelog.retract(clrec)
         transno = self.txn_meta(undo, deps)
         self.ldlm.bump_version(("fid", *parent.fid))
         return R.Reply(data={"fid": fid}, transno=transno)
 
-    def _mkdir_remote(self, parent: Inode, name: str, r) -> R.Reply:
+    def _mkdir_remote(self, parent: Inode, name: str, r,
+                      req: Optional[R.Request] = None) -> R.Reply:
         """§6.7.1.2: 'mkdir always creates the new directory on another
         MDS'. Two-node transaction with a dependency record."""
         peer = sorted(self.peer_nids)[
             len(parent.entries) % len(self.peer_nids)]
         rep = self._peer(peer).request(
-            "remote_mkdir", {"mode": r.get("mode", 0o755)})
+            "remote_mkdir", {"mode": r.get("mode", 0o755),
+                             **self._cl_origin(req)})
         fid = tuple(rep.data["fid"])
         self._dir_insert(parent, name, fid, is_dir=True)
         deps = {peer: rep.transno}
+        # the COORDINATOR (namespace side) logs the name-bearing record;
+        # the peer logged only an inode-half record (remote=True)
+        clrec = self._cl(req, cl_mod.CL_MKDIR, fid, pfid=parent.fid,
+                         name=name)
 
         def undo():
             self._dir_remove_raw(parent, name)
             parent.nlink -= 1
+            self.changelog.retract(clrec)
         transno = self.txn_meta(undo, deps)
         return R.Reply(data={"fid": fid, "remote": True}, transno=transno)
 
@@ -489,14 +599,157 @@ class MdsTarget(R.Target):
                       nlink=2 if ftype == S_IFDIR else 1,
                       mtime=self.sim.now)
         self.inodes[fid] = inode
+        # inode half of a cross-MDT create: nameless, flagged remote so
+        # namespace consumers (audit mirror) don't double-apply it
+        clrec = self._cl(req, _cl_create_type(ftype), fid, remote=True)
 
         def undo():
             self.inodes.pop(fid, None)
+            self.changelog.retract(clrec)
         return R.Reply(data={"fid": fid}, transno=self.txn_meta(undo))
 
     op_remote_create = op_remote_mkdir
 
     # --- unlink family
+    def _dir_nonempty(self, inode: Inode) -> bool:
+        """THE 'directory still has content' predicate (ENOTEMPTY source
+        of truth, shared by unlink / remote unlink / rename-over): own
+        entries, or any entry in a hash bucket — local buckets read
+        directly, remote ones via getattr (nentries)."""
+        if inode.entries:
+            return True
+        for bfid in inode.ea.get("buckets", []):
+            bfid = tuple(bfid)
+            if bfid[0] == self.inode_group:
+                b = self.inodes.get(bfid)
+                if b is not None and b.entries:
+                    return True
+            else:
+                try:
+                    a = self._peer(self._peer_for_group(bfid[0])).request(
+                        "getattr", {"fid": bfid}).data["attrs"]
+                except R.RpcError as e:
+                    if e.status == -2:
+                        continue       # bucket inode gone: nothing there
+                    raise R.RpcError(-16, "bucket unreachable")  # EBUSY
+                except R.TimeoutError_:
+                    # an unreachable bucket cannot prove emptiness —
+                    # refusing (EBUSY) beats destroying live entries
+                    raise R.RpcError(-16, "bucket unreachable")
+                if a["nentries"]:
+                    return True
+        return False
+
+    def op_dir_nonempty(self, req: R.Request) -> R.Reply:
+        """Read-only: authoritative emptiness answer for a directory this
+        MDT owns (cross-MDT rename-over prechecks ask here)."""
+        inode = self.inodes.get(tuple(req.body["fid"]))
+        if inode is None:
+            return R.Reply(data={"exists": False, "nonempty": False})
+        return R.Reply(data={
+            "exists": True,
+            "nonempty": inode.ftype == S_IFDIR
+            and self._dir_nonempty(inode)})
+
+    def op_remote_nlink_adjust(self, req: R.Request) -> R.Reply:
+        """'..'-link accounting half of a cross-MDT rename: the
+        coordinator moved/removed a subdirectory of a dir THIS MDT
+        owns."""
+        inode = self._get(req.body["fid"])
+        delta = int(req.body["delta"])
+        inode.nlink += delta
+
+        def undo():
+            inode.nlink -= delta
+        return R.Reply(transno=self.txn_meta(undo))
+
+    def _remote_nlink(self, fid: tuple, delta: int, deps: dict):
+        """Best-effort '..' accounting on a peer-owned parent dir; the
+        peer half joins the consistent cut via `deps`. A peer failure
+        leaves an nlink drift rather than aborting the caller's
+        already-applied rename."""
+        peer = self._peer_for_group(fid[0])
+        try:
+            rep = self._peer(peer).request(
+                "remote_nlink_adjust", {"fid": fid, "delta": delta})
+            deps[peer] = max(deps.get(peer, 0), rep.transno)
+        except (R.RpcError, R.TimeoutError_):
+            self.sim.stats.count("mds.remote_nlink_skipped")
+
+    def _victim_empty_or_raise(self, vfid: tuple, name: str):
+        """Rename-over guard: the displaced target must be an empty
+        directory (or a non-directory) — POSIX ENOTEMPTY, checked BEFORE
+        any mutation, asking the victim's MDT when its inode is remote.
+        Must be at least as strict as op_remote_unlink_inode so the
+        post-mutation victim unlink can never be refused."""
+        inode = self.inodes.get(vfid)
+        if inode is not None:
+            if inode.ftype == S_IFDIR and self._dir_nonempty(inode):
+                raise R.RpcError(-39, name)
+            return
+        if vfid[0] == self.inode_group:
+            return                     # locally owned but gone: stale entry
+        try:
+            d = self._peer(self._peer_for_group(vfid[0])).request(
+                "dir_nonempty", {"fid": vfid}).data
+        except R.RpcError as e:
+            if e.status == -2:
+                return                 # victim inode already gone
+            raise                      # EBUSY etc: cannot prove empty
+        except R.TimeoutError_:
+            # nothing has mutated yet: refusing is safe, clobbering a
+            # possibly non-empty dir is not
+            raise R.RpcError(-16, name)
+        if d["nonempty"]:
+            raise R.RpcError(-39, name)
+
+    def _drop_last_link(self, inode: Inode, data: dict,
+                        req: Optional[R.Request] = None,
+                        deps: dict | None = None):
+        """Last link gone: drop the inode — a (drained) split dir dies
+        with its hash buckets — and log one orphan-recovery llog record
+        per data object (§6.7.5); `data` gains the ea + cookies the
+        CLIENT needs to destroy the objects (§6.4.2, ch. 8.4). Shared by
+        unlink, remote unlink, and rename-over. Returns (removed_inode,
+        cookies, dropped_buckets) for `_undo_drop`."""
+        removed = self.inodes.pop(inode.fid)
+        cookies = []
+        buckets = []
+        if inode.ftype == S_IFDIR:
+            for bfid in inode.ea.get("buckets", []):
+                bfid = tuple(bfid)
+                if bfid[0] == self.inode_group:
+                    b = self.inodes.pop(bfid, None)
+                    if b is not None:
+                        buckets.append(b)
+                else:
+                    bpeer = self._peer_for_group(bfid[0])
+                    try:
+                        brep = self._peer(bpeer).request(
+                            "remote_unlink_inode",
+                            {"fid": bfid, **self._cl_origin(req)})
+                        if deps is not None:
+                            deps[bpeer] = max(deps.get(bpeer, 0),
+                                              brep.transno)
+                    except (R.RpcError, R.TimeoutError_):
+                        pass           # bucket survives for orphan cleanup
+        if "lov" in inode.ea:
+            for o in inode.ea["lov"]["objects"]:
+                rec = self.unlink_llog.add("unlink", {
+                    "ost": o["ost"], "group": o["group"], "oid": o["oid"]})
+                cookies.append(rec.cookie)
+            data["ea"] = dict(inode.ea)
+            data["cookies"] = cookies
+        return removed, cookies, buckets
+
+    def _undo_drop(self, removed: Inode, cookies: list, buckets: list):
+        """Transaction rollback half of _drop_last_link (local state
+        only: peer halves are the consistent cut's job)."""
+        self.inodes[removed.fid] = removed
+        self.unlink_llog.cancel(cookies)
+        for b in buckets:
+            self.inodes[b.fid] = b
+
     def _reint_unlink(self, r, req) -> R.Reply:
         parent = self._get(r["parent"])
         name = r["name"]
@@ -509,20 +762,31 @@ class MdsTarget(R.Target):
         if inode is None:
             # inode lives on a peer MDS (§6.7.5 two-stage unlink)
             peer = self._peer_for_group(fid[0])
-            rep = self._peer(peer).request("remote_unlink_inode",
-                                           {"fid": fid})
+            rep = self._peer(peer).request(
+                "remote_unlink_inode",
+                {"fid": fid, **self._cl_origin(req)})
             self._dir_remove_raw(parent, name)
             deps = dict(self._last_deps or {})
             deps[peer] = rep.transno
+            remote_was_dir = rep.data.get("ftype") == S_IFDIR
+            if remote_was_dir:
+                # mirror the local path: the removed subdir's ".." link
+                parent.nlink -= 1
+            clrec = self._cl(req, cl_mod.CL_RMDIR if remote_was_dir
+                             else cl_mod.CL_UNLINK, fid, pfid=parent.fid,
+                             name=name, last=rep.data.get("last", False))
 
             def undo():
-                parent.entries[name] = fid
+                # via _dir_insert: a split parent keeps entries in its
+                # hash buckets, never in the master entries dict
+                self._dir_insert(parent, name, fid)
+                if remote_was_dir:
+                    parent.nlink += 1
+                self.changelog.retract(clrec)
             return R.Reply(data=rep.data,
                            transno=self.txn_meta(undo, deps))
-        if inode.ftype == S_IFDIR and (inode.entries or
-                                       "buckets" in inode.ea):
-            if any(True for _ in inode.entries):
-                raise R.RpcError(-39, "not empty")       # ENOTEMPTY
+        if inode.ftype == S_IFDIR and self._dir_nonempty(inode):
+            raise R.RpcError(-39, "not empty")           # ENOTEMPTY
         was_dir = inode.ftype == S_IFDIR
         inode.nlink -= 2 if was_dir else 1
         self._dir_remove_raw(parent, name)
@@ -531,57 +795,61 @@ class MdsTarget(R.Target):
         data = {"fid": fid}
         cookies = []
         removed = None
+        dropped_buckets = []
+        deps = dict(self._last_deps or {})
         if inode.nlink <= 0:
-            removed = self.inodes.pop(fid)
-            # last link gone: return the LOV EA + llog cookies so the
-            # client destroys data objects (§6.4.2); log one record per
-            # object for orphan recovery (§6.7.5)
-            if "lov" in inode.ea:
-                for o in inode.ea["lov"]["objects"]:
-                    rec = self.unlink_llog.add("unlink", {
-                        "ost": o["ost"], "group": o["group"],
-                        "oid": o["oid"]})
-                    cookies.append(rec.cookie)
-                data["ea"] = dict(inode.ea)
-                data["cookies"] = cookies
-        deps = self._last_deps
+            removed, cookies, dropped_buckets = \
+                self._drop_last_link(inode, data, req, deps)
+        clrec = self._cl(req, cl_mod.CL_RMDIR if was_dir
+                         else cl_mod.CL_UNLINK, fid, pfid=parent.fid,
+                         name=name, last=removed is not None)
 
         def undo():
             if removed is not None:
-                self.inodes[fid] = removed
-                self.unlink_llog.cancel(cookies)
+                self._undo_drop(removed, cookies, dropped_buckets)
             removed_inode = self.inodes[fid]
             removed_inode.nlink += 2 if was_dir else 1
-            parent.entries[name] = fid
+            # via _dir_insert: a split parent keeps entries in its hash
+            # buckets, never in the master entries dict
+            self._dir_insert(parent, name, fid)
             if was_dir:
                 parent.nlink += 1
-        transno = self.txn_meta(undo, deps)
+            self.changelog.retract(clrec)
+        transno = self.txn_meta(undo, deps or None)
         self.ldlm.bump_version(("fid", *parent.fid))
         return R.Reply(data=data, transno=transno)
 
     def op_remote_unlink_inode(self, req: R.Request) -> R.Reply:
         fid = tuple(req.body["fid"])
         inode = self._get(fid)
-        inode.nlink -= 1
-        data = {"fid": fid}
+        was_dir = inode.ftype == S_IFDIR
+        # authoritative ENOTEMPTY: the coordinator cannot see a remote
+        # directory's entries, so ITS owner refuses here (before the
+        # coordinator has mutated anything — this RPC goes first)
+        if was_dir and self._dir_nonempty(inode):
+            raise R.RpcError(-39, "not empty")
+        # a directory loses both its name link and its own "." link —
+        # decrementing by 1 left every cross-MDT-removed dir inode alive
+        # forever (and published last=False for its final removal)
+        inode.nlink -= 2 if was_dir else 1
+        data = {"fid": fid, "ftype": inode.ftype}
         removed = None
         cookies = []
+        dropped_buckets = []
         if inode.nlink <= 0:
-            removed = self.inodes.pop(fid)
-            if "lov" in inode.ea:
-                for o in inode.ea["lov"]["objects"]:
-                    rec = self.unlink_llog.add("unlink", {
-                        "ost": o["ost"], "group": o["group"],
-                        "oid": o["oid"]})
-                    cookies.append(rec.cookie)
-                data["ea"] = dict(inode.ea)
-                data["cookies"] = cookies
+            removed, cookies, dropped_buckets = \
+                self._drop_last_link(inode, data, req)
+        data["last"] = removed is not None
+        # inode half of a cross-MDT unlink (§6.7.5 two-stage): nameless
+        clrec = self._cl(req, cl_mod.CL_RMDIR if was_dir
+                         else cl_mod.CL_UNLINK, fid, remote=True,
+                         last=removed is not None)
 
         def undo():
             if removed is not None:
-                self.inodes[fid] = removed
-                self.unlink_llog.cancel(cookies)
-            self.inodes[fid].nlink += 1
+                self._undo_drop(removed, cookies, dropped_buckets)
+            self.inodes[fid].nlink += 2 if was_dir else 1
+            self.changelog.retract(clrec)
         return R.Reply(data=data, transno=self.txn_meta(undo))
 
     # --- rename / link / setattr
@@ -595,66 +863,181 @@ class MdsTarget(R.Target):
         self._revoke_client_locks(src_fid, dst_fid)
         src = self.inodes.get(src_fid)
         dst = self.inodes.get(dst_fid)
-        deps = {}
-        self._last_deps = None
-        # --- source side: lookup + remove
+        # --- read-only lookups first: the source entry and the entry the
+        # rename will displace, wherever their parents live — ENOENT and
+        # ENOTEMPTY (rename over a non-empty dir, as unlink refuses it)
+        # are decided BEFORE anything mutates; rename onto itself is a
+        # no-op victim-wise
         if src is not None:
             fid = self._lookup_entry(src, r["src_name"])
-            if fid is None:
-                raise R.RpcError(-2, r["src_name"])
+        else:
+            speer = self._peer_for_group(src_fid[0])
+            f = self._peer(speer).request(
+                "bucket_lookup", {"bucket": src_fid,
+                                  "name": r["src_name"]}).data.get("fid")
+            fid = tuple(f) if f else None
+        if fid is None:
+            raise R.RpcError(-2, r["src_name"])
+        if dst is not None:
+            displaced = self._lookup_entry(dst, r["dst_name"])
+        else:
+            dpeer = self._peer_for_group(dst_fid[0])
+            f = self._peer(dpeer).request(
+                "bucket_lookup", {"bucket": dst_fid,
+                                  "name": r["dst_name"]}).data.get("fid")
+            displaced = tuple(f) if f else None
+        if displaced is not None and tuple(displaced) == fid:
+            displaced = None
+        if displaced is not None:
+            self._victim_empty_or_raise(tuple(displaced), r["dst_name"])
+        deps = {}
+        self._last_deps = None
+        # --- source side: remove
+        if src is not None:
             self._dir_remove_raw(src, r["src_name"])
             if self._last_deps:
                 deps.update(self._last_deps)
         else:
-            peer = self._peer_for_group(src_fid[0])
-            rep = self._peer(peer).request(
+            rep = self._peer(speer).request(
                 "bucket_remove", {"bucket": src_fid, "name": r["src_name"]})
-            fid = rep.data.get("fid")
-            if fid is None:
-                raise R.RpcError(-2, r["src_name"])
-            fid = tuple(fid)
-            deps[peer] = rep.transno
+            deps[speer] = rep.transno
         # --- destination side: insert
         self._last_deps = None
         if dst is not None:
-            displaced = self._lookup_entry(dst, r["dst_name"])
             self._dir_insert(dst, r["dst_name"], fid)
             if self._last_deps:
                 deps.update(self._last_deps)
         else:
-            displaced = None
-            peer = self._peer_for_group(dst_fid[0])
-            rep = self._peer(peer).request(
+            rep = self._peer(dpeer).request(
                 "bucket_insert", {"bucket": dst_fid, "name": r["dst_name"],
                                   "fid": fid})
-            deps[peer] = max(deps.get(peer, 0), rep.transno)
+            deps[dpeer] = max(deps.get(dpeer, 0), rep.transno)
         inode = self.inodes.get(fid)
-        was_dir = inode is not None and inode.ftype == S_IFDIR
-        if was_dir and src is not None and dst is not None \
-                and src.fid != dst.fid:
-            src.nlink -= 1
-            dst.nlink += 1
+        if inode is not None:
+            was_dir = inode.ftype == S_IFDIR
+        elif fid[0] != self.inode_group:
+            # the moved inode lives on a peer MDT: its type still decides
+            # the parents' ".." nlink transfer below (peer failure here
+            # must not abort — both namespace halves are applied already)
+            try:
+                was_dir = self._peer(self._peer_for_group(fid[0])).request(
+                    "getattr", {"fid": fid}).data["attrs"]["type"] \
+                    == S_IFDIR
+            except (R.RpcError, R.TimeoutError_):
+                was_dir = False
+        else:
+            was_dir = False
+        # '..' transfer between the parents, reaching peer-owned ones
+        # over remote_nlink_adjust (their halves join the consistent cut)
+        transfer = was_dir and src_fid != dst_fid
+        if transfer:
+            if src is not None:
+                src.nlink -= 1
+            else:
+                self._remote_nlink(src_fid, -1, deps)
+            if dst is not None:
+                dst.nlink += 1
+            else:
+                self._remote_nlink(dst_fid, +1, deps)
+        # --- displaced victim: rename-over unlinks the old target (its
+        # inode used to leak here with a dangling nlink, disagreeing
+        # with any link-accounting consumer of the changelog)
+        victim = self.inodes.get(tuple(displaced)) if displaced else None
+        victim_was_dir = victim is not None and victim.ftype == S_IFDIR
+        vremoved = None
+        vcookies = []
+        vbuckets = []
+        vextra = {}
+        data = {"fid": fid}
+        v_dst_dec = False
+        if displaced is not None and victim is None \
+                and tuple(displaced)[0] != self.inode_group:
+            # victim inode lives on a peer MDT: two-stage unlink of its
+            # inode half (§6.7.5), like the remote branch of unlink.
+            # (A displaced LOCAL-group fid with no inode is a dangling
+            # entry — nothing to unlink, the insert already replaced it.)
+            vpeer = self._peer_for_group(tuple(displaced)[0])
+            try:
+                vrep = self._peer(vpeer).request(
+                    "remote_unlink_inode",
+                    {"fid": displaced, **self._cl_origin(req)})
+            except (R.RpcError, R.TimeoutError_) as e:
+                # the namespace halves are already applied; aborting here
+                # would leave a half-rename OUTSIDE any transaction. A
+                # dangling entry (-2) has nothing to unlink; any other
+                # peer failure leaves the victim inode alive on its MDT
+                # for orphan cleanup — the rename itself stays atomic
+                if not (isinstance(e, R.RpcError) and e.status == -2):
+                    self.sim.stats.count("mds.rename_victim_skipped")
+                vrep = None
+            if vrep is not None:
+                deps[vpeer] = max(deps.get(vpeer, 0), vrep.transno)
+                for k in ("ea", "cookies"):
+                    if k in vrep.data:
+                        data[k] = vrep.data[k]
+                if vrep.data.get("ftype") == S_IFDIR \
+                        and vrep.data.get("last"):
+                    # the victim dir's ".." link leaves the dst parent
+                    if dst is not None:
+                        dst.nlink -= 1
+                        v_dst_dec = True
+                    else:
+                        self._remote_nlink(dst_fid, -1, deps)
+                vextra = {"victim": tuple(displaced),
+                          "victim_last": vrep.data.get("last", False)}
+        elif victim is not None:
+            victim.nlink -= 2 if victim_was_dir else 1
+            if victim.nlink <= 0:
+                vremoved, vcookies, vbuckets = \
+                    self._drop_last_link(victim, data, req, deps)
+                if victim_was_dir:
+                    if dst is not None:
+                        dst.nlink -= 1         # its ".." link
+                    else:
+                        self._remote_nlink(dst_fid, -1, deps)
+            vextra = {"victim": victim.fid,
+                      "victim_last": vremoved is not None}
+        clrec = self._cl(req, cl_mod.CL_RENAME, fid, pfid=dst_fid,
+                         name=r["dst_name"], spfid=src_fid,
+                         sname=r["src_name"], **vextra)
 
         def undo():
+            if v_dst_dec:
+                dst.nlink += 1
+            if victim is not None:
+                if vremoved is not None:
+                    self._undo_drop(vremoved, vcookies, vbuckets)
+                    if victim_was_dir and dst is not None:
+                        dst.nlink += 1
+                self.inodes[victim.fid].nlink += 2 if victim_was_dir else 1
             if dst is not None:
                 self._dir_remove_raw(dst, r["dst_name"])
                 if displaced is not None:
-                    dst.entries[r["dst_name"]] = displaced
+                    # via _dir_insert: a split dst keeps its entries in
+                    # hash buckets, never in the master entries dict
+                    self._dir_insert(dst, r["dst_name"], displaced)
             if src is not None:
                 self._dir_insert(src, r["src_name"], fid)
-            if was_dir and src is not None and dst is not None \
-                    and src.fid != dst.fid:
-                src.nlink += 1
-                dst.nlink -= 1
+            if transfer:
+                if src is not None:
+                    src.nlink += 1
+                if dst is not None:
+                    dst.nlink -= 1
+            self.changelog.retract(clrec)
         transno = self.txn_meta(undo, deps or None)
         for pf in {src_fid, dst_fid}:
             self.ldlm.bump_version(("fid", *pf))
-        return R.Reply(data={"fid": fid}, transno=transno)
+        return R.Reply(data=data, transno=transno)
 
     def _reint_link(self, r, req) -> R.Reply:
         fid = tuple(r["fid"])
         parent = self._get(r["parent"])
         self._revoke_client_locks(parent.fid)
+        # EEXIST check BEFORE any nlink bump: the remote_link RPC commits
+        # on the peer in its own transaction, so raising after it used to
+        # leak a permanent +1 on the remote inode's nlink
+        if self._lookup_entry(parent, r["name"]) is not None:
+            raise R.RpcError(-17, r["name"])
         inode = self.inodes.get(fid)
         self._last_deps = None
         deps = {}
@@ -664,18 +1047,17 @@ class MdsTarget(R.Target):
             deps[peer] = rep.transno
         else:
             inode.nlink += 1
-        if self._lookup_entry(parent, r["name"]) is not None:
-            if inode is not None:
-                inode.nlink -= 1
-            raise R.RpcError(-17, r["name"])
         self._dir_insert(parent, r["name"], fid)
         if self._last_deps:
             deps.update(self._last_deps)
+        clrec = self._cl(req, cl_mod.CL_LINK, fid, pfid=parent.fid,
+                         name=r["name"])
 
         def undo():
             self._dir_remove_raw(parent, r["name"])
             if inode is not None:
                 inode.nlink -= 1
+            self.changelog.retract(clrec)
         return R.Reply(data={"fid": fid},
                        transno=self.txn_meta(undo, deps or None))
 
@@ -700,10 +1082,13 @@ class MdsTarget(R.Target):
         inode.mtime = a.get("mtime", inode.mtime)
         if "size" in a:
             inode.size = a["size"]
+        clrec = self._cl(req, cl_mod.CL_SETATTR, inode.fid, attrs=dict(a),
+                         ea_keys=sorted(r["ea"]) if r.get("ea") else [])
 
         def undo():
             (inode.ea, inode.mode, inode.uid, inode.gid, inode.mtime,
              inode.size) = ({**old[0]}, *old[1:])
+            self.changelog.retract(clrec)
         return R.Reply(data={"attrs": inode.attrs()},
                        transno=self.txn_meta(undo))
 

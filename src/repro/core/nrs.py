@@ -21,9 +21,10 @@ chains:
   * ``orr``  — object round-robin: the same fair chains keyed by
     (group, oid), modelling per-object batched ordering (disk-friendly
     grouping; requests to a cold object never wait behind a hot one).
-  * ``tbf``  — token bucket filter QoS: per-class buckets (class = client
-    uuid, or a ``rules`` override per uuid) delay a request's start until
-    a token is available, enforcing requests/sec rate limits.
+  * ``tbf``  — token bucket filter QoS: per-class buckets (class = the
+    request's jobid when a ``rules`` entry matches it, else the client
+    uuid) delay a request's start until a token is available, enforcing
+    requests/sec rate limits per tenant or per batch job.
 
 Every policy keeps request accounting (per-client and per-object counts,
 total queue wait) exposed through ``info()`` — the substrate for the
@@ -51,6 +52,8 @@ class NrsPolicy:
         self.n_reqs = 0
         self.total_wait = 0.0
         self.per_client = defaultdict(int)
+        self.per_client_wait = defaultdict(float)
+        self.per_jobid = defaultdict(int)
         self.per_object = defaultdict(int)
 
     # ------------------------------------------------------------ schedule
@@ -62,8 +65,13 @@ class NrsPolicy:
     # ---------------------------------------------------------- accounting
     def _account(self, req, arrival: float, start: float):
         self.n_reqs += 1
-        self.total_wait += max(0.0, start - arrival)
+        wait = max(0.0, start - arrival)
+        self.total_wait += wait
         self.per_client[req.client_uuid] += 1
+        self.per_client_wait[req.client_uuid] += wait
+        jobid = getattr(req, "jobid", "")
+        if jobid:
+            self.per_jobid[jobid] += 1
         oid = req.body.get("oid")
         if oid is not None:
             self.per_object[(req.body.get("group", 0), oid)] += 1
@@ -78,6 +86,14 @@ class NrsPolicy:
             "avg_queue_wait_us": round(
                 1e6 * self.total_wait / self.n_reqs, 3) if self.n_reqs else 0.0,
             "per_client": dict(self.per_client),
+            # per-export breakdown (procfs: one row per client uuid)
+            "per_export": {
+                u: {"reqs": n,
+                    "queue_wait_s": round(self.per_client_wait[u], 6),
+                    "avg_queue_wait_us": round(
+                        1e6 * self.per_client_wait[u] / n, 3)}
+                for u, n in self.per_client.items()},
+            "per_jobid": dict(self.per_jobid),
         }
 
 
@@ -162,7 +178,10 @@ class TbfPolicy(NrsPolicy):
     params:
       rate  — default tokens/sec for every class (1 token per request)
       burst — bucket depth (allows short bursts at line rate)
-      rules — {client_uuid: rate} overrides (a tenant-throttling rule)
+      rules — {class: rate} overrides, matched against the request's
+              jobid first, then its client uuid. A jobid rule makes every
+              client running under that batch-job tag share ONE bucket
+              (the production "throttle this job, whoever runs it" knob).
     """
 
     name = "tbf"
@@ -180,11 +199,19 @@ class TbfPolicy(NrsPolicy):
     def rate_for(self, key) -> float:
         return float(self.rules.get(key, self.rate))
 
+    def classify(self, req):
+        """TBF class: a matching jobid rule wins over the client uuid, so
+        all clients of one batch job drain a single shared bucket."""
+        jobid = getattr(req, "jobid", "")
+        if jobid and jobid in self.rules:
+            return jobid
+        return req.client_uuid
+
     def schedule(self, req, arrival, cost):
         if req.opcode in CONTROL_OPS:
             self._account(req, arrival, arrival)
             return arrival
-        key = req.client_uuid
+        key = self.classify(req)
         rate = max(1e-9, self.rate_for(key))
         tokens, last = self.buckets.get(key, (self.burst, arrival))
         # refill up to the arrival instant (clock may rewind between

@@ -109,6 +109,9 @@ class Request:
     replay: bool = False
     bulk_nbytes: int = 0         # niobuf vector total (timing)
     transno: int = 0             # assigned by server on updates
+    jobid: str = ""              # batch-job tag: TBF NRS classification +
+                                 # changelog attribution (one plumbing,
+                                 # two consumers)
 
 
 @dataclasses.dataclass
@@ -502,7 +505,7 @@ class Import:
                       xid=self.client.next_xid(), client_uuid=self.client.uuid,
                       boot_count=self.client.boot_count,
                       conn_generation=self.generation,
-                      bulk_nbytes=bulk_nbytes)
+                      bulk_nbytes=bulk_nbytes, jobid=self.client.jobid)
         for attempt in range(self.max_reconnects):
             reply = self._send_once(req)
             if reply is None:
@@ -623,6 +626,8 @@ class RpcClient:
         self.network = node.cluster.network
         self.sim = node.sim
         self.uuid = f"client-{node.name}-{next(self._uuid_seq)}"
+        self.jobid = ""              # stamped into every Request (the
+                                     # JOBENV tag of real Lustre clients)
         self.boot_count = 1
         self._xid = itertools.count(1)
         self.imports: dict[str, Import] = {}

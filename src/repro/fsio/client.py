@@ -280,24 +280,31 @@ class LustreClient:
     def rename(self, old: str, new: str):
         sp, sn = self._resolve_parent(old)
         dp, dn = self._resolve_parent(new)
-        self.lmv.reint({"type": "rename", "src": sp, "src_name": sn,
-                        "dst": dp, "dst_name": dn})
+        rep = self.lmv.reint({"type": "rename", "src": sp, "src_name": sn,
+                              "dst": dp, "dst_name": dn})
         self._invalidate(sp, sn)
         self._invalidate(dp, dn)
+        # rename-over displaced the old target's last link: destroy its
+        # data objects exactly as unlink does
+        self._destroy_from_reply(rep)
 
     def unlink(self, path: str):
         parent, name = self._resolve_parent(path)
         rep = self.lmv.reint({"type": "unlink", "parent": parent,
                               "name": name})
         self._invalidate(parent, name)
-        # last link: WE destroy the data objects, shipping llog cookies;
-        # OSTs cancel the MDS records once their destroys commit (ch. 8.4)
+        self._destroy_from_reply(rep)
+
+    rmdir = unlink
+
+    def _destroy_from_reply(self, rep):
+        """Last link gone (unlink or rename-over): the reply's LOV EA +
+        llog cookies hand the object destroys to THE CLIENT; OSTs cancel
+        the MDS records once their destroys commit (ch. 8.4)."""
         ea = (rep.data or {}).get("ea") or {}
         if "lov" in ea:
             lsm = lov_mod.StripeMd.from_ea(ea["lov"])
             self.lov.destroy(lsm, rep.data.get("cookies"))
-
-    rmdir = unlink
 
     # ------------------------------------------------------------- stat
     def stat(self, path: str) -> dict:
@@ -320,6 +327,28 @@ class LustreClient:
             return True
         except FsError:
             return False
+
+    # -------------------------------------------------- jobid / changelog
+    def set_jobid(self, jobid: str):
+        """Tag every subsequent RPC from this client with a batch-job id
+        (the JOBENV model): the same tag drives TBF NRS classification on
+        servers and attribution in changelog records."""
+        self.rpc.jobid = jobid
+
+    def changelog_register(self, *, mdt: int = 0) -> str:
+        return self.lmv.mdcs[mdt].changelog_register()
+
+    def changelog_deregister(self, user: str, *, mdt: int = 0):
+        self.lmv.mdcs[mdt].changelog_deregister(user)
+
+    def changelog_read(self, user: str, *, mdt: int = 0,
+                       since_idx: int | None = None,
+                       count: int = 0) -> list[dict]:
+        return self.lmv.mdcs[mdt].changelog_read(user, since_idx, count)
+
+    def changelog_clear(self, user: str, up_to: int, *,
+                        mdt: int = 0) -> dict:
+        return self.lmv.mdcs[mdt].changelog_clear(user, up_to)
 
     def statfs(self) -> dict:
         mds = self.lmv.statfs()

@@ -1,0 +1,729 @@
+"""Changelog subsystem (core.changelog + MDS hooks + audit tooling).
+
+Covers the ISSUE-2 tentpole: typed records emitted inside the reint
+transaction scope, the register/read/clear consumer protocol with
+min-bookmark purging, jobid tagging, the llog full-log leak fix, and the
+Robinhood-style audit mirror over a 2-MDT striped namespace.
+"""
+import pytest
+
+from repro.core import LustreCluster
+from repro.core import changelog as CL
+from repro.core import ptlrpc as R
+from repro.core.llog import LlogCatalog
+from repro.core.mds import ROOT_FID
+from repro.fsio import LustreClient
+from repro.tools.audit import ChangelogAuditor, NamespaceMirror
+
+
+def mk(mdses=1, **kw):
+    kw.setdefault("commit_interval", 64)
+    c = LustreCluster(osts=2, mdses=mdses, clients=1, **kw)
+    return c, LustreClient(c).mount()
+
+
+# ----------------------------------------------------------- record types
+
+def test_record_types_names_and_order():
+    c, fs = mk()
+    user = fs.changelog_register()
+    fs.mkdir("/d")
+    fh = fs.creat("/d/f")
+    fs.write(fh, b"hello")
+    fs.close(fh)
+    fs.symlink("/d/f", "/d/s")
+    fs.link("/d/f", "/d/f2")
+    fs.rename("/d/f", "/d/g")
+    dfid = fs.resolve("/d")
+    gfid = fs.resolve("/d/g")
+    fs.lmv.reint({"type": "setattr", "fid": gfid, "attrs": {"mode": 0o600}})
+    fs.unlink("/d/f2")
+    recs = fs.changelog_read(user)
+    types = [r["type"] for r in recs]
+    for t in (CL.CL_MKDIR, CL.CL_CREAT, CL.CL_CLOSE, CL.CL_SYMLINK,
+              CL.CL_LINK, CL.CL_RENAME, CL.CL_SETATTR, CL.CL_UNLINK):
+        assert t in types, (t, types)
+    # indices strictly increasing, timestamps non-decreasing
+    idxs = [r["idx"] for r in recs]
+    assert idxs == sorted(idxs) and len(set(idxs)) == len(idxs)
+    times = [r["time"] for r in recs]
+    assert times == sorted(times)
+    # name/fid/pfid payloads
+    by_type = {r["type"]: r for r in recs}
+    assert by_type[CL.CL_MKDIR]["name"] == "d"
+    assert by_type[CL.CL_MKDIR]["pfid"] == ROOT_FID
+    assert by_type[CL.CL_CREAT]["name"] == "f"
+    assert tuple(by_type[CL.CL_CREAT]["pfid"]) == dfid
+    assert by_type[CL.CL_CLOSE]["extra"]["size"] == 5
+    ren = by_type[CL.CL_RENAME]
+    assert (ren["extra"]["sname"], ren["name"]) == ("f", "g")
+    assert tuple(ren["fid"]) == gfid
+    assert by_type[CL.CL_UNLINK]["name"] == "f2"
+    # every record attributes the originating client
+    assert all(r["client"] == fs.rpc.uuid for r in recs)
+
+
+def test_recording_gated_on_registered_consumer():
+    c, fs = mk()
+    fs.mkdir("/before")                # nobody listening: not recorded
+    mds = c.mds_targets[0]
+    assert mds.changelog.info() == {
+        "active": False, "users": {}, "records": 0, "last_idx": 0,
+        "purged_to": 0, "plain_logs": 0}
+    user = fs.changelog_register()
+    assert fs.changelog_read(user) == []
+    fs.mkdir("/after")
+    names = [r["name"] for r in fs.changelog_read(user)]
+    assert names == ["after"]
+
+
+def test_failed_reint_emits_no_phantom_record():
+    c, fs = mk()
+    user = fs.changelog_register()
+    fs.mkdir("/d")
+    with pytest.raises(Exception):
+        fs.mkdir("/d")                 # EEXIST
+    types = [(r["type"], r["name"]) for r in fs.changelog_read(user)]
+    assert types == [(CL.CL_MKDIR, "d")]
+
+
+# ------------------------------------------------- consumers & bookmarks
+
+def test_min_bookmark_across_consumers_governs_purge():
+    """Doreau's model: the SLOWEST registered consumer pins the stream —
+    clears by a fast consumer purge nothing until the slow one catches
+    up, and reading never purges (ISSUE-2 acceptance)."""
+    c, fs = mk()
+    mds = c.mds_targets[0]
+    fast = fs.changelog_register()
+    slow = fs.changelog_register()
+    for i in range(6):
+        fs.mkdir(f"/d{i}")
+    recs = fs.changelog_read(fast)
+    total = len(recs)
+    assert total == 6
+    last = recs[-1]["idx"]
+    # reading does not purge
+    fs.changelog_read(fast)
+    fs.changelog_read(slow)
+    assert mds.changelog.info()["records"] == total
+    # fast consumer acks everything: min bookmark still 0 -> no purge
+    fs.changelog_clear(fast, last)
+    assert mds.changelog.info()["records"] == total
+    assert len(fs.changelog_read(slow)) == total
+    # slow consumer acks half: purge exactly up to its bookmark
+    mid = recs[2]["idx"]
+    fs.changelog_clear(slow, mid)
+    info = mds.changelog.info()
+    assert info["records"] == total - 3
+    assert info["purged_to"] == mid
+    assert [r["idx"] for r in fs.changelog_read(slow)] == \
+        [r["idx"] for r in recs[3:]]
+    # slow consumer catches up: stream drains
+    fs.changelog_clear(slow, last)
+    assert mds.changelog.info()["records"] == 0
+    # default read resumes from the consumer's own bookmark
+    fs.mkdir("/new")
+    assert [r["name"] for r in fs.changelog_read(slow)] == ["new"]
+
+
+def test_deregister_releases_bookmark_pin():
+    c, fs = mk()
+    mds = c.mds_targets[0]
+    aud = fs.changelog_register()
+    lagger = fs.changelog_register()
+    fs.mkdir("/a")
+    fs.mkdir("/b")
+    last = fs.changelog_read(aud)[-1]["idx"]
+    fs.changelog_clear(aud, last)
+    assert mds.changelog.info()["records"] == 2    # lagger pins
+    fs.changelog_deregister(lagger)
+    assert mds.changelog.info()["records"] == 0    # pin released
+    # deregistering the LAST consumer stops recording
+    fs.changelog_deregister(aud)
+    fs.mkdir("/c")
+    assert mds.changelog.info()["records"] == 0
+    assert not mds.changelog.active
+
+
+def test_lctl_and_procfs_surface_consumer_state():
+    c, fs = mk()
+    user = c.lctl("changelog_register", "MDS0000")
+    fs.mkdir("/x")
+    info = c.procfs()["targets"]["MDS0000"]["changelog"]
+    assert info["active"] and user in info["users"]
+    assert info["records"] == 1
+    assert c.lctl("changelog_info", "MDS0000")["last_idx"] == 1
+    c.lctl("changelog_deregister", "MDS0000", user)
+    assert not c.procfs()["targets"]["MDS0000"]["changelog"]["active"]
+
+
+# ------------------------------------------------------------------ jobid
+
+def test_records_carry_jobid():
+    c, fs = mk()
+    user = fs.changelog_register()
+    fs.set_jobid("train-7b@step1000")
+    fs.mkdir("/ckpt")
+    fh = fs.creat("/ckpt/w0")
+    fs.close(fh)
+    fs.set_jobid("")
+    fs.unlink("/ckpt/w0")
+    recs = fs.changelog_read(user)
+    jobs = {(r["type"], r["name"]): r["jobid"] for r in recs}
+    assert jobs[(CL.CL_MKDIR, "ckpt")] == "train-7b@step1000"
+    assert jobs[(CL.CL_CREAT, "w0")] == "train-7b@step1000"
+    assert jobs[(CL.CL_UNLINK, "w0")] == ""
+
+
+def test_changelog_read_rejects_unknown_consumer():
+    c, fs = mk()
+    user = fs.changelog_register()
+    fs.mkdir("/d")
+    with pytest.raises(R.RpcError):
+        fs.changelog_read("cl999")                # never registered
+    fs.changelog_deregister(user)
+    with pytest.raises(R.RpcError):
+        fs.changelog_read(user)                   # gone after deregister
+
+
+def test_remote_half_records_attribute_origin_client():
+    """Cross-MDT halves executed over the MDS-MDS import must attribute
+    the ORIGINATING client uuid/jobid, not the coordinator MDS's internal
+    RpcClient."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    fs.set_jobid("jobX")
+    u0 = fs.changelog_register(mdt=0)
+    u1 = fs.changelog_register(mdt=1)
+    fs.mkdir("/d1")                               # inode half on MDS1
+    fs.rmdir("/d1")                               # rmdir half on MDS1
+    remote = [r for r in fs.changelog_read(u1, mdt=1)
+              if (r.get("extra") or {}).get("remote")]
+    assert {r["type"] for r in remote} == {CL.CL_MKDIR, CL.CL_RMDIR}
+    assert all(r["client"] == fs.rpc.uuid for r in remote), remote
+    assert all(r["jobid"] == "jobX" for r in remote), remote
+    # coordinator-side records agree
+    coord = fs.changelog_read(u0, mdt=0)
+    assert all(r["client"] == fs.rpc.uuid and r["jobid"] == "jobX"
+               for r in coord)
+
+
+def test_cross_mdt_rmdir_typed_and_frees_remote_inode():
+    """A cross-MDT rmdir must look like a LOCAL rmdir in the stream:
+    RMDIR type (not UNLINK) on both halves, last=True, and the remote
+    dir inode actually freed (nlink accounting counted only the name
+    link, leaking one inode per removed remote directory)."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    u0 = fs.changelog_register(mdt=0)
+    mds1 = c.mds_targets[1]
+    inodes_before = len(mds1.inodes)
+    fs.mkdir("/d1")                               # remote inode on MDS1
+    fs.rmdir("/d1")
+    assert len(mds1.inodes) == inodes_before      # no leaked dir inode
+    coord = {r["type"]: r for r in fs.changelog_read(u0)}
+    assert CL.CL_RMDIR in coord and CL.CL_UNLINK not in coord
+    assert coord[CL.CL_RMDIR]["extra"]["last"] is True
+    # create/remove churn stays flat (the leaks compounded per cycle):
+    # neither remote inodes nor the parent's nlink may drift
+    root_nlink = fs.stat("/")["nlink"]
+    for i in range(5):
+        fs.mkdir(f"/x{i}")
+        fs.rmdir(f"/x{i}")
+    assert len(mds1.inodes) == inodes_before
+    assert fs.stat("/")["nlink"] == root_nlink
+
+
+def test_rename_over_unlinks_displaced_inode():
+    """Rename over an existing name must unlink the displaced target:
+    inode freed, data objects destroyed by the client (as in unlink),
+    RENAME record carries the victim — the MDS used to leak the inode
+    (and its OST objects) while the audit mirror correctly killed it."""
+    c, fs = mk()
+    user = fs.changelog_register()
+    fh = fs.creat("/a", stripe_count=2)
+    fs.write(fh, b"winner")
+    fs.close(fh)
+    fh = fs.creat("/b", stripe_count=2)
+    fs.write(fh, b"loser-data")
+    fs.close(fh)
+    mds = c.mds_targets[0]
+    inodes = len(mds.inodes)
+    objs = sum(len(t.obd.objects) for t in c.ost_targets)
+    bfid = fs.resolve("/b")
+    fs.rename("/a", "/b")
+    assert len(mds.inodes) == inodes - 1         # victim inode freed
+    assert sum(len(t.obd.objects) for t in c.ost_targets) == objs - 2
+    fh = fs.open("/b")
+    assert fs.read(fh, 16) == b"winner"
+    fs.close(fh)
+    ren = [r for r in fs.changelog_read(user) if r["type"] == CL.CL_RENAME]
+    assert tuple(ren[-1]["extra"]["victim"]) == bfid
+    assert ren[-1]["extra"]["victim_last"] is True
+    # hardlinked victim survives with one fewer link, and no llog cookies
+    fs.link("/b", "/keep")
+    fh = fs.creat("/c")
+    fs.close(fh)
+    inodes = len(mds.inodes)
+    fs.rename("/c", "/b")
+    assert len(mds.inodes) == inodes             # victim alive via /keep
+    fh = fs.open("/keep")
+    assert fs.read(fh, 16) == b"winner"
+    fs.close(fh)
+
+
+def test_rename_over_nonempty_dir_is_enotempty():
+    """POSIX: rename over a non-empty directory fails with ENOTEMPTY
+    (like unlink), and fails BEFORE any mutation — no half-applied
+    rename, no changelog record."""
+    c, fs = mk()
+    user = fs.changelog_register()
+    fs.mkdir("/a")
+    fs.mkdir("/victim")
+    fh = fs.creat("/victim/child")
+    fs.close(fh)
+    before = len(fs.changelog_read(user))
+    with pytest.raises(R.RpcError) as ei:
+        fs.rename("/a", "/victim")
+    assert ei.value.status == -39
+    assert fs.readdir("/victim") == {"child": fs.resolve("/victim/child")}
+    assert fs.resolve("/a")                      # source untouched
+    assert len(fs.changelog_read(user)) == before
+    # empty dir victim IS displaceable, and its inode is freed
+    fs.unlink("/victim/child")
+    mds = c.mds_targets[0]
+    inodes = len(mds.inodes)
+    fs.rename("/a", "/victim")
+    assert len(mds.inodes) == inodes - 1
+    assert fs.stat("/victim")["type"] == "dir"
+
+
+def test_cross_mdt_rename_over_unlinks_remote_victim():
+    """Rename-over where the victim's inode lives on a peer MDT: the
+    coordinator issues the two-stage remote unlink, the peer inode is
+    freed, and the RENAME record names the victim."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    u0 = fs.changelog_register(mdt=0)
+    fs.mkdir("/a")                               # inode on MDS1
+    fs.mkdir("/b")                               # inode on MDS1
+    bfid = fs.resolve("/b")
+    assert bfid[0] == 1
+    mds1 = c.mds_targets[1]
+    inodes = len(mds1.inodes)
+    fs.rename("/a", "/b")                        # coordinator is MDS0
+    assert bfid not in mds1.inodes               # remote victim freed
+    assert len(mds1.inodes) == inodes - 1
+    ren = [r for r in fs.changelog_read(u0)
+           if r["type"] == CL.CL_RENAME][-1]
+    assert tuple(ren["extra"]["victim"]) == bfid
+    assert ren["extra"]["victim_last"] is True
+    assert fs.readdir("/") == {"b": fs.resolve("/b")}
+    # the victim dir's ".." link left the destination parent too
+    assert fs.stat("/")["nlink"] == 3            # root + "." + /b only
+
+
+def test_cross_mdt_nonempty_dir_guards():
+    """ENOTEMPTY must hold when the directory's inode is remote: the
+    owning MDT refuses remote_unlink_inode for a non-empty dir, and the
+    rename coordinator pre-checks the victim over getattr BEFORE
+    mutating anything."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/victim")                          # inode on MDS1
+    fh = fs.creat("/victim/child")
+    fs.close(fh)
+    fs.mkdir("/src")
+    # cross-MDT rmdir of a non-empty dir
+    with pytest.raises(R.RpcError) as ei:
+        fs.rmdir("/victim")
+    assert ei.value.status == -39
+    assert fs.exists("/victim/child")
+    # cross-MDT rename over a non-empty dir: refused before any mutation
+    with pytest.raises(R.RpcError) as ei:
+        fs.rename("/src", "/victim")
+    assert ei.value.status == -39
+    assert fs.exists("/src") and fs.exists("/victim/child")
+    assert sorted(fs.readdir("/")) == ["src", "victim"]
+    # emptied, both succeed
+    fs.unlink("/victim/child")
+    fs.rename("/src", "/victim")
+    assert sorted(fs.readdir("/")) == ["victim"]
+
+
+def test_rename_over_with_remote_dst_parent_unlinks_victim():
+    """Coordinator placement where the DESTINATION parent's inode is on
+    the peer MDT (dst=None, bucket_insert path): the displaced entry
+    must still be found, ENOTEMPTY-checked, and unlinked — this path
+    used to silently clobber the entry and leak the victim."""
+    c = LustreCluster(osts=2, mdses=2, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    u0 = fs.changelog_register(mdt=0)
+    fs.mkdir("/d1")                              # dir inode on MDS1
+    fh = fs.creat("/d1/t", stripe_count=2)       # victim, inode on MDS1
+    fs.write(fh, b"old")
+    fs.close(fh)
+    fh = fs.creat("/winner", stripe_count=2)     # inode on MDS0
+    fs.write(fh, b"new!")
+    fs.close(fh)
+    vfid = fs.resolve("/d1/t")
+    assert vfid[0] == 1
+    mds1 = c.mds_targets[1]
+    objs = sum(len(t.obd.objects) for t in c.ost_targets)
+    fs.rename("/winner", "/d1/t")                # coordinator MDS0, dst remote
+    assert vfid not in mds1.inodes               # victim inode freed on peer
+    assert sum(len(t.obd.objects) for t in c.ost_targets) == objs - 2
+    wfid = fs.resolve("/d1/t")
+    assert wfid[0] == 0                          # the winner moved in
+    # (open() of a file inode living on a different MDT than its parent
+    # is a pre-existing _intent_open limitation; stat routes by fid)
+    assert fs.stat("/d1/t")["size"] == 4
+    ren = [r for r in fs.changelog_read(u0)
+           if r["type"] == CL.CL_RENAME][-1]
+    assert tuple(ren["extra"]["victim"]) == vfid
+    assert ren["extra"]["victim_last"] is True
+    # same placement, non-empty dir victim: ENOTEMPTY before any mutation
+    fs.mkdir("/d1/sub")
+    fh = fs.creat("/d1/sub/x")
+    fs.close(fh)
+    fh = fs.creat("/w2")
+    fs.close(fh)
+    with pytest.raises(R.RpcError) as ei:
+        fs.rename("/w2", "/d1/sub")
+    assert ei.value.status == -39
+    assert fs.exists("/w2") and fs.exists("/d1/sub/x")
+
+
+def test_cross_mdt_rename_of_remote_dir_transfers_parent_nlinks():
+    """Renaming a DIRECTORY whose inode lives on a peer MDT between two
+    local parents must still move the '..' link: was_dir used to be
+    computed only from local inode presence, so both parents' nlink
+    drifted permanently."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/src")                             # dirs on MDS1
+    fs.mkdir("/d1")
+    fs.mkdir("/src/mover")                       # inode back on MDS0
+    assert fs.resolve("/src/mover")[0] == 0
+    assert fs.stat("/src")["nlink"] == 3
+    assert fs.stat("/d1")["nlink"] == 2
+    fs.rename("/src/mover", "/d1/mover")
+    assert fs.stat("/src")["nlink"] == 2
+    assert fs.stat("/d1")["nlink"] == 3
+
+
+def test_rename_dir_nlink_accounting_reaches_remote_parents():
+    """Moving a directory between parents (and displacing a dir victim)
+    must keep '..' nlink accounting right even when a parent or the
+    moved inode lives on a peer MDT — via remote_nlink_adjust."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/d1")                              # inode on MDS1
+    fs.mkdir("/d1/old")                          # empty dir victim (MDS0)
+    fs.mkdir("/x")                               # mover dir (MDS1)
+    root_nl = fs.stat("/")["nlink"]
+    d1_nl = fs.stat("/d1")["nlink"]
+    fs.rename("/x", "/d1/old")                   # coordinator MDS0, dst
+    assert fs.stat("/")["nlink"] == root_nl - 1  # remote, dir over dir
+    assert fs.stat("/d1")["nlink"] == d1_nl      # -victim +mover
+    assert fs.stat("/d1/old")["type"] == "dir"
+    assert not fs.exists("/x")
+
+
+def test_rmdir_split_directory_is_enotempty():
+    """A split directory's own entries dict is empty (content lives in
+    the hash buckets) — rmdir must refuse it like any non-empty dir
+    instead of orphaning the buckets."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=64,
+                      mds_split_threshold=4)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/big")
+    for i in range(8):                           # trigger the split
+        fh = fs.creat(f"/big/f{i}")
+        fs.close(fh)
+    assert c.stats.counters["mds.dir_split"] >= 1
+    with pytest.raises(R.RpcError) as ei:
+        fs.rmdir("/big")
+    assert ei.value.status == -39
+    assert len(fs.readdir("/big")) == 8          # content intact
+    # DRAINED split dir is removable, and its bucket inodes die with it
+    for i in range(8):
+        fs.unlink(f"/big/f{i}")
+    inodes = sum(len(t.inodes) for t in c.mds_targets)
+    n_buckets = len(c.mds_targets[1].inodes[
+        fs.resolve("/big")].ea["buckets"])
+    fs.rmdir("/big")
+    assert not fs.exists("/big")
+    # the dir inode AND every bucket inode are gone
+    assert sum(len(t.inodes) for t in c.mds_targets) \
+        == inodes - 1 - n_buckets
+
+
+def test_unlink_rollback_restores_split_dir_entry():
+    """Crash rollback of an unlink in a SPLIT directory must restore the
+    entry into its hash bucket (the master entries dict is invisible
+    once a dir has split) so the name stays resolvable and replayable."""
+    from repro.core.mds import fhash
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=10_000,
+                      mds_split_threshold=4)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/big")                             # on MDS1
+    for i in range(8):
+        fh = fs.creat(f"/big/f{i}")
+        fs.close(fh)
+    mds1 = c.mds_targets[1]
+    assert "buckets" in mds1.inodes[fs.resolve("/big")].ea
+    for t in c.mds_targets:
+        t.commit()
+    # pick an entry whose bucket is LOCAL to MDS1 so the whole unlink+
+    # rollback is a single-MDT affair
+    name = next(n for n in (f"f{i}" for i in range(8)) if fhash(n, 2) == 0)
+    fs.unlink(f"/big/{name}")                    # uncommitted
+    mds1.crash()                                 # rollback, no replay
+    assert fs.stat(f"/big/{name}")["type"] == "file"   # resolvable again
+    assert name in fs.readdir("/big")
+    fs.unlink(f"/big/{name}")                    # and unlinkable again
+    assert name not in fs.readdir("/big")
+
+
+def test_rmdir_with_unreachable_bucket_is_ebusy():
+    """A hash bucket on an unreachable MDT cannot prove the directory is
+    empty: rmdir must refuse with EBUSY instead of destroying a dir that
+    may still hold entries there."""
+    c = LustreCluster(osts=1, mdses=3, clients=1, commit_interval=64,
+                      mds_split_threshold=4)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/big")
+    for i in range(8):
+        fh = fs.creat(f"/big/f{i}")
+        fs.close(fh)
+    for i in range(8):
+        fs.unlink(f"/big/f{i}")                  # fully drained
+    c.fail_node("mds2")                          # one bucket's MDT dies
+    with pytest.raises(R.RpcError) as ei:
+        fs.rmdir("/big")
+    assert ei.value.status == -16                # EBUSY: cannot prove empty
+    assert fs.exists("/big")
+    c.restart_node("mds2")
+    fs.rmdir("/big")                             # provable again: removed
+    assert not fs.exists("/big")
+
+
+def test_rename_over_dangling_entry_is_tolerated():
+    """A displaced entry whose inode is already gone (dangling dentry)
+    must not abort the rename mid-mutation: the insert simply replaces
+    it, transactionally."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    user = fs.changelog_register()
+    fh = fs.creat("/winner")
+    fs.close(fh)
+    mds0 = c.mds_targets[0]
+    root = mds0.inodes[ROOT_FID]
+    # dangling entries: one local-group, one remote-group, neither inode
+    # exists anywhere
+    root.entries["ghost_l"] = (0, 9999, 1)
+    root.entries["ghost_r"] = (1, 9999, 1)
+    fs.rename("/winner", "/ghost_l")
+    fs.rename("/ghost_l", "/ghost_r")
+    assert fs.resolve("/ghost_r") == fs.resolve("/ghost_r")
+    assert sorted(fs.readdir("/")) == ["ghost_r"]
+    renames = [r for r in fs.changelog_read(user)
+               if r["type"] == CL.CL_RENAME]
+    assert len(renames) == 2                     # both fully recorded
+
+
+def test_cross_mdt_link_eexist_leaves_no_stray_nlink():
+    """A cross-MDT link that hits EEXIST must not leave the remote
+    inode's nlink bumped (the remote_link RPC used to fire before the
+    destination-name check, leaking +1 on the peer forever)."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/d1")                              # on MDS1
+    fh = fs.creat("/d1/a")                       # inode on MDS1
+    fs.close(fh)
+    fh = fs.creat("/x")                          # root name on MDS0
+    fs.close(fh)
+    afid = fs.resolve("/d1/a")
+    assert afid[0] == 1
+    nlink_before = c.mds_targets[1].inodes[afid].nlink
+    with pytest.raises(R.RpcError):
+        fs.link("/d1/a", "/x")                   # EEXIST at the root
+    assert c.mds_targets[1].inodes[afid].nlink == nlink_before
+    fs.unlink("/d1/a")                           # last link really frees it
+    assert afid not in c.mds_targets[1].inodes
+
+
+# ------------------------------------------------- rollback (no phantoms)
+
+def test_read_stabilizes_uncommitted_records():
+    """A record handed to a consumer can never be rolled back: serving
+    (or purging) an uncommitted tail forces the MDS journal commit
+    first, so a crash after the read keeps exactly what the consumer
+    saw."""
+    c, fs = mk(commit_interval=10_000)
+    mds = c.mds_targets[0]
+    user = fs.changelog_register()
+    fs.mkdir("/d")                               # uncommitted
+    assert mds.committed_transno < mds.transno
+    recs = fs.changelog_read(user)
+    assert [r["name"] for r in recs] == ["d"]
+    assert mds.committed_transno == mds.transno  # read forced the commit
+    mds.crash()                                  # nothing left to lose
+    assert [r.name for r in mds.changelog.records()] == ["d"]
+    assert fs.stat("/d")["type"] == "dir"
+    # clear of an uncommitted tail is stabilized the same way
+    fs.mkdir("/e")
+    fs.changelog_clear(user, mds.changelog.last_idx)
+    assert mds.committed_transno == mds.transno
+    mds.crash()
+    assert fs.stat("/e")["type"] == "dir"
+
+
+def test_crash_rollback_retracts_uncommitted_records():
+    """An aborted (crash-rolled-back) reint must leave no phantom record:
+    the changelog emit lives inside the transaction undo scope."""
+    c, fs = mk(commit_interval=10_000)
+    mds = c.mds_targets[0]
+    user = fs.changelog_register()
+    fs.mkdir("/durable")
+    mds.commit()
+    fs.mkdir("/phantom")
+    fh = fs.creat("/durable/p2")
+    fs.close(fh)
+    # mkdir + mkdir + creat + setattr(lov ea) + close
+    assert len(mds.changelog.records()) == 5
+    mds.crash()                                  # rollback, no replay
+    names = [(r.cl_type, r.name) for r in mds.changelog.records()]
+    assert names == [(CL.CL_MKDIR, "durable")]
+
+
+# ------------------------------------------------- llog leak regression
+
+def test_llog_drained_full_log_destroyed():
+    """Regression: LlogCatalog.cancel used to keep a drained FULL plain
+    log alive forever when it was the last one (the `is not logs[-1]`
+    guard); a full log's index slots are consumed, so once empty it must
+    be destroyed like any other drained log."""
+    cat = LlogCatalog("t")
+    cat.LOG_CAP = 4
+    cookies = [cat.add("x", {"i": i}).cookie for i in range(4)]
+    assert len(cat.logs) == 1 and cat.logs[0].full()
+    assert cat.cancel(cookies) == 4
+    assert cat.logs == []                        # no leaked handle
+    rec = cat.add("x", {"i": 99})
+    assert len(cat.logs) == 1
+    assert [r.payload["i"] for r in cat.pending()] == [99]
+    # partial drain of a multi-log catalog: only the drained full log dies
+    cat2 = LlogCatalog("t2")
+    cat2.LOG_CAP = 4
+    head = [cat2.add("x", {}).cookie for _ in range(4)]
+    tail = [cat2.add("x", {}).cookie for _ in range(2)]
+    assert len(cat2.logs) == 2
+    cat2.cancel(head)
+    assert len(cat2.logs) == 1 and len(cat2.pending()) == 2
+    rec2 = cat2.add("x", {})                     # current log still open
+    assert len(cat2.logs) == 1 and rec2 in cat2.logs[-1].records
+
+
+def test_changelog_purge_rotates_and_frees_plain_logs():
+    """End to end: a long stream with a keeping-up consumer must not
+    accumulate plain logs (the leak the llog fix closes)."""
+    c, fs = mk()
+    mds = c.mds_targets[0]
+    mds.changelog.catalog.LOG_CAP = 8
+    user = fs.changelog_register()
+    for i in range(40):
+        fs.mkdir(f"/d{i}")
+        recs = fs.changelog_read(user)
+        fs.changelog_clear(user, recs[-1]["idx"])
+    info = mds.changelog.info()
+    assert info["records"] == 0
+    assert info["plain_logs"] <= 1               # no drained-log pileup
+
+
+# ------------------------------------------------------ audit tool (2 MDT)
+
+def test_audit_mirror_matches_ground_truth_across_mdts():
+    """ISSUE-2 acceptance: a 2-MDT striped namespace with cross-MDT
+    renames/unlinks; the auditor's mirror, rebuilt from merged changelog
+    streams alone, matches client-visible readdir/stat exactly."""
+    c = LustreCluster(osts=2, mdses=2, clients=1, commit_interval=32)
+    fs = LustreClient(c).mount()
+    aud = ChangelogAuditor(fs)
+    # --- workload: root entries live on MDS0, mkdir fans out to MDS1
+    fs.mkdir("/d1")
+    fs.mkdir("/d2")
+    assert fs.resolve("/d1")[0] == 1             # remote mkdir really hit MDS1
+    fh = fs.creat("/top")
+    fs.write(fh, b"abc")
+    fs.close(fh)
+    fh = fs.creat("/d1/a")
+    fs.write(fh, b"hello")
+    fs.close(fh)
+    fh = fs.creat("/d1/b")
+    fs.close(fh)
+    fs.symlink("/d1/a", "/d2/lnk")
+    fs.link("/d1/a", "/d2/a2")
+    fs.rename("/top", "/d1/top2")                # cross-MDT: ROOT -> d1
+    fs.rename("/d1/b", "/d2/b")
+    fs.unlink("/d2/b")
+    n = aud.tail()
+    assert n >= 10
+    report = aud.verify()
+    assert report["ok"], report["mismatches"]
+    assert report["entries"] >= 5
+    # merged feed is time-ordered and spans both MDTs
+    times = [r["time"] for r in aud.feed]
+    assert times == sorted(times)
+    assert {r["mdt"] for r in aud.feed} == {0, 1}
+    # the auditor is the only consumer: its clear fully drains both MDTs
+    for t in c.mds_targets:
+        assert t.changelog.info()["records"] == 0
+    # --- second round: cross-MDT unlinks + teardown, incremental tail
+    fs.unlink("/d1/a")                           # still linked via /d2/a2
+    fs.unlink("/d1/top2")                        # cross-MDT unlink (g0 inode)
+    fs.unlink("/d2/a2")                          # last link of a
+    fs.unlink("/d2/lnk")
+    fs.rmdir("/d2")                              # cross-MDT rmdir
+    aud.tail()
+    report = aud.verify()
+    assert report["ok"], report["mismatches"]
+    assert fs.readdir("/d1") == {}
+    # cross-MDT halves were merged, not double-applied
+    assert aud.mirror.skipped_remote >= 2
+
+
+def test_audit_mirror_tracks_sizes_and_hardlinks():
+    c, fs = mk()
+    aud = ChangelogAuditor(fs)
+    fh = fs.creat("/f")
+    fs.write(fh, b"x" * 1234)
+    fs.close(fh)
+    fs.link("/f", "/g")
+    fs.unlink("/f")                              # /g keeps the inode alive
+    aud.tail()
+    report = aud.verify()
+    assert report["ok"], report["mismatches"]
+    gfid = fs.resolve("/g")
+    assert aud.mirror.nodes[gfid]["size"] == 1234
+    fs.unlink("/g")                              # last link
+    aud.tail()
+    assert gfid not in aud.mirror.nodes
+    assert aud.verify()["ok"]
+
+
+def test_mirror_standalone_displacing_rename():
+    """Unit-level mirror semantics: rename over an existing name kills
+    the displaced node when that was its last link."""
+    m = NamespaceMirror()
+    m.apply({"type": "CREAT", "fid": (0, 2, 1), "pfid": ROOT_FID,
+             "name": "a", "idx": 1, "time": 1.0})
+    m.apply({"type": "CREAT", "fid": (0, 3, 1), "pfid": ROOT_FID,
+             "name": "b", "idx": 2, "time": 2.0})
+    m.apply({"type": "RENAME", "fid": (0, 2, 1), "pfid": ROOT_FID,
+             "name": "b", "idx": 3, "time": 3.0,
+             "extra": {"spfid": ROOT_FID, "sname": "a"}})
+    assert m.children[ROOT_FID] == {"b": (0, 2, 1)}
+    assert (0, 3, 1) not in m.nodes              # displaced node died

@@ -195,6 +195,74 @@ def test_tbf_per_client_rules():
     assert fast_dt < slow_dt / 20
 
 
+def test_tbf_jobid_rule_shares_one_bucket():
+    """A rules entry matching the request's jobid beats the client uuid:
+    every client tagged with that batch job drains ONE shared bucket,
+    while untagged clients run free."""
+    pol = N.make_policy("tbf", None, rate=1e9, burst=1.0,
+                        rules={"batch1": 10.0})
+    r_a = R.Request(opcode="write", body={"oid": 1}, client_uuid="cA",
+                    jobid="batch1")
+    r_b = R.Request(opcode="write", body={"oid": 2}, client_uuid="cB",
+                    jobid="batch1")
+    r_free = R.Request(opcode="write", body={"oid": 3}, client_uuid="cC",
+                       jobid="otherjob")
+    pol.schedule(r_a, 0.0, 1e-6)               # spends the shared token
+    s_b = pol.schedule(r_b, 0.0, 1e-6)
+    assert s_b >= 0.09                         # different client, same job
+    s_free = pol.schedule(r_free, 0.001, 1e-6)
+    assert s_free < 0.01                       # no rule for its job: free
+    info = pol.info()
+    assert info["per_jobid"] == {"batch1": 2, "otherjob": 1}
+
+
+def test_tbf_jobid_rule_end_to_end():
+    """lctl-installed jobid rule throttles a tagged client's RPCs; the
+    same tag lands in MDS changelog records (one plumbing, two
+    consumers)."""
+    c = mk()
+    tagged = osc_for(c, 0)
+    free = osc_for(c, 1)
+    tagged.rpc.jobid = "nightly-scrub"
+    c.lctl("nrs", "OST0000", "tbf",
+           {"rate": 1e9, "burst": 1.0, "rules": {"nightly-scrub": 50.0}})
+    t_oid = tagged.create(0)["oid"]
+    f_oid = free.create(0)["oid"]
+    t0 = c.now
+    for i in range(10):
+        free.write(0, f_oid, i * 4, b"ffff")
+    free_dt = c.now - t0
+    t0 = c.now
+    for i in range(10):
+        tagged.write(0, t_oid, i * 4, b"tttt")
+    tagged_dt = c.now - t0
+    assert tagged_dt >= 9 / 50.0 * 0.95
+    assert free_dt < tagged_dt / 20
+    assert c.ost_targets[0].service.policy.info()[
+        "per_jobid"]["nightly-scrub"] >= 10
+
+
+def test_per_export_nrs_stats_in_procfs():
+    """procfs breaks NRS accounting out per client uuid (per export),
+    not just as target-wide aggregates (ROADMAP item)."""
+    c = mk(nrs_policy="crr")
+    a, b = osc_for(c, 0), osc_for(c, 1)
+    oa, ob = a.create(0)["oid"], b.create(0)["oid"]
+    for i in range(6):
+        a.write(0, oa, i * 4, b"aaaa")
+    b.write(0, ob, 0, b"bbbb")
+    pe = c.procfs()["targets"]["OST0000"]["nrs"]["per_export"]
+    assert a.rpc.uuid in pe and b.rpc.uuid in pe
+    assert pe[a.rpc.uuid]["reqs"] >= 6
+    assert pe[b.rpc.uuid]["reqs"] >= 1
+    for row in pe.values():
+        assert row["queue_wait_s"] >= 0.0
+        assert row["avg_queue_wait_us"] >= 0.0
+    # aggregates stay consistent with the per-export rows
+    nrs = c.procfs()["targets"]["OST0000"]["nrs"]
+    assert nrs["reqs"] == sum(r["reqs"] for r in pe.values())
+
+
 def test_tbf_never_throttles_control_ops():
     c = mk(nrs_policy="tbf", nrs_params={"rate": 1.0, "burst": 1.0})
     osc = osc_for(c, 0)
