@@ -13,21 +13,30 @@ tracking* (arXiv:1505.02656) and the Robinhood policy engine it feeds:
   * recording is active only while at least one consumer is registered
     (``changelog_register`` -> "cl1", "cl2", ...);
   * each consumer owns a persistent *bookmark* — the highest record index
-    it has acknowledged via ``changelog_clear``;
+    it has acknowledged via ``changelog_clear``.  Bookmarks are
+    **journaled with the catalog header**: register/clear/deregister run
+    as transactions whose undo restores the previous header state, so a
+    crash mid-clear rolls bookmark AND purge back together (never one
+    without the other), and a committed clear survives MDS restart —
+    the consumer resumes at its journaled bookmark with no re-delivery
+    of cleared records;
   * records are purged from the catalog only past the MINIMUM bookmark
     across all registered consumers: a slow auditor pins the stream, a
     fast one never destroys data someone else still needs;
+  * **changelog_gc**: a consumer that stays idle past a configurable
+    record lag (``gc_max_idle_indexes``) or virtual-time lag
+    (``gc_max_idle_time``) is garbage-collected — deregistered by the
+    MDS — so a dead consumer cannot pin the stream forever (real Lustre
+    grew the same knobs);
   * ``changelog_read(user, since_idx)`` returns retained records above an
     index, so multiple independent consumers (HSM, audit, mirror) tail
     the same stream;
-  * a record handed to a consumer must be durable: the MDS commits its
-    journal before serving (or purging) an uncommitted tail, so a
-    single-MDT crash can never roll back a record a consumer has seen.
-    One documented exception remains: the multi-MDT consistent-cut
-    rollback (recovery.py §6.7.6.3) undoes *committed* cross-MDT
-    transactions whose peer half was lost, retracting their records —
-    a consumer that read past the cluster-committed cut must rescan
-    (ROADMAP follow-up; real DNE changelogs share this exposure).
+  * a record handed to a consumer must be durable — not just locally
+    (journal commit before serving an uncommitted tail) but *cluster*
+    durable: the MDS serves only records at or below the cluster-committed
+    consistent cut (mds._gate_at_cluster_cut), so not even a multi-MDT
+    consistent-cut rollback (recovery.py §6.7.6.3) can retract a record
+    a consumer has seen.
 
 Records carry (fid, parent fid, name, timestamp, client uuid, jobid) so
 audit tooling (arXiv:2302.14824) can answer "who did what, where, when,
@@ -38,7 +47,9 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from typing import Callable, Optional
 
+from repro.core import fail as fail_mod
 from repro.core import llog as llog_mod
 
 # Record types (the CL_* subset our MDS emits).
@@ -81,17 +92,32 @@ class ChangelogRecord:
 
 
 class Changelog:
-    """One MDT's changelog catalog + consumer bookkeeping."""
+    """One MDT's changelog catalog + journaled consumer header.
 
-    def __init__(self, owner_uuid: str):
+    `txn` is the owning target's transaction hook (undo registration):
+    consumer-header updates (register/clear/deregister) go through it so
+    they are crash-atomic with the purge they imply. `now` supplies the
+    virtual time used for per-consumer idle tracking (changelog_gc).
+    """
+
+    def __init__(self, owner_uuid: str,
+                 txn: Optional[Callable] = None,
+                 now: Optional[Callable[[], float]] = None):
         self.owner_uuid = owner_uuid
         self.catalog = llog_mod.LlogCatalog(f"{owner_uuid}-changelog")
         self.users: dict[str, int] = {}      # consumer id -> bookmark idx
+        self.user_time: dict[str, float] = {}    # id -> last activity
         self._user_seq = itertools.count(1)
         self._idx = itertools.count(1)
         self.last_idx = 0
         self.purged_to = 0
         self._cookies: dict[int, int] = {}   # record idx -> llog cookie
+        self._txn = txn or (lambda undo: 0)
+        self._now = now or (lambda: 0.0)
+        # changelog_gc knobs (None = off); surfaced through lctl/procfs
+        self.gc_max_idle_indexes: int | None = None
+        self.gc_max_idle_time: float | None = None
+        self.gc_collected: list[str] = []
 
     # --------------------------------------------------------- consumers
     @property
@@ -100,17 +126,74 @@ class Changelog:
         RPC is what 'turns on' the changelog, as in real Lustre)."""
         return bool(self.users)
 
+    def touch(self, uid: str):
+        self.user_time[uid] = self._now()
+
     def register(self) -> str:
         uid = f"cl{next(self._user_seq)}"
-        # a new consumer can read everything still retained
+        # a new consumer can read everything still retained; the header
+        # update is a transaction so a crash before commit forgets the
+        # consumer instead of resurrecting half of one
         self.users[uid] = self.purged_to
+        self.touch(uid)
+
+        def undo():
+            self.users.pop(uid, None)
+            self.user_time.pop(uid, None)
+        self._txn(undo)
         return uid
 
     def deregister(self, uid: str):
         if uid not in self.users:
             raise KeyError(uid)
-        del self.users[uid]
-        self._purge()
+        bookmark = self.users.pop(uid)
+        last_t = self.user_time.pop(uid, 0.0)
+        restore_purge = self._purge()
+
+        def undo():
+            restore_purge()
+            self.users[uid] = bookmark
+            self.user_time[uid] = last_t
+        self._txn(undo)
+
+    # -------------------------------------------------------------- gc
+    def maybe_gc(self):
+        """Run the idle sweep iff any knob is set. Callers that stamp an
+        owning transno into the next record must run this BEFORE
+        computing it — each collected consumer's deregister is its own
+        header transaction and consumes a transno."""
+        if self.gc_max_idle_indexes is not None \
+                or self.gc_max_idle_time is not None:
+            self.gc()
+
+    def gc(self) -> list[str]:
+        """Garbage-collect idle consumers: a bookmark lagging more than
+        `gc_max_idle_indexes` records behind the head, or a consumer
+        silent for longer than `gc_max_idle_time` virtual seconds, is
+        deregistered (its pin on the stream released). Returns the ids
+        collected by this pass."""
+        now = self._now()
+        doomed = []
+        for uid, bookmark in self.users.items():
+            if (self.gc_max_idle_indexes is not None
+                    and self.last_idx - bookmark > self.gc_max_idle_indexes):
+                doomed.append(uid)
+            elif (self.gc_max_idle_time is not None
+                    and now - self.user_time.get(uid, 0.0)
+                    > self.gc_max_idle_time):
+                doomed.append(uid)
+        for uid in doomed:
+            self.deregister(uid)
+            # the collected-ids bookkeeping rolls back with the
+            # deregister: a crash must not report a still-registered
+            # consumer as collected
+            self.gc_collected.append(uid)
+
+            def undo(uid=uid):
+                if uid in self.gc_collected:
+                    self.gc_collected.remove(uid)
+            self._txn(undo)
+        return doomed
 
     # ------------------------------------------------------------ record
     def emit(self, cl_type: str, fid, *, pfid=None, name: str = "",
@@ -118,7 +201,9 @@ class Changelog:
              transno: int = 0, **extra) -> ChangelogRecord | None:
         """Append one record; returns None while no consumer is
         registered. The CALLER's transaction undo must call `retract`
-        on the returned record so aborted operations leave no trace."""
+        on the returned record so aborted operations leave no trace.
+        (The caller also runs `maybe_gc` first — see mds._cl — so the
+        record's owning transno is computed after any GC transactions.)"""
         if not self.users:
             return None
         idx = next(self._idx)
@@ -130,6 +215,7 @@ class Changelog:
                               transno)
         lrec = self.catalog.add("changelog", {"rec": rec})
         self._cookies[idx] = lrec.cookie
+        fail_mod.note("mds.changelog.emit")
         return rec
 
     def retract(self, rec: ChangelogRecord | None):
@@ -143,9 +229,10 @@ class Changelog:
 
     # ------------------------------------------------------------- read
     def records(self) -> list[ChangelogRecord]:
-        # already idx-ordered: records only ever append to the current
-        # plain log, and cancellation never reorders survivors
-        return [r.payload["rec"] for r in self.catalog.pending()]
+        # sorted by idx: appends keep order naturally, but a rolled-back
+        # purge restores its records at the catalog tail
+        return sorted((r.payload["rec"] for r in self.catalog.pending()),
+                      key=lambda r: r.idx)
 
     def read(self, since_idx: int = 0, count: int = 0) \
             -> list[ChangelogRecord]:
@@ -154,23 +241,45 @@ class Changelog:
 
     def clear(self, uid: str, up_to: int):
         """Acknowledge records up to `up_to` for one consumer; physically
-        purge only past the minimum bookmark across ALL consumers."""
+        purge only past the minimum bookmark across ALL consumers. The
+        bookmark update and the purge are ONE transaction: its undo
+        restores both, so a crash before the journal commit can never
+        advance the bookmark while resurrecting the records (or vice
+        versa)."""
         if uid not in self.users:
             raise KeyError(uid)
-        self.users[uid] = max(self.users[uid], min(up_to, self.last_idx))
-        self._purge()
+        old = self.users[uid]
+        self.users[uid] = max(old, min(up_to, self.last_idx))
+        self.touch(uid)
+        restore_purge = self._purge()
 
-    def _purge(self):
+        def undo():
+            restore_purge()
+            self.users[uid] = old
+        self._txn(undo)
+
+    def _purge(self) -> Callable[[], None]:
+        """Purge past the min bookmark; returns the restore closure the
+        caller journals as (part of) its transaction undo."""
         keep_after = min(self.users.values()) if self.users else self.last_idx
-        doomed = []
-        for rec in self.records():
-            if rec.idx <= keep_after:
-                cookie = self._cookies.pop(rec.idx, None)
-                if cookie is not None:
-                    doomed.append(cookie)
+        doomed = [lrec for lrec in self.catalog.pending()
+                  if lrec.payload["rec"].idx <= keep_after]
+        removed_cookies = {}
+        for lrec in doomed:
+            idx = lrec.payload["rec"].idx
+            removed_cookies[idx] = self._cookies.pop(idx, None)
         if doomed:
-            self.catalog.cancel(doomed)
+            self.catalog.cancel([lrec.cookie for lrec in doomed])
+        old_purged = self.purged_to
         self.purged_to = max(self.purged_to, keep_after)
+
+        def restore():
+            self.purged_to = old_purged
+            if doomed:
+                self.catalog.restore(doomed)
+            self._cookies.update({i: c for i, c in removed_cookies.items()
+                                  if c is not None})
+        return restore
 
     # ------------------------------------------------------------ procfs
     def info(self) -> dict:
@@ -179,4 +288,7 @@ class Changelog:
                 "records": len(self.catalog.pending()),
                 "last_idx": self.last_idx,
                 "purged_to": self.purged_to,
-                "plain_logs": len(self.catalog.logs)}
+                "plain_logs": len(self.catalog.logs),
+                "gc": {"max_idle_indexes": self.gc_max_idle_indexes,
+                       "max_idle_time": self.gc_max_idle_time,
+                       "collected": list(self.gc_collected)}}

@@ -144,13 +144,46 @@ class LustreCluster(R.ClusterBase):
             self.target(uuid).service.set_policy(policy, **params)
         elif verb == "changelog_register":
             # lctl("changelog_register", mds_uuid) -> consumer id
-            return self.target(args[0]).changelog.register()
+            t = self.target(args[0])
+            uid = t.changelog.register()
+            t.commit()          # the id handed out survives restart
+            return uid
         elif verb == "changelog_deregister":
             # lctl("changelog_deregister", mds_uuid, consumer_id)
-            self.target(args[0]).changelog.deregister(args[1])
+            t = self.target(args[0])
+            t.changelog.deregister(args[1])
+            t.commit()      # durable: a crash must not resurrect the pin
         elif verb == "changelog_info":
             # lctl("changelog_info", mds_uuid) -> consumer/record state
             return self.target(args[0]).changelog.info()
+        elif verb == "changelog_gc":
+            # lctl("changelog_gc", mds_uuid[, {"max_idle_indexes": n,
+            #                                  "max_idle_time": s}])
+            # sets the idle-consumer GC knobs (None disables one) and
+            # runs a collection pass; returns the ids collected now
+            t = self.target(args[0])
+            cl = t.changelog
+            if len(args) > 1:
+                knobs = args[1]
+                if "max_idle_indexes" in knobs:
+                    cl.gc_max_idle_indexes = knobs["max_idle_indexes"]
+                if "max_idle_time" in knobs:
+                    cl.gc_max_idle_time = knobs["max_idle_time"]
+            collected = cl.gc()
+            if collected:
+                t.commit()  # durable: a crash must not resurrect the pins
+            return collected
+        elif verb == "set_param":
+            # lctl("set_param", "fail_loc", site[, nth]) arms an OBD_FAIL
+            # failpoint (one-shot, fires on the nth hit); "" disarms.
+            # lctl("set_param", "fail_val", n) adjusts the hit count.
+            if args[0] == "fail_loc":
+                self.sim.fail.arm(args[1],
+                                  args[2] if len(args) > 2 else None)
+            elif args[0] == "fail_val":
+                self.sim.fail.val = max(1, int(args[1]))
+            else:
+                raise ValueError(args[0])
         else:
             raise ValueError(verb)
 
@@ -159,6 +192,7 @@ class LustreCluster(R.ClusterBase):
         state + cluster counters, as /proc/fs/lustre would expose."""
         out = {"counters": dict(self.sim.stats.counters),
                "bytes": dict(self.sim.stats.bytes),
+               "fail": self.sim.fail.info(),
                "targets": {}}
         for t in self.ost_targets:
             out["targets"][t.uuid] = {
@@ -188,6 +222,7 @@ class LustreCluster(R.ClusterBase):
                              for r in t.ldlm.resources.values()),
                 "nrs": t.service.policy.info(),
                 "changelog": t.changelog.info(),
+                "cluster_cut": t.cluster_cut,
             }
         return out
 

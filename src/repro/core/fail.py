@@ -1,0 +1,185 @@
+"""OBD_FAIL-style failpoint registry (crash-point testing, ch. 11).
+
+Real Lustre proves its recovery claims with ``OBD_FAIL_CHECK(id)`` sites
+compiled into every interesting code path and a global ``fail_loc``
+(set via ``lctl set_param fail_loc=...``) that arms exactly one of them;
+the recovery test matrix then crashes a target at *every* site and
+asserts the cluster heals.  This module reproduces that machinery for
+the simulator:
+
+  * **Sites** are registered by name at import time (``register_site``);
+    ``SITES`` is the authoritative map the crash-point sweep in
+    ``tests/test_recovery.py`` parametrizes over.
+  * ``fail_loc`` / ``fail_val`` are armed via
+    ``cluster.lctl("set_param", "fail_loc", site[, nth])``:
+    the site triggers on its ``nth`` hit (default: first), once
+    (OBD_FAIL_ONCE semantics), then disarms itself.
+  * A triggered site raises :class:`FailLocHit`.  ``ptlrpc.Node``
+    catches it at the request boundary and powers the serving target
+    off at that exact point: uncommitted state is lost through the undo
+    log, the in-flight request is dropped (no reply), and the client
+    recovers through the normal timeout -> reconnect -> replay path.
+
+Two site flavours:
+
+  * ``maybe_fail(site)`` — *immediate*: raises right at the call site.
+    Placed only where the target's state is transaction-consistent
+    (request boundaries, reint entry, commit edges), because the crash
+    rollback can only undo *registered* transactions.
+  * ``note(site)`` — *deferred*: arms a pending crash that
+    ``raise_if_pending(owner)`` fires at the owning target's next
+    request boundary.  Used for sites *inside* a mutation (llog writes,
+    changelog emits, backend transactions): a journaled filesystem
+    cannot expose half a transaction after a crash, so the induced
+    crash lands at the transaction boundary — the llog write is what
+    arms it, the whole uncommitted transaction is what dies.
+
+Like real Lustre's ``obd_fail_loc`` the armed state is node-global
+(module-global here); every fresh :class:`repro.core.sim.Simulator`
+resets it so clusters are isolated from one another.
+
+Contract: the crash/restart handling lives at the ptlrpc request
+boundary, so arm sites only for RPC-driven flows. A site hit OUTSIDE
+any request context (e.g. arming ``mds.txn`` and then mutating a target
+directly through ``lctl`` verbs) raises :class:`FailLocHit` straight
+into the caller — deliberate, so a mis-armed test fails loudly instead
+of silently skipping the crash — but nothing rolls the target back.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+# --------------------------------------------------------------- registry
+
+SITES: dict[str, str] = {}       # site name -> description
+
+
+def register_site(name: str, desc: str) -> str:
+    SITES[name] = desc
+    return name
+
+
+class FailLocHit(Exception):
+    """An armed failpoint fired: the caller's target must crash here."""
+
+    def __init__(self, site: str):
+        super().__init__(f"fail_loc hit: {site}")
+        self.site = site
+
+
+class FailState:
+    """The armed failpoint (one at a time, like obd_fail_loc)."""
+
+    def __init__(self):
+        self.loc = ""                    # armed site name ("" = disarmed)
+        self.val = 1                     # trigger on the val-th hit
+        self.hits = defaultdict(int)     # site -> times checked while armed
+        self.fired = 0                   # total crashes induced
+        # deferred-crash bookkeeping: the innermost target currently
+        # processing a request (see ptlrpc.Node._request_in) owns any
+        # pending crash armed by a note() inside its handler.
+        self.service_stack: list = []
+        self.pending: dict = {}          # owner id -> firing site name
+
+    # ------------------------------------------------------------- control
+    def arm(self, loc: str, val: int | None = None):
+        """Arm `loc`; `val` = fire on the val-th hit. Like real Lustre,
+        fail_val and fail_loc are order-independent: arming without an
+        explicit val keeps whatever fail_val was set before."""
+        if loc and loc not in SITES:
+            raise ValueError(f"unknown fail site {loc!r} "
+                             f"(have: {sorted(SITES)})")
+        self.loc = loc
+        if val is not None:
+            self.val = max(1, int(val))
+
+    def disarm(self):
+        self.loc = ""
+
+    def reset(self):
+        self.disarm()
+        self.val = 1
+        self.hits.clear()
+        self.fired = 0
+        self.service_stack.clear()
+        self.pending.clear()
+
+    # -------------------------------------------------------------- checks
+    def _triggered(self, site: str) -> bool:
+        if site != self.loc:
+            return False
+        self.hits[site] += 1
+        if self.hits[site] < self.val:
+            return False
+        self.disarm()                    # OBD_FAIL_ONCE: one shot
+        self.fired += 1
+        return True
+
+    def maybe_fail(self, site: str):
+        """Immediate site: raise at a transaction-consistent point."""
+        if self._triggered(site):
+            raise FailLocHit(site)
+
+    def note(self, site: str):
+        """Deferred site: the crash lands at the owning target's request
+        boundary (transaction atomicity — see module docstring)."""
+        if self._triggered(site):
+            if self.service_stack:
+                self.pending[id(self.service_stack[-1])] = site
+            else:                        # no request context: fail now
+                raise FailLocHit(site)
+
+    # ----------------------------------------------- request-boundary hooks
+    def enter_service(self, owner):
+        self.service_stack.append(owner)
+
+    def exit_service(self, owner):
+        if self.service_stack and self.service_stack[-1] is owner:
+            self.service_stack.pop()
+
+    def raise_if_pending(self, owner):
+        site = self.pending.pop(id(owner), None)
+        if site is not None:
+            raise FailLocHit(site)
+
+    def info(self) -> dict:
+        return {"fail_loc": self.loc, "fail_val": self.val,
+                "fired": self.fired, "hits": dict(self.hits)}
+
+
+# One node-global armed state, exactly like obd_fail_loc; Simulator's
+# constructor calls reset() so each cluster starts disarmed.
+state = FailState()
+
+maybe_fail = state.maybe_fail
+note = state.note
+
+
+# ---------------------------------------------------- the registered sites
+# ptlrpc request boundaries (crash before executing / before replying):
+register_site("ptlrpc.mds.request_in",
+              "MDS request received, nothing executed yet")
+register_site("ptlrpc.ost.request_in",
+              "OST request received, nothing executed yet")
+register_site("ptlrpc.mds.before_reply",
+              "MDS handler done (txns registered), reply not sent")
+register_site("ptlrpc.ost.before_reply",
+              "OST handler done (txns registered), reply not sent")
+# MDS reint / commit path:
+register_site("mds.reint.before", "reint dispatched, before any mutation")
+register_site("mds.commit.before", "MDS journal flush about to start")
+register_site("mds.commit.after",
+              "MDS journal flush durable, reply lost (deferred)")
+register_site("mds.txn", "inside an MDS metadata transaction (deferred)")
+# OST transactions / commit:
+register_site("ost.commit.before", "OST journal flush about to start")
+register_site("ost.commit.after",
+              "OST journal flush durable, reply lost (deferred)")
+register_site("ost.txn", "inside an OST backend transaction (deferred)")
+# llog / changelog writes:
+register_site("llog.catalog.add", "llog record appended (deferred)")
+register_site("mds.changelog.emit", "changelog record emitted (deferred)")
+register_site("mds.changelog.clear",
+              "changelog_clear dispatched, before bookmark/purge")
+register_site("mds.changelog.clear.applied",
+              "bookmark+purge transaction applied, not yet committed")

@@ -18,6 +18,8 @@ import dataclasses
 import itertools
 from typing import Any, Callable
 
+from repro.core import fail as fail_mod
+
 
 _cookie_seq = itertools.count(1)
 
@@ -85,7 +87,23 @@ class LlogCatalog:
         return self.logs[-1]
 
     def add(self, rec_type: str, payload: dict) -> LlogRecord:
-        return self._current().add(rec_type, payload)
+        rec = self._current().add(rec_type, payload)
+        # deferred crash site: the induced crash lands at the owning
+        # target's request boundary — journal atomicity means a crash can
+        # never expose half the transaction this write belongs to
+        fail_mod.note("llog.catalog.add")
+        return rec
+
+    def restore(self, recs) -> None:
+        """Undo of a cancel (transaction rollback): re-insert previously
+        cancelled records with their original cookies/payloads. Appended
+        to the current plain log — readers that need index order must
+        sort (the changelog does)."""
+        for rec in recs:
+            rec.cancelled = False
+            lg = self._current()
+            lg.records.append(rec)
+            lg.added += 1
 
     def cancel(self, cookies) -> int:
         n = 0

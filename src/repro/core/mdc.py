@@ -157,8 +157,17 @@ class Lmv:
         return lk, data
 
     def open(self, parent_fid, name, flags="r", mode=0o644):
-        return self.mdc_for_fid(parent_fid).open(parent_fid, name, flags,
-                                                 mode)
+        lk, data = self.mdc_for_fid(parent_fid).open(parent_fid, name,
+                                                     flags, mode)
+        if data.get("remote") and data.get("fid"):
+            # the entry's inode lives on a peer MDT (cross-MDT rename
+            # residue): re-issue the open BY FID at the owning MDT —
+            # the same 2-RPC worst case as the lookup redirect (§6.7.3)
+            fid = tuple(data["fid"])
+            return self.mdc_for_fid(fid).enqueue_intent(
+                fid, "PR", {"op": "open", "by_fid": True, "fid": fid,
+                            "flags": flags, "mode": mode})
+        return lk, data
 
     def readdir(self, fid):
         """Client-side bucket iteration for split directories (§6.7.3)."""

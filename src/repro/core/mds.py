@@ -34,8 +34,10 @@ from typing import Any, Optional
 
 from repro.core import changelog as cl_mod
 from repro.core import dlm as dlm_mod
+from repro.core import fail as fail_mod
 from repro.core import llog as llog_mod
 from repro.core import ptlrpc as R
+from repro.core import recovery as rec_mod
 
 ROOT_FID = (0, 1, 1)
 
@@ -73,6 +75,15 @@ def _cl_create_type(ftype: str) -> str:
             S_IFLNK: cl_mod.CL_SYMLINK}.get(ftype, cl_mod.CL_CREAT)
 
 
+def _pin_remote_fid(req, rep):
+    """MDS-MDS create fixup: pin the peer-assigned fid into the retained
+    request so REPLAY after a peer crash recreates the SAME inode (the
+    create-with-requested-id rule, §5.2.3 — without it a replayed
+    remote_mkdir mints a fresh fid the coordinator's entry never finds)."""
+    if (rep.data or {}).get("fid"):
+        req.body["fid"] = tuple(rep.data["fid"])
+
+
 def fhash(name: str, n: int) -> int:
     """Stable directory-bucket hash."""
     h = 2166136261
@@ -101,7 +112,16 @@ class MdsTarget(R.Target):
         self.peers: dict[str, R.Import] = {}      # peer mds uuid -> import
         self.peer_nids: dict[str, list] = peers or {}
         self.unlink_llog = llog_mod.LlogCatalog(f"{uuid}-unlink")
-        self.changelog = cl_mod.Changelog(uuid)
+        # consumer bookmarks are journaled with the catalog header: the
+        # register/clear/deregister header updates run through this MDT's
+        # transaction machinery (crash-atomic with the purge they imply)
+        self.changelog = cl_mod.Changelog(uuid, txn=self.txn,
+                                          now=lambda: self.sim.now)
+        # highest transno of THIS mds known to be inside the CLUSTER-wide
+        # committed consistent cut (§6.7.6.3): changelog_read never serves
+        # a record above it, so a multi-MDT rollback cannot retract a
+        # record a consumer has already seen
+        self.cluster_cut = 0
         # dependency records for the consistent cut (§6.7.6.3):
         # [(own_transno, {peer_uuid: peer_transno})]
         self.dep_log: list[tuple[int, dict]] = []
@@ -133,6 +153,8 @@ class MdsTarget(R.Target):
         ops["dep_records"] = self.op_dep_records
         ops["rollback_to"] = self.op_rollback_to
         ops["prune_history"] = self.op_prune_history
+        ops["sync_commit"] = self.op_sync_commit
+        ops["peer_rebooted"] = self.op_peer_rebooted
         ops["changelog_register"] = self.op_changelog_register
         ops["changelog_deregister"] = self.op_changelog_deregister
         ops["changelog_read"] = self.op_changelog_read
@@ -151,6 +173,38 @@ class MdsTarget(R.Target):
 
     def connect_ost(self, uuid: str, nids: list[str]):
         self.osts[uuid] = self.rpc.import_target(uuid, nids, "ost")
+
+    def on_restart(self):
+        """A restarted MDS announces itself to its peers (the pinger's
+        job in real Lustre, §4.4.2.5 — a synchronous stand-in here): each
+        peer reconnects its MDS-MDS import, detects the reboot, and
+        replays the cross-MDT halves this target lost, inside the
+        recovery window. A target restarting while its node is still
+        powered off (fail_node) cannot announce — peers learn of the
+        reboot on next contact (-108) instead."""
+        if self.node.nid in self.sim.faults.down_nids:
+            return
+        for uuid in self.peer_nids:
+            try:
+                self._peer(uuid).request("peer_rebooted",
+                                         {"peer": self.uuid},
+                                         no_recover=True)
+            except (R.RpcError, R.TimeoutError_):
+                pass
+
+    def op_peer_rebooted(self, req: R.Request) -> R.Reply:
+        """Peer notification: our import to `peer` is stale — reconnect
+        now (detecting the reboot) so our half-transactions replay into
+        its recovery window instead of waiting for the next cross-MDT
+        operation to stumble over -108."""
+        imp = self.peers.get(req.body.get("peer", ""))
+        if imp is not None and imp.state == "FULL":
+            imp.state = "DISCONN"
+            try:
+                imp._connect_cycle()       # detects reboot -> replays
+            except R.TimeoutError_:
+                pass
+        return R.Reply()
 
     # --------------------------------------------------------------- fids
     def new_fid(self) -> tuple:
@@ -174,6 +228,10 @@ class MdsTarget(R.Target):
         request body (origin_client/origin_jobid); otherwise the requester
         IS the originator. Every emit site opens its transaction right
         after emitting, so the owning transno is the next one."""
+        # the idle-consumer sweep runs BEFORE the owning transno below is
+        # computed: a collected consumer's deregister is its own header
+        # transaction and would otherwise skew transno + 1
+        self.changelog.maybe_gc()
         client = jobid = ""
         if req is not None:
             client = req.body.get("origin_client", req.client_uuid)
@@ -200,8 +258,68 @@ class MdsTarget(R.Target):
         if any(r.transno > self.committed_transno for r in recs):
             self.commit()
 
+    # ------------------------------------------ cluster-cut record gating
+    def _collect_dep_states(self) -> dict:
+        """Own + peer (committed, dep-vector) states for the consistent-cut
+        computation. An unreachable peer contributes committed=0: its
+        halves cannot be proven durable, so nothing depending on them is
+        served until it returns."""
+        states = {self.uuid: {"committed": self.committed_transno,
+                              "deps": [(t, dict(d))
+                                       for t, d in self.dep_log]}}
+        for uuid in self.peer_nids:
+            try:
+                states[uuid] = self._peer(uuid).request(
+                    "dep_records", {}, no_recover=True).data
+            except (R.RpcError, R.TimeoutError_):
+                states[uuid] = {"committed": 0, "deps": []}
+        return states
+
+    def _advance_cluster_cut(self, need: int):
+        """Try to move the cluster-committed cut past transno `need`:
+        compute the cut over everyone's dep records; if `need` is still
+        excluded (some dependency's peer half uncommitted), ask the peers
+        to flush their journals and recompute. The cut only advances —
+        commits are durable, so a transno once inside it stays inside."""
+        for attempt in range(2):
+            states = self._collect_dep_states()
+            cut = rec_mod.compute_consistent_cut(states).get(self.uuid, 0)
+            if cut >= need or attempt:
+                break
+            for uuid in self.peer_nids:       # force the blocking halves out
+                try:
+                    self._peer(uuid).request("sync_commit", {},
+                                             no_recover=True)
+                except (R.RpcError, R.TimeoutError_):
+                    pass
+        self.cluster_cut = max(self.cluster_cut, cut)
+
+    def _gate_at_cluster_cut(self, recs):
+        """Serve only records at or below the CLUSTER-committed consistent
+        cut (§6.7.6.3): local commit protects against single-MDT crashes,
+        the cut protects against the multi-MDT rollback retracting a
+        committed cross-MDT record a consumer already read. Records above
+        the cut are withheld until it advances (they stay retained)."""
+        if not recs:
+            return recs
+        self._cl_stabilize(recs)          # local durability first
+        if not self.peer_nids:
+            return recs                   # single MDT: the commit IS the cut
+        hi = max(r.transno for r in recs)
+        if hi > self.cluster_cut:
+            self._advance_cluster_cut(hi)
+        return [r for r in recs if r.transno <= self.cluster_cut]
+
+    def op_sync_commit(self, req: R.Request) -> R.Reply:
+        """Peer-requested journal flush (a serving MDS forcing the peer
+        halves of cross-MDT transactions into the consistent cut)."""
+        self.commit()
+        return R.Reply(data={"committed": self.committed_transno})
+
     def op_changelog_register(self, req: R.Request) -> R.Reply:
         uid = self.changelog.register()
+        # the id handed back must survive a restart: commit the header txn
+        self.commit()
         return R.Reply(data={"id": uid, "last_idx": self.changelog.last_idx})
 
     def op_changelog_deregister(self, req: R.Request) -> R.Reply:
@@ -209,18 +327,22 @@ class MdsTarget(R.Target):
             self.changelog.deregister(req.body["id"])
         except KeyError:
             raise R.RpcError(-2, req.body.get("id", ""))
+        # like register/clear: the ack must be durable, or a crash would
+        # resurrect the consumer (whose stale bookmark pins the stream)
+        self.commit()
         return R.Reply()
 
     def op_changelog_read(self, req: R.Request) -> R.Reply:
         b = req.body
         if b.get("id") not in self.changelog.users:
             raise R.RpcError(-2, b.get("id", ""))
+        self.changelog.touch(b["id"])
         since = b.get("since_idx")
         if since is None:
             # default: everything the consumer has not cleared yet
             since = self.changelog.users[b["id"]]
-        recs = self.changelog.read(since, b.get("count", 0))
-        self._cl_stabilize(recs)
+        recs = self._gate_at_cluster_cut(
+            self.changelog.read(since, b.get("count", 0)))
         # record payload moves like a bulk readdir page
         wire = [r.to_wire() for r in recs]
         return R.Reply(data={"records": wire,
@@ -228,17 +350,40 @@ class MdsTarget(R.Target):
                        bulk_nbytes=R.wire_size(wire))
 
     def op_changelog_clear(self, req: R.Request) -> R.Reply:
-        if req.body.get("id") not in self.changelog.users:
-            raise R.RpcError(-22, req.body.get("id", ""))
+        uid = req.body.get("id")
+        if uid not in self.changelog.users:
+            raise R.RpcError(-22, uid or "")
+        fail_mod.maybe_fail("mds.changelog.clear")
         up_to = req.body["up_to"]
-        # purging is destructive: anything acked must be durable first
-        self._cl_stabilize([r for r in self.changelog.records()
-                            if r.idx <= up_to])
-        self.changelog.clear(req.body["id"], up_to)
+        # purging is destructive: anything acked must be durable first —
+        # locally AND inside the cluster cut (an ack above the cut is
+        # clamped down; the consumer can only have seen served records)
+        acked = [r for r in self.changelog.records() if r.idx <= up_to]
+        served = self._gate_at_cluster_cut(acked)
+        if len(served) < len(acked):
+            up_to = max((r.idx for r in served),
+                        default=self.changelog.users[uid])
+        self.changelog.clear(uid, up_to)
+        fail_mod.maybe_fail("mds.changelog.clear.applied")
+        # journal the bookmark with the clear's transaction: the ack the
+        # consumer receives is durable across MDS restart (no re-delivery
+        # of cleared records after recovery)
+        self.commit()
         return R.Reply(data={"purged_to": self.changelog.purged_to,
                              "records": len(self.changelog.catalog.pending())})
 
     # ---------------------------------------------------- txn w/ history
+    def crash(self):
+        super().crash()
+        # the rolled-back tail's retained-undo/dependency entries are
+        # dead — their undos already ran, and REPLAY will reuse their
+        # transnos with fresh closures; keeping both would double-undo
+        # on a later consistent-cut rollback
+        self.undo_history = [(t, u) for t, u in self.undo_history
+                             if t <= self.committed_transno]
+        self.dep_log = [(t, d) for t, d in self.dep_log
+                        if t <= self.committed_transno]
+
     def txn_meta(self, undo, deps: dict | None = None) -> int:
         """A metadata transaction: normal undo (crash rollback) + retained
         undo history + dependency record for the consistent cut."""
@@ -293,11 +438,22 @@ class MdsTarget(R.Target):
 
     def _intent_open(self, it, req: R.Request) -> dict:
         """open_namei work: lookup [+create] + open (§6.4.3). Returns the
-        `disposition` bitmap of which phases ran."""
+        `disposition` bitmap of which phases ran. An entry whose inode a
+        peer MDT owns (the state a cross-MDT rename leaves behind) gets
+        the `_intent_lookup`-style remote redirect: the LMV re-issues the
+        open BY FID at the owning MDT (`by_fid`)."""
+        flags = it.get("flags", "")
+        if it.get("by_fid"):
+            # redirected second hop: open the inode this MDT owns directly
+            disp = ["open"]
+            inode = self.inodes.get(tuple(it["fid"]))
+            if inode is None:
+                return {"status": -2, "disposition": disp}
+            return self._open_tail(inode, flags, req, disp,
+                                   created=False, transno=0)
         disp = ["lookup"]
         parent = self._get(it["parent"])
         name = it["name"]
-        flags = it.get("flags", "")
         fid = parent.entries.get(name)
         if fid is None and "buckets" in parent.ea:
             b = parent.ea["buckets"]
@@ -328,15 +484,28 @@ class MdsTarget(R.Target):
         else:
             if "x" in flags and "c" in flags:
                 return {"status": -17, "disposition": disp}   # EEXIST
+            fid = tuple(fid)
+            if fid not in self.inodes and fid[0] != self.inode_group:
+                # inode half lives on a peer MDT (cross-MDT rename
+                # residue): redirect, exactly as _intent_lookup does
+                return {"status": 0, "disposition": disp,
+                        "remote": True, "fid": fid}
             transno = 0
         inode = self._get(fid)
-        disp.append("open")
+        return self._open_tail(inode, flags, req, disp, created, transno)
+
+    def _open_tail(self, inode: Inode, flags: str, req: R.Request,
+                   disp: list, created: bool, transno: int) -> dict:
+        """The open phase shared by the local and by-fid (redirected)
+        paths: symlink short-circuit, per-export open handle, mtime
+        delegation to the OSTs while open for write."""
+        disp = disp + ["open"] if disp[-1] != "open" else disp
         if inode.ftype == S_IFLNK:
             return {"status": 0, "disposition": disp, "symlink": inode.symlink,
                     "attrs": inode.attrs()}
         exp = self.exports[req.client_uuid]
         handle = len(exp.data.setdefault("opens", {})) + 1
-        exp.data["opens"][handle] = fid
+        exp.data["opens"][handle] = inode.fid
         if "w" in flags and inode.ftype == S_IFREG:
             inode.mtime_on_ost = True       # OSTs own mtime while open-write
         return {"status": 0, "disposition": disp, "created": created,
@@ -436,6 +605,7 @@ class MdsTarget(R.Target):
 
     # ----------------------------------------------------- reintegration
     def op_reint(self, req: R.Request) -> R.Reply:
+        fail_mod.maybe_fail("mds.reint.before")
         r = req.body["rec"]
         fn = getattr(self, f"_reint_{r['type']}", None)
         if fn is None:
@@ -573,7 +743,8 @@ class MdsTarget(R.Target):
             len(parent.entries) % len(self.peer_nids)]
         rep = self._peer(peer).request(
             "remote_mkdir", {"mode": r.get("mode", 0o755),
-                             **self._cl_origin(req)})
+                             **self._cl_origin(req)},
+            fixup=_pin_remote_fid)
         fid = tuple(rep.data["fid"])
         self._dir_insert(parent, name, fid, is_dir=True)
         deps = {peer: rep.transno}
@@ -1105,7 +1276,8 @@ class MdsTarget(R.Target):
                 self.inodes[bfid] = Inode(bfid, S_IFDIR, nlink=2)
             else:
                 peer = peers[(i - 1) % len(peers)]
-                rep = self._peer(peer).request("remote_mkdir", {})
+                rep = self._peer(peer).request("remote_mkdir", {},
+                                               fixup=_pin_remote_fid)
                 bfid = tuple(rep.data["fid"])
             buckets.append(bfid)
         entries = dict(parent.entries)
@@ -1197,7 +1369,8 @@ class MdsTarget(R.Target):
         """Undo all retained transactions with transno > cut (§6.7.6.3)."""
         cut = req.body["transno"]
         undone = 0
-        for transno, undo in sorted(self.undo_history, reverse=True):
+        for transno, undo in sorted(self.undo_history, reverse=True,
+                                    key=lambda t: t[0]):
             if transno > cut:
                 undo()
                 undone += 1
@@ -1206,10 +1379,14 @@ class MdsTarget(R.Target):
         self.dep_log = [(t, d) for t, d in self.dep_log if t <= cut]
         self.transno = min(self.transno, cut)
         self.committed_transno = min(self.committed_transno, cut)
+        self.cluster_cut = min(self.cluster_cut, cut)
         return R.Reply(data={"undone": undone})
 
     def op_prune_history(self, req: R.Request) -> R.Reply:
         cut = req.body["transno"]
         self.undo_history = [(t, u) for t, u in self.undo_history if t > cut]
         self.dep_log = [(t, d) for t, d in self.dep_log if t > cut]
+        # the leader proved everything <= cut cluster-committed (§6.7.6.3
+        # steady state): changelog serving can trust it without re-deriving
+        self.cluster_cut = max(self.cluster_cut, cut)
         return R.Reply()

@@ -21,6 +21,10 @@ chains:
   * ``orr``  — object round-robin: the same fair chains keyed by
     (group, oid), modelling per-object batched ordering (disk-friendly
     grouping; requests to a cold object never wait behind a hot one).
+  * ``wfq``  — weighted fair queueing: the CRR chains with per-export
+    weights (a weight-3 client gets 3x the share of a weight-1 client
+    under contention); installed with
+    ``lctl("nrs", uuid, "wfq", {"weights": {...}})``.
   * ``tbf``  — token bucket filter QoS: per-class buckets (class = the
     request's jobid when a ``rules`` entry matches it, else the client
     uuid) delay a request's start until a token is available, enforcing
@@ -127,6 +131,11 @@ class RoundRobinPolicy(NrsPolicy):
     def classify(self, req):
         return req.client_uuid
 
+    def _stretch(self, active: set, key) -> float:
+        """Chain-extension multiplier — the class's inverse service
+        share among the currently active classes. CRR: everyone equal."""
+        return float(len(active))
+
     def schedule(self, req, arrival, cost):
         if req.opcode in CONTROL_OPS:
             self._account(req, arrival, arrival)
@@ -136,7 +145,7 @@ class RoundRobinPolicy(NrsPolicy):
         active = {k for k, t in self.chains.items() if t > arrival}
         active.add(key)
         start = max(arrival, self.chains.get(key, 0.0))
-        self.chains[key] = start + cost * len(active)
+        self.chains[key] = start + cost * self._stretch(active, key)
         self.busy_until = max(self.busy_until, self.chains[key])
         self._account(req, arrival, start)
         return start
@@ -169,6 +178,44 @@ class OrrPolicy(RoundRobinPolicy):
         out["batch_switches"] = self.batch_switches
         out["per_object"] = {f"{g}:{o}": n
                              for (g, o), n in self.per_object.items()}
+        return out
+
+
+class WfqPolicy(RoundRobinPolicy):
+    """Weighted fair queueing (WFQ): CRR generalized with per-export
+    weights.
+
+    The CRR chains with a weighted stretch: a request extends its class
+    chain by ``cost * total_active_weight / own_weight``, so n
+    concurrently active classes share the service rate in proportion to
+    their weights (CRR is the all-weights-equal special case). Installed
+    per target with ``lctl("nrs", uuid, "wfq", {"weights":
+    {client_uuid: w}, "default_weight": 1.0})``.
+
+    params:
+      weights        — {client uuid: weight}
+      default_weight — weight for clients without an entry (default 1.0)
+    """
+
+    name = "wfq"
+
+    def __init__(self, sim, weights: dict | None = None,
+                 default_weight: float = 1.0, **params):
+        super().__init__(sim, **params)
+        self.weights = {k: float(v) for k, v in (weights or {}).items()}
+        self.default_weight = float(default_weight)
+
+    def weight_for(self, key) -> float:
+        return max(1e-9, self.weights.get(key, self.default_weight))
+
+    def _stretch(self, active, key):
+        return sum(self.weight_for(k) for k in active) \
+            / self.weight_for(key)
+
+    def info(self):
+        out = super().info()
+        out["weights"] = dict(self.weights)
+        out["default_weight"] = self.default_weight
         return out
 
 
@@ -245,7 +292,7 @@ class TbfPolicy(NrsPolicy):
 
 
 POLICIES = {p.name: p for p in
-            (FifoPolicy, RoundRobinPolicy, OrrPolicy, TbfPolicy)}
+            (FifoPolicy, RoundRobinPolicy, OrrPolicy, WfqPolicy, TbfPolicy)}
 
 
 def make_policy(name: str, sim, **params) -> NrsPolicy:

@@ -47,6 +47,7 @@ import itertools
 from collections import defaultdict
 from typing import Any, Callable, Optional
 
+from repro.core import fail as fail_mod
 from repro.core import nrs as nrs_mod
 from repro.core import portals as P
 from repro.core.sim import Simulator
@@ -244,6 +245,9 @@ class Target:
         """Open+record a transaction; returns its transno."""
         self.transno += 1
         self.undo_log.append((self.transno, undo))
+        # deferred crash site ({mds,ost}.txn): the induced crash lands at
+        # this target's request boundary — transaction atomicity
+        fail_mod.note(f"{self.svc_kind}.txn")
         self._ops_since_commit += 1
         if self._ops_since_commit >= self.commit_interval:
             self.commit()
@@ -251,6 +255,7 @@ class Target:
 
     def commit(self):
         """Flush journal: everything up to `transno` becomes persistent."""
+        fail_mod.maybe_fail(f"{self.svc_kind}.commit.before")
         self.committed_transno = self.transno
         self.undo_log.clear()
         self._ops_since_commit = 0
@@ -264,6 +269,11 @@ class Target:
         for cb in self.commit_callbacks:
             cb(self.committed_transno)
         self.sim.stats.count(f"{self.uuid}.commit")
+        # "commit durable, reply lost": deferred to the request boundary,
+        # AFTER the reply landed in the journaled reply cache — real
+        # Lustre writes the last_rcvd reply slot inside the transaction,
+        # so a resend after this crash is answered from the cache
+        fail_mod.note(f"{self.svc_kind}.commit.after")
 
     def crash(self):
         """Lose uncommitted state: run undo records in reverse (§6.7.6.3
@@ -402,7 +412,24 @@ class Node:
         if target is None:
             reply = Reply(status=-19)      # ENODEV
         else:
-            reply = target.service.process(req, ev.arrival_time)
+            fail = self.sim.fail
+            fail.enter_service(target)
+            try:
+                fail.maybe_fail(f"ptlrpc.{target.svc_kind}.request_in")
+                reply = target.service.process(req, ev.arrival_time)
+                fail.maybe_fail(f"ptlrpc.{target.svc_kind}.before_reply")
+                fail.raise_if_pending(target)
+            except fail_mod.FailLocHit:
+                # the armed OBD_FAIL site powers the serving target off at
+                # this exact point: uncommitted state dies through the
+                # undo log, the in-flight request is dropped (no reply) —
+                # the client recovers via timeout -> reconnect -> replay
+                self.sim.stats.count("fail.crash")
+                target.crash()
+                target.restart()
+                return
+            finally:
+                fail.exit_service(target)
         # reply PUT matched on xid (paper §4.5.2)
         nbytes = wire_size(reply) + reply.bulk_nbytes
         self.ni.put(reply_nid, reply_portal, req.xid, reply, nbytes)

@@ -10,6 +10,15 @@
     collects last-committed transnos + dependency vectors and converges on
     a cut that could have been reached by full execution of client
     requests; MDSes roll back (undo records) past the cut.
+
+The cut is also the changelog's cluster durability horizon: each MDS
+tracks the highest cut it has been told about (or has derived itself by
+running `compute_consistent_cut` over peer `dep_records`, see
+`mds._gate_at_cluster_cut`) and `changelog_read` never serves a record
+above it — so `rollback_after_failure` can never retract a record a
+consumer has already seen. The steady-state `snapshot()` below pushes
+the cut to every MDS through `prune_history`, advancing that horizon
+without the serving path having to re-derive it.
 """
 from __future__ import annotations
 
@@ -102,7 +111,8 @@ class MdsClusterRecovery:
     def snapshot(self) -> dict[str, int]:
         """Steady-state: advance the cluster-committed cut and let MDSes
         prune their retained undo history ('records can be canceled when
-        the cluster as a whole has committed')."""
+        the cluster as a whole has committed'). Each MDS also adopts the
+        cut as its changelog serving horizon (`MdsTarget.cluster_cut`)."""
         cut = compute_consistent_cut(self.collect())
         for u, transno in cut.items():
             self.imports[u].request("prune_history", {"transno": transno})

@@ -96,6 +96,11 @@ class Simulator:
         self.clock = Clock()
         self.faults = FaultPlan(seed)
         self.stats = Stats()
+        # OBD_FAIL failpoints are node-global (like obd_fail_loc); a fresh
+        # simulator starts disarmed so clusters are isolated (core.fail)
+        from repro.core import fail as fail_mod
+        self.fail = fail_mod.state
+        self.fail.reset()
 
     @property
     def now(self) -> float:

@@ -264,6 +264,24 @@ class LustreClient:
         return {k: tuple(v)
                 for k, v in self.lmv.readdir(fid)["entries"].items()}
 
+    def walk(self):
+        """Iterative whole-namespace walk over readdir/getattr ground
+        truth (split-directory buckets included via the LMV): yields
+        (parent_fid, name, fid, attrs) for every directory entry. This is
+        the 'initial scan' primitive Robinhood-style consumers bootstrap
+        from (tools.audit.ChangelogAuditor(bootstrap=True))."""
+        stack = [ROOT]
+        seen = {ROOT}
+        while stack:
+            dfid = stack.pop()
+            for name, fid in self.lmv.readdir(dfid)["entries"].items():
+                fid = tuple(fid)
+                attrs = self.lmv.getattr(fid)["attrs"]
+                yield tuple(dfid), name, fid, attrs
+                if attrs["type"] == "dir" and fid not in seen:
+                    seen.add(fid)
+                    stack.append(fid)
+
     def symlink(self, target: str, path: str):
         parent, name = self._resolve_parent(path)
         self.lmv.reint({"type": "create", "parent": parent, "name": name,

@@ -125,7 +125,7 @@ class ChangelogAuditor:
     the per-MDT streams by timestamp into a single ordered activity feed
     that drives a NamespaceMirror."""
 
-    def __init__(self, client):
+    def __init__(self, client, bootstrap: bool = False):
         self.client = client
         self.lmv = client.lmv
         self.mirror = NamespaceMirror()
@@ -135,6 +135,26 @@ class ChangelogAuditor:
         for i, mdc in enumerate(self.lmv.mdcs):
             self.users[i] = mdc.changelog_register()
             self.applied_idx[i] = 0
+        if bootstrap:
+            self.bootstrap_scan()
+
+    # ---------------------------------------------------------- bootstrap
+    def bootstrap_scan(self):
+        """Initial scan of an already-populated namespace (the Robinhood
+        bootstrap): consumers are registered FIRST (above), so everything
+        that changes during the walk is recorded; the walk then loads the
+        readdir/getattr ground truth into the mirror; the closing tail()
+        replays whatever raced the scan — record application is
+        idempotent against already-scanned state (links are sets, entry
+        inserts displace)."""
+        for pfid, name, fid, attrs in self.client.walk():
+            node = self.mirror._add_node(fid, attrs["type"])
+            if attrs.get("mode") is not None:
+                node["mode"] = attrs["mode"]
+            if attrs["type"] == "file" and not attrs.get("mtime_on_ost"):
+                node["size"] = attrs["size"]
+            self.mirror._add_link(fid, pfid, name)
+        self.tail()
 
     # --------------------------------------------------------------- tail
     def tail(self, clear: bool = True) -> int:

@@ -6,13 +6,17 @@ min-bookmark purging, jobid tagging, the llog full-log leak fix, and the
 Robinhood-style audit mirror over a 2-MDT striped namespace.
 """
 import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: sampled fallback
+    from _hyposhim import given, settings, strategies as st
 
 from repro.core import LustreCluster
 from repro.core import changelog as CL
 from repro.core import ptlrpc as R
 from repro.core.llog import LlogCatalog
 from repro.core.mds import ROOT_FID
-from repro.fsio import LustreClient
+from repro.fsio import FsError, LustreClient
 from repro.tools.audit import ChangelogAuditor, NamespaceMirror
 
 
@@ -67,9 +71,10 @@ def test_recording_gated_on_registered_consumer():
     c, fs = mk()
     fs.mkdir("/before")                # nobody listening: not recorded
     mds = c.mds_targets[0]
-    assert mds.changelog.info() == {
-        "active": False, "users": {}, "records": 0, "last_idx": 0,
-        "purged_to": 0, "plain_logs": 0}
+    info = mds.changelog.info()
+    assert not info["active"] and info["users"] == {}
+    assert (info["records"], info["last_idx"], info["purged_to"],
+            info["plain_logs"]) == (0, 0, 0, 0)
     user = fs.changelog_register()
     assert fs.changelog_read(user) == []
     fs.mkdir("/after")
@@ -376,9 +381,12 @@ def test_rename_over_with_remote_dst_parent_unlinks_victim():
     assert sum(len(t.obd.objects) for t in c.ost_targets) == objs - 2
     wfid = fs.resolve("/d1/t")
     assert wfid[0] == 0                          # the winner moved in
-    # (open() of a file inode living on a different MDT than its parent
-    # is a pre-existing _intent_open limitation; stat routes by fid)
     assert fs.stat("/d1/t")["size"] == 4
+    # the file's inode lives on MDS0 while its parent is on MDS1: open
+    # follows the _intent_open remote redirect (open-by-fid second hop)
+    fh = fs.open("/d1/t")
+    assert fs.read(fh, 8) == b"new!"
+    fs.close(fh)
     ren = [r for r in fs.changelog_read(u0)
            if r["type"] == CL.CL_RENAME][-1]
     assert tuple(ren["extra"]["victim"]) == vfid
@@ -712,6 +720,204 @@ def test_audit_mirror_tracks_sizes_and_hardlinks():
     aud.tail()
     assert gfid not in aud.mirror.nodes
     assert aud.verify()["ok"]
+
+
+# ----------------------------------------------------- open-by-fid redirect
+
+def test_open_follows_remote_inode_redirect():
+    """A cross-MDT rename leaves a file whose inode lives on a different
+    MDT than its parent directory; open() must follow the
+    _intent_lookup-style redirect (open by fid at the owning MDT) —
+    including write opens, with close routing size/mtime correctly."""
+    c = LustreCluster(osts=2, mdses=2, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/d1")                              # dir inode on MDS1
+    fh = fs.creat("/w", stripe_count=2)          # file inode on MDS0
+    fs.write(fh, b"hello")
+    fs.close(fh)
+    fs.rename("/w", "/d1/w")                     # parent MDS1, inode MDS0
+    wfid = fs.resolve("/d1/w")
+    assert wfid[0] == 0 and fs.resolve("/d1")[0] == 1
+    fh = fs.open("/d1/w")                        # read open: redirected
+    assert fs.read(fh, 16) == b"hello"
+    fs.close(fh)
+    fh = fs.open("/d1/w", "w")                   # write open: redirected
+    fs.write(fh, b"HELLO+MORE", offset=0)
+    fs.close(fh)
+    assert fs.stat("/d1/w")["size"] == 10
+    fh = fs.open("/d1/w")
+    assert fs.read(fh, 16) == b"HELLO+MORE"
+    fs.close(fh)
+    # a dangling entry still errors cleanly (ENOENT at the owning MDT)
+    c.mds_targets[1].inodes[fs.resolve("/d1")].entries["ghost"] = (0, 999, 1)
+    with pytest.raises(FsError) as ei:
+        fs.open("/d1/ghost")
+    assert ei.value.errno == -2
+
+
+# ------------------------------------------------------------ changelog_gc
+
+def test_changelog_gc_collects_idle_consumer_by_index_lag():
+    """A dead consumer pins the stream forever without GC: with
+    gc_max_idle_indexes set, the laggard is deregistered once its
+    bookmark falls too far behind, and the purge pin releases."""
+    c, fs = mk()
+    mds = c.mds_targets[0]
+    live = fs.changelog_register()
+    dead = fs.changelog_register()               # never reads, never clears
+    c.lctl("changelog_gc", "MDS0000", {"max_idle_indexes": 4})
+    for i in range(4):
+        fs.mkdir(f"/d{i}")
+        fs.changelog_clear(live, fs.changelog_read(live)[-1]["idx"])
+    assert dead in mds.changelog.users           # lag 4: not yet collected
+    assert mds.changelog.info()["records"] == 4  # dead consumer pins
+    fs.mkdir("/d4")                              # gc runs pre-emit: lag 4
+    assert dead in mds.changelog.users
+    fs.mkdir("/d5")                              # pre-emit lag 5 > 4: GC
+    assert dead not in mds.changelog.users
+    assert dead in mds.changelog.info()["gc"]["collected"]
+    fs.changelog_clear(live, fs.changelog_read(live)[-1]["idx"])
+    assert mds.changelog.info()["records"] == 0  # pin released
+    # the live consumer is untouched and the stream keeps flowing
+    fs.mkdir("/d6")
+    assert [r["name"] for r in fs.changelog_read(live)] == ["d6"]
+
+
+def test_changelog_gc_collects_idle_consumer_by_time():
+    c, fs = mk()
+    mds = c.mds_targets[0]
+    idle = fs.changelog_register()
+    fs.mkdir("/a")
+    c.sim.clock.advance(100.0)                   # consumer goes silent
+    collected = c.lctl("changelog_gc", "MDS0000", {"max_idle_time": 50.0})
+    assert collected == [idle]
+    assert not mds.changelog.users
+    # recording stopped with the last consumer gone
+    fs.mkdir("/b")
+    assert mds.changelog.info()["records"] == 0
+    info = mds.changelog.info()["gc"]
+    assert info["max_idle_time"] == 50.0 and info["collected"] == [idle]
+
+
+def test_changelog_gc_knobs_in_procfs():
+    c, fs = mk()
+    c.lctl("changelog_gc", "MDS0000",
+           {"max_idle_indexes": 100, "max_idle_time": 9.0})
+    gc = c.procfs()["targets"]["MDS0000"]["changelog"]["gc"]
+    assert gc == {"max_idle_indexes": 100, "max_idle_time": 9.0,
+                  "collected": []}
+
+
+# ------------------------------------------------------- mirror bootstrap
+
+def test_audit_bootstrap_from_populated_namespace():
+    """ROADMAP item: the mirror can bootstrap from a NON-empty namespace
+    (register first, initial scan, changelog catch-up) instead of
+    requiring mkfs-time registration."""
+    c = LustreCluster(osts=2, mdses=2, clients=1, commit_interval=32)
+    fs = LustreClient(c).mount()
+    # populate while NOTHING is recorded (no consumer registered)
+    fs.mkdir("/pre")
+    fs.mkdir("/pre/sub")                         # cross-MDT dirs
+    fh = fs.creat("/pre/a", stripe_count=2)
+    fs.write(fh, b"12345")
+    fs.close(fh)
+    fs.link("/pre/a", "/pre/b")                  # hard link pre-dates scan
+    fs.symlink("/pre/a", "/pre/s")
+    for t in c.mds_targets:
+        assert t.changelog.info()["records"] == 0
+    aud = ChangelogAuditor(fs, bootstrap=True)
+    report = aud.verify()                        # scan alone matches truth
+    assert report["ok"], report["mismatches"]
+    afid = fs.resolve("/pre/a")
+    assert aud.mirror.nodes[afid]["size"] == 5
+    assert aud.mirror.nodes[afid]["links"] == {
+        (fs.resolve("/pre"), "a"), (fs.resolve("/pre"), "b")}
+    # post-registration activity flows in through the changelog
+    fs.rename("/pre/a", "/pre/sub/a2")           # cross-MDT rename
+    fs.unlink("/pre/b")
+    fh = fs.creat("/pre/new")
+    fs.close(fh)
+    aud.tail()
+    report = aud.verify()
+    assert report["ok"], report["mismatches"]
+    assert afid in aud.mirror.nodes              # alive via /pre/sub/a2
+
+
+def test_audit_bootstrap_scan_races_with_activity():
+    """Ops that land between registration and the end of the scan are
+    both scanned AND recorded; catch-up application is idempotent."""
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=32)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/old")
+    aud = ChangelogAuditor(fs)                   # registered, no scan yet
+    fs.mkdir("/raced")                           # recorded AND scan-visible
+    fh = fs.creat("/raced/f")
+    fs.close(fh)
+    aud.bootstrap_scan()                         # scan sees /raced too
+    report = aud.verify()
+    assert report["ok"], report["mismatches"]
+    # the raced records were applied on top without duplicating links
+    rfid = fs.resolve("/raced/f")
+    assert aud.mirror.nodes[rfid]["links"] == {(fs.resolve("/raced"), "f")}
+
+
+# --------------------------------------------- property: random op streams
+
+_PROP_VERBS = ["create", "mkdir", "rename", "link", "unlink", "tailclear"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(_PROP_VERBS),
+                          st.integers(0, 5), st.integers(0, 5)),
+                min_size=4, max_size=28))
+def test_property_random_ops_mirror_matches_and_bookmarks_monotonic(ops):
+    """Property (ISSUE-3): any interleaving of create/mkdir/rename/link/
+    unlink across 2 MDTs, with clears interleaved at arbitrary points,
+    keeps (a) the audit mirror identical to the readdir/stat ground
+    truth and (b) every consumer bookmark monotonically non-decreasing."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=16)
+    fs = LustreClient(c).mount()
+    aud = ChangelogAuditor(fs)
+    fs.mkdir("/dA")                              # landing zones on both MDTs
+    fs.mkdir("/dB")
+    dirs = ["", "/dA", "/dB"]
+    names = [f"n{i}" for i in range(4)]
+    last_bm = {i: 0 for i in aud.users}
+
+    def bookmarks_monotonic():
+        for i, t in enumerate(c.mds_targets):
+            uid = aud.users[i]
+            bm = t.changelog.users[uid]
+            assert bm >= last_bm[i], (i, bm, last_bm[i])
+            last_bm[i] = bm
+
+    for verb, i, j in ops:
+        src = f"{dirs[i % 3]}/{names[i % 4]}"
+        dst = f"{dirs[j % 3]}/{names[j % 4]}"
+        try:
+            if verb == "create":
+                fs.close(fs.creat(src, stripe_count=1))
+            elif verb == "mkdir":
+                fs.mkdir(src)
+            elif verb == "rename":
+                fs.rename(src, dst)
+            elif verb == "link":
+                fs.link(src, dst)
+            elif verb == "unlink":
+                fs.unlink(src)
+            elif verb == "tailclear":
+                aud.tail()
+                bookmarks_monotonic()
+        except (FsError, R.RpcError):
+            pass          # EEXIST/ENOENT/ENOTEMPTY... are legal outcomes
+    aud.tail()
+    bookmarks_monotonic()
+    report = aud.verify()
+    assert report["ok"], (ops, report["mismatches"])
+    # exactly-once: the merged feed never repeats a (mdt, idx)
+    keys = [(r["mdt"], r["idx"]) for r in aud.feed]
+    assert len(keys) == len(set(keys))
 
 
 def test_mirror_standalone_displacing_rename():

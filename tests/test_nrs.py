@@ -145,6 +145,79 @@ def test_orr_end_to_end_accounting():
     assert info["per_object"][f"0:{o2}"] >= 4
 
 
+# -------------------------------------------------------------------- wfq
+
+def test_wfq_shares_by_weight():
+    """WFQ chains: with weights 3:1 and equal backlogs arriving at t=0,
+    the heavy-weight client's k-th request starts ~3x earlier than the
+    light one's."""
+    pol = N.make_policy("wfq", None, weights={"gold": 3.0, "bronze": 1.0})
+    gold = R.Request(opcode="write", body={"oid": 1}, client_uuid="gold")
+    bronze = R.Request(opcode="write", body={"oid": 2}, client_uuid="bronze")
+    g_starts, b_starts = [], []
+    for _ in range(12):                   # interleaved: both chains active
+        g_starts.append(pol.schedule(gold, 0.0, 1e-3))
+        b_starts.append(pol.schedule(bronze, 0.0, 1e-3))
+    # steady state: per-request spacing is cost * total_weight / own_weight
+    g_gap = g_starts[6] - g_starts[5]
+    b_gap = b_starts[6] - b_starts[5]
+    assert abs(g_gap * 3 - b_gap) < 1e-9, (g_gap, b_gap)
+    info = pol.info()
+    assert info["policy"] == "wfq"
+    assert info["weights"] == {"gold": 3.0, "bronze": 1.0}
+
+
+def test_wfq_equal_weights_is_crr():
+    """All-weights-equal WFQ degenerates to CRR exactly."""
+    reqs = [R.Request(opcode="write", body={"oid": i}, client_uuid=f"c{i%3}")
+            for i in range(24)]
+    wfq = N.make_policy("wfq", None)
+    crr = N.make_policy("crr", None)
+    for r in reqs:
+        assert wfq.schedule(r, 0.01 * r.body["oid"], 1e-3) == \
+            crr.schedule(r, 0.01 * r.body["oid"], 1e-3)
+
+
+def test_wfq_fairness_end_to_end():
+    """Two clients hammer one OST; the weight-4 client finishes its batch
+    well before the weight-1 client under WFQ via the lctl knob."""
+    c = mk()
+    c.ost_targets[0].service.cpu_cost = 2e-3
+    heavy = osc_for(c, 0)
+    light = osc_for(c, 1)
+    c.lctl("nrs", "OST0000", "wfq",
+           {"weights": {heavy.rpc.uuid: 4.0, light.rpc.uuid: 1.0}})
+    h_oid = heavy.create(0)["oid"]
+    l_oid = light.create(0)["oid"]
+    done = {}
+
+    def h_burst(i):
+        heavy.write(0, h_oid, i * 8, b"h" * 8)
+        done["heavy"] = max(done.get("heavy", 0.0), c.now)
+
+    def l_burst(i):
+        light.write(0, l_oid, i * 8, b"l" * 8)
+        done["light"] = max(done.get("light", 0.0), c.now)
+    t0 = c.now
+    c.sim.parallel([(lambda i=i: h_burst(i)) for i in range(16)]
+                   + [(lambda i=i: l_burst(i)) for i in range(16)])
+    assert done["heavy"] - t0 < (done["light"] - t0) / 2, done
+    pe = c.procfs()["targets"]["OST0000"]["nrs"]["per_export"]
+    assert pe[heavy.rpc.uuid]["reqs"] >= 16
+    # the light client queued (lower share), the heavy one barely did
+    assert pe[light.rpc.uuid]["queue_wait_s"] > \
+        pe[heavy.rpc.uuid]["queue_wait_s"]
+
+
+def test_wfq_control_ops_not_queued():
+    pol = N.make_policy("wfq", None, weights={"c": 0.001})
+    busy = R.Request(opcode="write", body={"oid": 1}, client_uuid="c")
+    for _ in range(8):
+        pol.schedule(busy, 0.0, 1e-3)
+    ping = R.Request(opcode="ping", body={}, client_uuid="c")
+    assert pol.schedule(ping, 0.0, 1e-3) == 0.0
+
+
 # -------------------------------------------------------------------- tbf
 
 def test_tbf_rate_limit_honored():
@@ -285,8 +358,10 @@ def test_policy_switch_at_runtime_and_procfs():
     nrs = c.procfs()["targets"]["OST0000"]["nrs"]
     assert nrs["policy"] == "orr"
     assert nrs["reqs"] >= 1             # accounting restarted with policy
+    c.lctl("nrs", "OST0000", "wfq", {"weights": {osc.rpc.uuid: 2.0}})
+    assert c.procfs()["targets"]["OST0000"]["nrs"]["policy"] == "wfq"
     with pytest.raises(ValueError):
-        c.lctl("nrs", "OST0000", "wfq")   # not implemented (ROADMAP)
+        c.lctl("nrs", "OST0000", "bogus")
 
 
 def test_unknown_policy_rejected():
