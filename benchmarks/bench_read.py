@@ -1,0 +1,95 @@
+"""Sequential-read RPC trajectory: OSC clean cache + readahead (ISSUE 4).
+
+Workload: a writer lays down an 8 MiB file striped over 4 OSTs, a COLD
+second client then reads it sequentially in 64 KiB chunks. Three passes:
+
+  * no_readahead — clean cache on, readahead off: every chunk is a miss
+    (one vectored OST_READ each);
+  * readahead    — the per-handle sequential detector batches the misses
+    into ~1 MiB vectored windows (one OST_READ per stripe object per
+    window);
+  * warm re-read — the same client reads the file again: everything is
+    lock-covered cache, ZERO OST RPCs.
+
+`seq_read_metrics()` feeds the `seq_read` section of BENCH_rpc.json
+(the regression gate in benchmarks/run.py): readahead must stay >= 4x
+cheaper than the no-readahead cold pass, the warm re-read must stay at
+zero OST_READs, and the readahead RPC count must not regress vs the
+committed baseline.
+"""
+from __future__ import annotations
+
+from benchmarks.common import save, table
+from repro.core import LustreCluster
+from repro.fsio import LustreClient
+
+SIZE = 8 << 20
+CHUNK = 64 << 10
+STRIPES = 4
+
+
+def _ost_reads(c):
+    return c.stats.counters.get("rpc.ost.read", 0)
+
+
+def _ost_rpcs(c):
+    return sum(n for k, n in c.stats.counters.items()
+               if k.startswith("rpc.ost."))
+
+
+def seq_read_metrics() -> dict:
+    out = {}
+    for mode, ra_pages in (("no_readahead", 0), ("readahead", 256)):
+        c = LustreCluster(osts=4, mdses=1, clients=2, commit_interval=512,
+                          readahead_pages=ra_pages)
+        w = LustreClient(c, 0).mount()
+        fh = w.creat("/read.bin", stripe_count=STRIPES,
+                     stripe_size=1 << 20)
+        w.write(fh, bytes(CHUNK) * (SIZE // CHUNK))
+        w.fsync(fh)
+        r = LustreClient(c, 1).mount()            # cold client cache
+        fh2 = r.open("/read.bin")
+        base_reads, t0 = _ost_reads(c), c.now
+        for _ in range(SIZE // CHUNK):
+            r.read(fh2, CHUNK)
+        hits = c.stats.counters.get("osc.cache_hit", 0)
+        misses = c.stats.counters.get("osc.cache_miss", 0)
+        out[mode] = {
+            "ost_read_rpcs": _ost_reads(c) - base_reads,
+            "read_vtime_s": round(c.now - t0, 6),
+            "cache_hit_rate": round(hits / (hits + misses), 4)
+            if hits + misses else 0.0,
+            "bytes": SIZE,
+        }
+        if mode == "readahead":
+            # warm pass: the whole file is lock-covered clean cache
+            base_reads, base_all = _ost_reads(c), _ost_rpcs(c)
+            fh2.pos = 0
+            for _ in range(SIZE // CHUNK):
+                r.read(fh2, CHUNK)
+            out["warm_reread_ost_reads"] = _ost_reads(c) - base_reads
+            out["warm_reread_ost_rpcs"] = _ost_rpcs(c) - base_all
+    n, ra = out["no_readahead"], out["readahead"]
+    out["rpc_reduction"] = round(
+        n["ost_read_rpcs"] / max(1, ra["ost_read_rpcs"]), 2)
+    return out
+
+
+def run() -> dict:
+    out = seq_read_metrics()
+    rows = [[m, out[m]["ost_read_rpcs"], out[m]["cache_hit_rate"],
+             f"{out[m]['read_vtime_s']:.4f}"]
+            for m in ("no_readahead", "readahead")]
+    rows.append(["warm re-read", out["warm_reread_ost_reads"], 1.0, "-"])
+    table(f"sequential read, {SIZE >> 20} MiB / {CHUNK >> 10} KiB chunks "
+          f"({STRIPES} stripes)",
+          ["mode", "OST_READ RPCs", "hit rate", "vtime s"], rows)
+    save("read", out)
+    assert out["rpc_reduction"] >= 4.0, out["rpc_reduction"]
+    assert out["warm_reread_ost_reads"] == 0
+    assert out["warm_reread_ost_rpcs"] == 0
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -19,7 +19,7 @@ def run() -> dict:
     rows = []
     out = {}
     for cnt in (1, 2, 4, 8):
-        c = LustreCluster(osts=8, mdses=1, clients=1, commit_interval=256)
+        c = LustreCluster(osts=8, mdses=1, clients=2, commit_interval=256)
         fs = LustreClient(c).mount()
         fh = fs.creat("/bench.bin", stripe_count=cnt, stripe_size=1 << 20)
         data = bytes(CHUNK)
@@ -31,10 +31,14 @@ def run() -> dict:
         _, tw = vtime(c, write)
         fs.close(fh)
 
-        fh2 = fs.open("/bench.bin")
+        # COLD second client: this measures the stripe fan-out bandwidth
+        # off the OSTs — the writer's own clean cache would serve the
+        # re-read with zero RPCs (that path is bench_read's subject)
+        fs2 = LustreClient(c, 1).mount()
+        fh2 = fs2.open("/bench.bin")
         # one whole-file read: the LOV fans the stripe reads out in parallel
-        _, tr = vtime(c, lambda: fs.read(fh2, SIZE, offset=0))
-        fs.close(fh2)
+        _, tr = vtime(c, lambda: fs2.read(fh2, SIZE, offset=0))
+        fs2.close(fh2)
         wbw = SIZE / tw / 1e6
         rbw = SIZE / tr / 1e6
         out[cnt] = {"write_MBps": round(wbw, 1), "read_MBps": round(rbw, 1),

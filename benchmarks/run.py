@@ -17,7 +17,7 @@ import os
 import sys
 import time
 
-BENCHES = ["striping", "nrs", "intents", "dlm", "recovery", "cobd",
+BENCHES = ["striping", "nrs", "read", "intents", "dlm", "recovery", "cobd",
            "checkpoint", "parity"]
 
 RPC_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_rpc.json")
@@ -34,10 +34,12 @@ def bench_rpc() -> dict:
     from repro.core import LustreCluster
     from repro.fsio import LustreClient
 
-    baseline = None
+    baseline = read_baseline = None
     try:
         with open(RPC_JSON) as f:
-            baseline = json.load(f)["vectored"]["ost_write_rpcs"]
+            committed = json.load(f)
+        baseline = committed["vectored"]["ost_write_rpcs"]
+        read_baseline = committed["seq_read"]["readahead"]["ost_read_rpcs"]
     except (OSError, KeyError, ValueError, TypeError):
         pass                                   # no (usable) baseline yet
 
@@ -65,11 +67,23 @@ def bench_rpc() -> dict:
     out["rpc_reduction"] = round(
         s["ost_write_rpcs"] / max(1, v["ost_write_rpcs"]), 2)
     out["baseline_ost_write_rpcs"] = baseline
-    # single source of truth for the gate: main() keys its exit code off
-    # this flag, and the file writes below key off it too
-    regressed = baseline is not None and v["ost_write_rpcs"] > baseline
-    out["regressed"] = regressed
-    if not regressed:
+    # sequential-read trajectory (ISSUE 4): clean cache + readahead
+    from benchmarks.bench_read import seq_read_metrics
+    sr = seq_read_metrics()
+    sr["baseline_ost_read_rpcs"] = read_baseline
+    out["seq_read"] = sr
+    # single source of truth for the gates: main() keys its exit code off
+    # these per-gate flags, and the file writes below key off the
+    # combined one
+    out["write_regressed"] = \
+        baseline is not None and v["ost_write_rpcs"] > baseline
+    sr["regressed"] = (
+        (read_baseline is not None
+         and sr["readahead"]["ost_read_rpcs"] > read_baseline)
+        or sr["rpc_reduction"] < 4.0
+        or sr["warm_reread_ost_reads"] != 0)
+    out["regressed"] = out["write_regressed"] or sr["regressed"]
+    if not out["regressed"]:
         # a failed gate must NOT overwrite its own baseline: the second
         # run would compare against the regressed count and pass, and a
         # blind "commit the regenerated json" would ratchet the committed
@@ -90,6 +104,15 @@ def bench_rpc() -> dict:
           f"({v['write_vtime_s']:.4f}s vtime)  "
           f"[{out['rpc_reduction']}x fewer]"
           + (f"  (baseline: {baseline})" if baseline is not None else ""))
+    print(f"== BENCH_rpc: striped 8 MiB cold sequential read ==\n"
+          f"  no readahead: {sr['no_readahead']['ost_read_rpcs']} "
+          f"OST_READ RPCs\n"
+          f"  readahead:    {sr['readahead']['ost_read_rpcs']} OST_READ "
+          f"RPCs  [{sr['rpc_reduction']}x fewer, hit rate "
+          f"{sr['readahead']['cache_hit_rate']}]\n"
+          f"  warm re-read: {sr['warm_reread_ost_reads']} OST_READ RPCs"
+          + (f"  (baseline: {read_baseline})"
+             if read_baseline is not None else ""))
     return out
 
 
@@ -115,11 +138,19 @@ def main():
                 rpc["seed_like"]["ost_write_rpcs"]:
             failures.append(("BENCH_rpc", "vectored BRW did not reduce "
                              "OST_WRITE RPC count"))
-        if rpc.get("regressed"):
+        if rpc.get("write_regressed"):
             failures.append((
                 "BENCH_rpc", f"striped-write OST_WRITE RPC count "
                 f"regressed: {rpc['vectored']['ost_write_rpcs']} > "
                 f"committed baseline {rpc['baseline_ost_write_rpcs']}"))
+        sr = rpc["seq_read"]
+        if sr.get("regressed"):
+            failures.append((
+                "BENCH_rpc", f"sequential-read gate failed: readahead "
+                f"{sr['readahead']['ost_read_rpcs']} RPCs (baseline "
+                f"{sr['baseline_ost_read_rpcs']}), reduction "
+                f"{sr['rpc_reduction']}x (needs >= 4x), warm re-read "
+                f"{sr['warm_reread_ost_reads']} (needs 0)"))
     except Exception as e:  # noqa: BLE001
         import traceback
         traceback.print_exc()

@@ -15,6 +15,7 @@ Example config:
 """
 from __future__ import annotations
 
+from repro.core import fail as fail_mod
 from repro.core import mdc as mdc_mod
 from repro.core import mds as mds_mod
 from repro.core import osc as osc_mod
@@ -32,14 +33,20 @@ class LustreCluster(R.ClusterBase):
                  nrs_policy: str = "fifo", nrs_params: dict | None = None,
                  max_pages_per_rpc: int = osc_mod.DEFAULT_MAX_PAGES_PER_RPC,
                  max_rpcs_in_flight: int = osc_mod.DEFAULT_MAX_RPCS_IN_FLIGHT,
-                 vectored_brw: bool = True):
+                 vectored_brw: bool = True,
+                 max_cached_mb: int = osc_mod.DEFAULT_MAX_CACHED_MB,
+                 readahead_pages: int = osc_mod.DEFAULT_READAHEAD_PAGES):
         super().__init__(seed)
         self.net = net
-        # client-side BRW pipeline knobs, handed to every OSC built via
-        # make_oscs/make_lov (overridable per call)
+        # client-side BRW pipeline + read cache knobs, handed to every
+        # OSC built via make_oscs/make_lov (overridable per call);
+        # readahead_pages is consumed by LustreClient's sequential-read
+        # detector (0 disables readahead)
         self.max_pages_per_rpc = max_pages_per_rpc
         self.max_rpcs_in_flight = max_rpcs_in_flight
         self.vectored_brw = vectored_brw
+        self.max_cached_mb = max_cached_mb
+        self.readahead_pages = readahead_pages
         self.ost_targets: list[ost_mod.OstTarget] = []
         self.mds_targets: list[mds_mod.MdsTarget] = []
         self.client_nodes: list[R.Node] = []
@@ -97,6 +104,7 @@ class LustreCluster(R.ClusterBase):
         osc_kw.setdefault("max_pages_per_rpc", self.max_pages_per_rpc)
         osc_kw.setdefault("max_rpcs_in_flight", self.max_rpcs_in_flight)
         osc_kw.setdefault("vectored_brw", self.vectored_brw)
+        osc_kw.setdefault("max_cached_mb", self.max_cached_mb)
         return [osc_mod.Osc(rpc, t.uuid, self.ost_nids[t.uuid],
                             writeback=writeback, **osc_kw)
                 for t in self.ost_targets]
@@ -174,14 +182,23 @@ class LustreCluster(R.ClusterBase):
                 t.commit()  # durable: a crash must not resurrect the pins
             return collected
         elif verb == "set_param":
-            # lctl("set_param", "fail_loc", site[, nth]) arms an OBD_FAIL
-            # failpoint (one-shot, fires on the nth hit); "" disarms.
-            # lctl("set_param", "fail_val", n) adjusts the hit count.
+            # lctl("set_param", "fail_loc", site[, nth[, action]]) arms an
+            # OBD_FAIL failpoint (one-shot, fires on the nth hit); ""
+            # disarms. action: crash (default) | drop | delay.
+            # lctl("set_param", "fail_val", n) adjusts the hit count;
+            # "fail_action"/"fail_delay" adjust the action knobs.
             if args[0] == "fail_loc":
                 self.sim.fail.arm(args[1],
-                                  args[2] if len(args) > 2 else None)
+                                  args[2] if len(args) > 2 else None,
+                                  args[3] if len(args) > 3 else None)
             elif args[0] == "fail_val":
                 self.sim.fail.val = max(1, int(args[1]))
+            elif args[0] == "fail_action":
+                if args[1] not in fail_mod.ACTIONS:
+                    raise ValueError(args[1])
+                self.sim.fail.action = args[1]
+            elif args[0] == "fail_delay":
+                self.sim.fail.delay_s = float(args[1])
             else:
                 raise ValueError(args[0])
         else:
@@ -190,9 +207,21 @@ class LustreCluster(R.ClusterBase):
     def procfs(self) -> dict:
         """lprocfs-style introspection tree (paper ch. 35): per-target
         state + cluster counters, as /proc/fs/lustre would expose."""
-        out = {"counters": dict(self.sim.stats.counters),
+        cnt = self.sim.stats.counters
+        hits, misses = cnt.get("osc.cache_hit", 0), cnt.get("osc.cache_miss", 0)
+        out = {"counters": dict(cnt),
                "bytes": dict(self.sim.stats.bytes),
                "fail": self.sim.fail.info(),
+               # client read-cache rollup (ISSUE-4): the per-event
+               # counters (osc.cache_*) live in "counters" too
+               "client_cache": {
+                   "hits": hits, "misses": misses,
+                   "hit_rate": round(hits / (hits + misses), 4)
+                   if hits + misses else 0.0,
+                   "invalidations": cnt.get("osc.cache_invalidate", 0),
+                   "lru_evictions": cnt.get("osc.cache_lru_evict", 0),
+                   "readaheads": cnt.get("lov.readahead", 0),
+               },
                "targets": {}}
         for t in self.ost_targets:
             out["targets"][t.uuid] = {

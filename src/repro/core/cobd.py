@@ -58,15 +58,14 @@ class Cobd:
         # (group, oid) -> {page_index: bytes}
         self.pages: dict[tuple, dict[int, bytes]] = defaultdict(dict)
         self.lru: list[tuple] = []
-        # invalidate on lock revocation
-        prev = self.osc.locks.flush_cb
-
+        # invalidate on lock revocation. revoke_cbs (not flush_cb): the
+        # COBD's locks are clean PR locks — the old flush_cb hook only
+        # fired for DIRTY locks, so revocation never actually dropped the
+        # cached pages (a writer left this cache permanently stale).
         def cb(lock):
             if lock.res_name[0] == "ext":
                 self._invalidate(lock.res_name[1], lock.res_name[2])
-            if prev:
-                prev(lock)
-        self.osc.locks.flush_cb = cb
+        self.osc.locks.revoke_cbs.append(cb)
 
     # ------------------------------------------------------------- cache
     def _invalidate(self, group, oid):

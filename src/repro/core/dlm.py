@@ -21,6 +21,7 @@ import itertools
 from collections import defaultdict
 from typing import Any, Callable, Optional
 
+from repro.core import fail as fail_mod
 from repro.core import ptlrpc as R
 
 MAX_EXT = (1 << 64) - 1
@@ -45,6 +46,15 @@ def compatible(held: "Lock", req_mode: str, req_gid: int = 0) -> bool:
     if held.mode == "GR" and req_mode == "GR":
         return held.gid == req_gid          # group locks share a gid
     return ok
+
+
+def mode_covers(held: str, req: str) -> bool:
+    """A cached lock of mode `held` satisfies a request for mode `req`
+    iff `held` is at least as strong: everything incompatible with `req`
+    must also be incompatible with `held` (so holding it grants at least
+    the protection the requester asked for). Derived straight from the
+    VMS matrix — a cached CR lock does NOT satisfy a PR request."""
+    return all(_C[held][x] <= _C[req][x] for x in MODES)
 
 
 def overlaps(a: tuple | None, b: tuple | None) -> bool:
@@ -72,15 +82,7 @@ class Lock:
     dirty: bool = False                     # pages under this lock to flush
 
     def covers(self, mode: str, extent: tuple | None) -> bool:
-        if _C[self.mode][mode] == 0 and self.mode != mode:
-            # a cached PW lock also satisfies PR requests etc.: a lock
-            # covers a request if its mode is equal or stronger.
-            pass
-        stronger = {"PR": ("PR", "PW", "EX", "GR"),
-                    "PW": ("PW", "EX", "GR"),
-                    "EX": ("EX",), "CR": MODES, "NL": MODES,
-                    "CW": ("CW", "EX"), "GR": ("GR",)}
-        if self.mode not in stronger.get(mode, (mode,)):
+        if not mode_covers(self.mode, mode):
             return False
         if extent is None or self.extent is None:
             return True
@@ -158,6 +160,15 @@ class LdlmNamespace:
         """Ask the holder to drop `lk`. Returns False if the holder is
         unreachable (-> eviction)."""
         self.sim.stats.count("dlm.blocking_ast")
+        act = fail_mod.state.check("dlm.blocking_ast")
+        if act == "drop":
+            # the AST is lost on the wire: the holder never answers and
+            # is treated exactly like a dead client (§7.4 -> eviction)
+            return False
+        if act == "crash":
+            # mid-revocation server crash, deferred to the request
+            # boundary of the target serving the triggering enqueue
+            fail_mod.state.defer("dlm.blocking_ast")
         imp = self._cb_import(lk.client_uuid, lk.client_nid)
         try:
             rep = imp.request("blocking_ast",
@@ -327,7 +338,10 @@ class LockClient:
     """Client lock cache for one remote namespace (one OST or MDS).
 
     `flush_cb(lock)` is provided by the data layer (page-cache writeback
-    before a PW lock is surrendered)."""
+    before a PW lock is surrendered). `revoke_cbs` fire whenever a lock
+    leaves the cache for ANY reason (blocking AST, cancel, eviction) —
+    clean cached pages are valid exactly while a lock covers them
+    (§7.4/§7.6), so the data layer invalidates them here."""
 
     def __init__(self, rpc: R.RpcClient, server_import: R.Import,
                  flush_cb: Callable[["Lock"], None] | None = None):
@@ -335,6 +349,7 @@ class LockClient:
         self.imp = server_import
         self.sim = rpc.sim
         self.flush_cb = flush_cb
+        self.revoke_cbs: list[Callable[["Lock"], None]] = []
         self.locks: dict[int, Lock] = {}
         self.by_res: defaultdict = defaultdict(list)
         node = rpc.node
@@ -376,13 +391,20 @@ class LockClient:
         self.by_res[lk.res_name].append(lk)
         return lk, d.get("intent"), d.get("lvb", {})
 
+    def _forget(self, lk: Lock):
+        """Drop a lock from the cache + notify the data layer: pages the
+        lock covered are no longer protected."""
+        self.locks.pop(lk.handle, None)
+        if lk in self.by_res.get(lk.res_name, ()):
+            self.by_res[lk.res_name].remove(lk)
+        for cb in self.revoke_cbs:
+            cb(lk)
+
     def cancel(self, lk: Lock):
         if self.flush_cb and lk.dirty:
             self.flush_cb(lk)
             lk.dirty = False
-        self.locks.pop(lk.handle, None)
-        if lk in self.by_res.get(lk.res_name, ()):
-            self.by_res[lk.res_name].remove(lk)
+        self._forget(lk)
         try:
             self.imp.request("ldlm_cancel", {"handle": lk.handle})
         except (R.TimeoutError_, R.RpcError):
@@ -391,6 +413,14 @@ class LockClient:
     def cancel_all(self):
         for lk in list(self.locks.values()):
             self.cancel(lk)
+
+    def drop_all(self):
+        """Local-only teardown (server evicted us: it already dropped our
+        locks, so no cancel RPCs): every covered page is invalidated."""
+        for lk in list(self.locks.values()):
+            lk.dirty = False
+            self._forget(lk)
+        self.by_res.clear()
 
     # --------------------------------------------------------------- ASTs
     def on_blocking_ast(self, handle: int, res_name: tuple):
@@ -401,9 +431,10 @@ class LockClient:
         if self.flush_cb and lk.dirty:
             self.flush_cb(lk)
             lk.dirty = False
-        self.locks.pop(handle, None)
-        if lk in self.by_res.get(lk.res_name, ()):
-            self.by_res[lk.res_name].remove(lk)
+        # revocation drops CLEAN pages too (revoke_cbs inside _forget):
+        # the writer about to be granted will change data under this
+        # lock, so serving the old pages later would be stale (§7.4)
+        self._forget(lk)
         # lock cancel goes back to the server as its own RPC
         try:
             self.imp.request("ldlm_cancel", {"handle": handle})

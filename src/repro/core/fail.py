@@ -67,31 +67,64 @@ class FailLocHit(Exception):
         self.site = site
 
 
+class FailLocDrop(Exception):
+    """An armed failpoint fired with the 'drop' action: the in-flight
+    request is lost on the wire (OBD_FAIL_*_NET semantics) — the target
+    stays up, no reply is sent, the client recovers by timeout+resend."""
+
+    def __init__(self, site: str):
+        super().__init__(f"fail_loc drop: {site}")
+        self.site = site
+
+
+ACTIONS = ("crash", "drop", "delay")
+
+
 class FailState:
-    """The armed failpoint (one at a time, like obd_fail_loc)."""
+    """The armed failpoint (one at a time, like obd_fail_loc).
+
+    Besides the classic crash, a site can be armed with an *action*:
+
+      * ``crash`` — power the serving target off at the site (default);
+      * ``drop``  — lose the in-flight message instead (OBD_FAIL_*_NET):
+        server sites drop the request/reply, the DLM blocking-AST site
+        loses the AST (holder presumed dead -> evicted), the client-side
+        ``osc.flush`` site loses the flush's first BRW RPC on the wire;
+      * ``delay`` — stall the site for ``fail_delay`` virtual seconds
+        (slow disk / slow wire), then continue normally.
+    """
 
     def __init__(self):
         self.loc = ""                    # armed site name ("" = disarmed)
         self.val = 1                     # trigger on the val-th hit
+        self.action = "crash"            # what a triggered site does
+        self.delay_s = 0.25              # 'delay' action stall (virtual s)
+        self.sim = None                  # owning Simulator (delay needs it)
         self.hits = defaultdict(int)     # site -> times checked while armed
-        self.fired = 0                   # total crashes induced
+        self.fired = 0                   # total failures induced
         # deferred-crash bookkeeping: the innermost target currently
         # processing a request (see ptlrpc.Node._request_in) owns any
         # pending crash armed by a note() inside its handler.
         self.service_stack: list = []
-        self.pending: dict = {}          # owner id -> firing site name
+        self.pending: dict = {}          # owner id -> (site, action)
 
     # ------------------------------------------------------------- control
-    def arm(self, loc: str, val: int | None = None):
+    def arm(self, loc: str, val: int | None = None,
+            action: str | None = None):
         """Arm `loc`; `val` = fire on the val-th hit. Like real Lustre,
         fail_val and fail_loc are order-independent: arming without an
-        explicit val keeps whatever fail_val was set before."""
+        explicit val/action keeps whatever was set before."""
         if loc and loc not in SITES:
             raise ValueError(f"unknown fail site {loc!r} "
                              f"(have: {sorted(SITES)})")
         self.loc = loc
         if val is not None:
             self.val = max(1, int(val))
+        if action is not None:
+            if action not in ACTIONS:
+                raise ValueError(f"unknown fail action {action!r} "
+                                 f"(have: {ACTIONS})")
+            self.action = action
 
     def disarm(self):
         self.loc = ""
@@ -99,6 +132,8 @@ class FailState:
     def reset(self):
         self.disarm()
         self.val = 1
+        self.action = "crash"
+        self.delay_s = 0.25
         self.hits.clear()
         self.fired = 0
         self.service_stack.clear()
@@ -115,19 +150,54 @@ class FailState:
         self.fired += 1
         return True
 
+    def _delay(self):
+        if self.sim is not None:
+            self.sim.clock.advance(self.delay_s)
+
     def maybe_fail(self, site: str):
-        """Immediate site: raise at a transaction-consistent point."""
-        if self._triggered(site):
+        """Immediate site: act right here (crash raises at a
+        transaction-consistent point; drop loses the in-flight request;
+        delay stalls and continues)."""
+        if not self._triggered(site):
+            return
+        if self.action == "delay":
+            self._delay()
+        elif self.action == "drop":
+            raise FailLocDrop(site)
+        else:
             raise FailLocHit(site)
 
     def note(self, site: str):
-        """Deferred site: the crash lands at the owning target's request
-        boundary (transaction atomicity — see module docstring)."""
-        if self._triggered(site):
-            if self.service_stack:
-                self.pending[id(self.service_stack[-1])] = site
-            else:                        # no request context: fail now
-                raise FailLocHit(site)
+        """Deferred site: the crash/drop lands at the owning target's
+        request boundary (transaction atomicity — see module docstring);
+        a delay stalls immediately (it breaks no atomicity)."""
+        if not self._triggered(site):
+            return
+        if self.action == "delay":
+            self._delay()
+        elif self.service_stack:
+            self.pending[id(self.service_stack[-1])] = (site, self.action)
+        else:                            # no request context: fail now
+            raise FailLocHit(site)
+
+    def check(self, site: str) -> str | None:
+        """Self-interpreting site: returns the armed action if `site`
+        triggers (handling 'delay' in place), else None. Call sites with
+        their own drop/crash semantics (dlm.blocking_ast, osc.flush)
+        dispatch on the result."""
+        if not self._triggered(site):
+            return None
+        if self.action == "delay":
+            self._delay()
+        return self.action
+
+    def defer(self, site: str):
+        """Arm a pending crash for the innermost serving target (used by
+        check() call sites that want crash-at-request-boundary)."""
+        if self.service_stack:
+            self.pending[id(self.service_stack[-1])] = (site, "crash")
+        else:
+            raise FailLocHit(site)
 
     # ----------------------------------------------- request-boundary hooks
     def enter_service(self, owner):
@@ -138,12 +208,16 @@ class FailState:
             self.service_stack.pop()
 
     def raise_if_pending(self, owner):
-        site = self.pending.pop(id(owner), None)
-        if site is not None:
+        hit = self.pending.pop(id(owner), None)
+        if hit is not None:
+            site, action = hit
+            if action == "drop":
+                raise FailLocDrop(site)
             raise FailLocHit(site)
 
     def info(self) -> dict:
         return {"fail_loc": self.loc, "fail_val": self.val,
+                "fail_action": self.action, "fail_delay": self.delay_s,
                 "fired": self.fired, "hits": dict(self.hits)}
 
 
@@ -183,3 +257,13 @@ register_site("mds.changelog.clear",
               "changelog_clear dispatched, before bookmark/purge")
 register_site("mds.changelog.clear.applied",
               "bookmark+purge transaction applied, not yet committed")
+# DLM blocking-AST path / OSC write-back flush (ISSUE-4):
+register_site("dlm.blocking_ast",
+              "server about to send a blocking AST to a lock holder "
+              "(drop: AST lost -> holder evicted; crash: deferred to the "
+              "triggering request's boundary)")
+register_site("osc.flush",
+              "client write-back flush about to ship its BRW vectors "
+              "(client-side site: crash degrades to drop — the flush's "
+              "first RPC is lost on the wire and the import recovers by "
+              "timeout -> reconnect -> resend)")

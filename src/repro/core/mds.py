@@ -122,6 +122,13 @@ class MdsTarget(R.Target):
         # a record above it, so a multi-MDT rollback cannot retract a
         # record a consumer has already seen
         self.cluster_cut = 0
+        # cut-derivation cache: deriving the cut costs O(peers) RPCs, so
+        # the serving path re-derives at most once per `cut_staleness`
+        # virtual seconds; a local commit invalidates (new records may
+        # now enter the cut), a snapshot()/prune_history push refreshes
+        self.cut_staleness = 0.05
+        self._cut_checked_at: float | None = None
+        self.commit_callbacks.append(self._cut_cache_invalidate)
         # dependency records for the consistent cut (§6.7.6.3):
         # [(own_transno, {peer_uuid: peer_transno})]
         self.dep_log: list[tuple[int, dict]] = []
@@ -168,8 +175,47 @@ class MdsTarget(R.Target):
         imp = self.peers.get(uuid)
         if imp is None:
             imp = self.rpc.import_target(uuid, self.peer_nids[uuid], "mds")
+            # a peer evicting this import loses our replayable cross-MDT
+            # halves: cross-check the namespace halves right away
+            imp.evict_cbs.append(lambda u=uuid: self._peer_evicted(u))
             self.peers[uuid] = imp
         return imp
+
+    def _peer_evicted(self, peer_uuid: str):
+        """Our MDS-MDS import got evicted (-107): the replay queue died
+        with it, so cross-MDT halves this side already applied may now
+        dangle (entry here, inode lost over there). Run the ROADMAP'd
+        post-eviction namespace cross-check against that peer."""
+        self.sim.stats.count("mds.peer_evicted")
+        self.namespace_crosscheck(peer_uuid)
+
+    def namespace_crosscheck(self, peer_uuid: str) -> int:
+        """Verify every dirent pointing at an inode the peer owns still
+        resolves there; drop dangling entries (the state a lost replay
+        queue leaves behind). An unreachable peer proves nothing — those
+        entries are kept. Returns the number of entries dropped."""
+        dropped = 0
+        imp = self._peer(peer_uuid)
+        for ino in list(self.inodes.values()):
+            if ino.ftype != S_IFDIR:
+                continue
+            for name, fid in list(ino.entries.items()):
+                fid = tuple(fid)
+                if fid[0] == self.inode_group or fid in self.inodes:
+                    continue
+                if self._peer_for_group(fid[0]) != peer_uuid:
+                    continue
+                try:
+                    imp.request("getattr", {"fid": fid}, no_recover=True)
+                except R.RpcError as e:
+                    if e.status == -2:       # the peer half is gone
+                        ino.entries.pop(name, None)
+                        dropped += 1
+                except R.TimeoutError_:
+                    pass                     # unreachable: keep the entry
+        if dropped:
+            self.sim.stats.count("mds.crosscheck_dropped", dropped)
+        return dropped
 
     def connect_ost(self, uuid: str, nids: list[str]):
         self.osts[uuid] = self.rpc.import_target(uuid, nids, "ost")
@@ -204,6 +250,9 @@ class MdsTarget(R.Target):
                 imp._connect_cycle()       # detects reboot -> replays
             except R.TimeoutError_:
                 pass
+        # a peer reboot changes what the cut can prove: drop the cached
+        # derivation so the next gated read re-derives immediately
+        self._cut_checked_at = None
         return R.Reply()
 
     # --------------------------------------------------------------- fids
@@ -267,12 +316,14 @@ class MdsTarget(R.Target):
         states = {self.uuid: {"committed": self.committed_transno,
                               "deps": [(t, dict(d))
                                        for t, d in self.dep_log]}}
+        self._last_collect_ok = True
         for uuid in self.peer_nids:
             try:
                 states[uuid] = self._peer(uuid).request(
                     "dep_records", {}, no_recover=True).data
             except (R.RpcError, R.TimeoutError_):
                 states[uuid] = {"committed": 0, "deps": []}
+                self._last_collect_ok = False
         return states
 
     def _advance_cluster_cut(self, need: int):
@@ -293,22 +344,43 @@ class MdsTarget(R.Target):
                 except (R.RpcError, R.TimeoutError_):
                     pass
         self.cluster_cut = max(self.cluster_cut, cut)
+        # cache only a FULL round: with a peer unreachable nothing was
+        # proven — the next read must retry, not trust a stale failure
+        self._cut_checked_at = self.sim.now \
+            if getattr(self, "_last_collect_ok", True) else None
+
+    def _cut_cache_invalidate(self, committed: int | None = None):
+        self._cut_checked_at = None
+
+    def _cut_stale(self) -> bool:
+        return self._cut_checked_at is None or \
+            self.sim.now - self._cut_checked_at >= self.cut_staleness
 
     def _gate_at_cluster_cut(self, recs):
         """Serve only records at or below the CLUSTER-committed consistent
         cut (§6.7.6.3): local commit protects against single-MDT crashes,
         the cut protects against the multi-MDT rollback retracting a
         committed cross-MDT record a consumer already read. Records above
-        the cut are withheld until it advances (they stay retained)."""
+        the cut are withheld until it advances (they stay retained).
+
+        The O(peers) dep-vector round runs at most once per
+        `cut_staleness` window: a burst of gated reads pays ONE round,
+        records above the cached cut are simply withheld until the window
+        expires (or a commit/snapshot invalidates the cache)."""
         if not recs:
             return recs
-        self._cl_stabilize(recs)          # local durability first
         if not self.peer_nids:
-            return recs                   # single MDT: the commit IS the cut
+            self._cl_stabilize(recs)      # single MDT: the commit IS the cut
+            return recs
         hi = max(r.transno for r in recs)
-        if hi > self.cluster_cut:
+        if hi > self.cluster_cut and self._cut_stale():
+            if hi > self.committed_transno:
+                # our own tail must be durable before it can enter the cut
+                self.commit()
             self._advance_cluster_cut(hi)
-        return [r for r in recs if r.transno <= self.cluster_cut]
+        served = [r for r in recs if r.transno <= self.cluster_cut]
+        self._cl_stabilize(served)        # no-op: cut <= committed
+        return served
 
     def op_sync_commit(self, req: R.Request) -> R.Reply:
         """Peer-requested journal flush (a serving MDS forcing the peer
@@ -1380,6 +1452,7 @@ class MdsTarget(R.Target):
         self.transno = min(self.transno, cut)
         self.committed_transno = min(self.committed_transno, cut)
         self.cluster_cut = min(self.cluster_cut, cut)
+        self._cut_checked_at = None       # the world changed: re-derive
         return R.Reply(data={"undone": undone})
 
     def op_prune_history(self, req: R.Request) -> R.Reply:
@@ -1388,5 +1461,7 @@ class MdsTarget(R.Target):
         self.dep_log = [(t, d) for t, d in self.dep_log if t > cut]
         # the leader proved everything <= cut cluster-committed (§6.7.6.3
         # steady state): changelog serving can trust it without re-deriving
+        # — the push also refreshes the derivation cache
         self.cluster_cut = max(self.cluster_cut, cut)
+        self._cut_checked_at = self.sim.now
         return R.Reply()

@@ -193,17 +193,32 @@ class WfqPolicy(RoundRobinPolicy):
     {client_uuid: w}, "default_weight": 1.0})``.
 
     params:
-      weights        — {client uuid: weight}
-      default_weight — weight for clients without an entry (default 1.0)
+      weights        — {class: weight}; a class is a jobid or client uuid
+      default_weight — weight for classes without an entry (default 1.0)
+      by_jobid       — classify EVERY tagged request by its jobid, not
+                       just those with a weights entry (default False)
     """
 
     name = "wfq"
 
     def __init__(self, sim, weights: dict | None = None,
-                 default_weight: float = 1.0, **params):
+                 default_weight: float = 1.0, by_jobid: bool = False,
+                 **params):
         super().__init__(sim, **params)
         self.weights = {k: float(v) for k, v in (weights or {}).items()}
         self.default_weight = float(default_weight)
+        self.by_jobid = bool(by_jobid)
+
+    def classify(self, req):
+        """WFQ classes are per-JOBID when the request carries one and
+        either a weights entry names that jobid or ``by_jobid`` is set:
+        two batch jobs multiplexed over ONE client uuid get their own
+        fair shares, and one job spread over many clients drains a
+        single weighted class (mirroring the TBF jobid-rule semantics)."""
+        jobid = getattr(req, "jobid", "")
+        if jobid and (self.by_jobid or jobid in self.weights):
+            return jobid
+        return req.client_uuid
 
     def weight_for(self, key) -> float:
         return max(1e-9, self.weights.get(key, self.default_weight))
@@ -216,6 +231,7 @@ class WfqPolicy(RoundRobinPolicy):
         out = super().info()
         out["weights"] = dict(self.weights)
         out["default_weight"] = self.default_weight
+        out["by_jobid"] = self.by_jobid
         return out
 
 

@@ -13,7 +13,13 @@ an OST. It owns:
     OST_WRITE RPC) bounded by `max_pages_per_rpc`, and RPC dispatch is
     flow-controlled by `max_rpcs_in_flight`;
   * referral handling: reads bounced to a collaborative cache follow the
-    referral to the caching OST (§5.5).
+    referral to the caching OST (§5.5);
+  * a CLEAN read cache (§7.4-§7.7): extents fetched by reads (and dirty
+    extents promoted at flush) stay cached, LRU-bounded by
+    `max_cached_mb`, and are served with ZERO RPCs for as long as a
+    cached PR/PW lock covers them. Lock revocation (blocking AST),
+    cancel, and eviction invalidate the covered pages — cached data is
+    valid exactly while the lock protocol says it is.
 """
 from __future__ import annotations
 
@@ -22,11 +28,14 @@ from collections import defaultdict
 from typing import Optional
 
 from repro.core import dlm as dlm_mod
+from repro.core import fail as fail_mod
 from repro.core import ptlrpc as R
 
 PAGE_SIZE = 4096
 DEFAULT_MAX_PAGES_PER_RPC = 1024      # 4 MiB per BRW RPC
 DEFAULT_MAX_RPCS_IN_FLIGHT = 8
+DEFAULT_MAX_CACHED_MB = 64            # clean read-cache budget per OSC
+DEFAULT_READAHEAD_PAGES = 256         # 1 MiB sequential readahead window
 
 
 def _pages(nbytes: int) -> int:
@@ -46,23 +55,52 @@ class DirtyExtent:
         return self.offset + len(self.data)
 
 
+@dataclasses.dataclass
+class CleanExtent:
+    """A lock-covered cached extent of clean data (read or written-back).
+    Validity is NOT stored here: it is re-checked against the client lock
+    cache on every hit (the pages are usable exactly while a cached PR/PW
+    lock covers them)."""
+    group: int
+    oid: int
+    offset: int
+    data: bytes
+    atime: float                       # LRU clock
+
+    @property
+    def end(self) -> int:
+        return self.offset + len(self.data)
+
+
 class Osc:
     def __init__(self, rpc: R.RpcClient, target_uuid: str, nids: list[str],
                  *, writeback: bool = True,
                  max_pages_per_rpc: int = DEFAULT_MAX_PAGES_PER_RPC,
                  max_rpcs_in_flight: int = DEFAULT_MAX_RPCS_IN_FLIGHT,
-                 vectored_brw: bool = True):
+                 vectored_brw: bool = True,
+                 max_cached_mb: int = DEFAULT_MAX_CACHED_MB):
         self.rpc = rpc
         self.sim = rpc.sim
         self.uuid = target_uuid
         self.imp = rpc.import_target(target_uuid, nids, "ost")
         self.locks = dlm_mod.LockClient(rpc, self.imp, flush_cb=self._flush_lock)
+        self.locks.revoke_cbs.append(self._on_lock_revoked)
+        self.imp.evict_cbs.append(self._on_evicted)
         self.writeback = writeback
         self.max_pages_per_rpc = max(1, max_pages_per_rpc)
         self.max_rpcs_in_flight = max(1, max_rpcs_in_flight)
         self.vectored_brw = vectored_brw
         self.dirty: list[DirtyExtent] = []
         self.dirty_bytes = 0
+        # clean read cache: per-object sorted disjoint extents, global
+        # LRU byte budget (max_cached_mb)
+        self.clean: dict[tuple, list[CleanExtent]] = defaultdict(list)
+        self.clean_bytes = 0
+        self.max_cached_bytes = max(0, max_cached_mb) << 20
+        # size/mtime known-under-lock (LVB, §7.7): valid while a cached
+        # whole-object PR/PW lock is held
+        self._sizes: dict[tuple, int] = {}
+        self._mtimes: dict[tuple, float] = {}
         self.grant = 0
         self._cobd_imports: dict[str, R.Import] = {}
         self.read_cache_cb = None       # COBD hook: populate peer cache
@@ -74,12 +112,47 @@ class Osc:
     def lock(self, group, oid, mode, extent=None, gid: int = 0):
         lk, _, lvb = self.locks.enqueue(self._res(group, oid), mode,
                                         extent or dlm_mod.WHOLE, gid=gid)
+        if lk is not None and lk.covers("PR", dlm_mod.WHOLE) \
+                and "size" in lvb:
+            # whole-object PR/PW lock: the LVB size/mtime stay current
+            # (nobody else can write) modulo our own tracked writes
+            key = (group, oid)
+            self._sizes.setdefault(key, lvb["size"])
+            self._mtimes.setdefault(key, lvb.get("mtime", 0.0))
         return lk, lvb
 
     def _flush_lock(self, lk: dlm_mod.Lock):
         """Blocking AST on a PW lock: write back dirty extents under it."""
         _, group, oid = lk.res_name
         self.flush(group, oid)
+
+    def _on_lock_revoked(self, lk: dlm_mod.Lock):
+        """A lock left the cache (AST / cancel / eviction): every clean
+        page it covered is no longer protected — drop them, plus the
+        LVB-derived size (§7.4: flush AND invalidate on revocation)."""
+        if lk.res_name[0] != "ext":
+            return
+        _, group, oid = lk.res_name
+        self._invalidate_clean(group, oid, lk.extent)
+        self._sizes.pop((group, oid), None)
+        self._mtimes.pop((group, oid), None)
+
+    def _on_evicted(self):
+        """The OST evicted us (-107): locks, grant, dirty data and clean
+        pages are all void. Dirty bytes are LOST — the documented cost of
+        eviction (§7.4)."""
+        self.sim.stats.count("osc.evicted")
+        if self.dirty_bytes:
+            self.sim.stats.count("osc.evicted_dirty_lost_bytes",
+                                 self.dirty_bytes)
+        self.dirty.clear()
+        self.dirty_bytes = 0
+        self.clean.clear()
+        self.clean_bytes = 0
+        self._sizes.clear()
+        self._mtimes.clear()
+        self.grant = 0
+        self.locks.drop_all()
 
     # --------------------------------------------------------------- api
     def create(self, group: int, oid: int | None = None, **attrs) -> dict:
@@ -102,6 +175,10 @@ class Osc:
 
     def punch(self, group: int, oid: int, size: int):
         self._drop_dirty_beyond(group, oid, size)
+        self._invalidate_clean(group, oid, (size, dlm_mod.MAX_EXT))
+        key = (group, oid)
+        if key in self._sizes:
+            self._sizes[key] = min(self._sizes[key], size)
         return self.imp.request(
             "punch", {"group": group, "oid": oid, "size": size}).data
 
@@ -131,6 +208,7 @@ class Osc:
         if self.writeback and len(data) <= self.grant:
             # cached write consumes grant; flushed lazily (ch. 10.12)
             self.grant -= len(data)
+            self._note_write(group, oid, offset, len(data))
             self._cache_dirty(group, oid, offset, data)
             for lk in self.locks.by_res.get(self._res(group, oid), ()):
                 lk.dirty = True
@@ -139,6 +217,9 @@ class Osc:
         # write-through: older cached extents of this object must land
         # FIRST or a later flush would overwrite this newer data
         self.flush(group, oid)
+        # AFTER the flush: it promotes the older extents to clean pages,
+        # which this newer write supersedes
+        self._note_write(group, oid, offset, len(data))
         return self._write_through(
             DirtyExtent(group, oid, offset, bytes(data), self.sim.now))
 
@@ -159,13 +240,18 @@ class Osc:
         if self.writeback and total <= self.grant:
             self.grant -= total
             for off, d in iov:
+                self._note_write(group, oid, off, len(d))
                 self._cache_dirty(group, oid, off, d)
             for lk in self.locks.by_res.get(self._res(group, oid), ()):
                 lk.dirty = True
             self.sim.stats.count("osc.cached_write", len(iov))
             return {"cached": True}
-        # write-through (see write()): flush older cached data first
+        # write-through (see write()): flush older cached data first —
+        # the flush promotes them to clean, which these newer runs
+        # supersede (_note_write after it)
         self.flush(group, oid)
+        for off, d in iov:
+            self._note_write(group, oid, off, len(d))
         now = self.sim.now
         exts = [DirtyExtent(group, oid, off, bytes(d), now) for off, d in iov]
         if not self.vectored_brw:
@@ -206,6 +292,104 @@ class Osc:
             self.sim.stats.count("osc.extents_coalesced", len(touch))
         self.dirty.append(merged)
         self.dirty_bytes += len(merged.data)
+
+    # ------------------------------------------------------- clean cache
+    def _note_write(self, group: int, oid: int, offset: int, nbytes: int):
+        """A write supersedes any clean pages it overlaps and grows the
+        lock-cached size."""
+        if nbytes <= 0:
+            return
+        self._invalidate_clean(group, oid, (offset, offset + nbytes))
+        key = (group, oid)
+        if key in self._sizes:
+            self._sizes[key] = max(self._sizes[key], offset + nbytes)
+            self._mtimes[key] = max(self._mtimes.get(key, 0.0),
+                                    self.sim.now)
+
+    def _clean_insert(self, group: int, oid: int, offset: int,
+                      data: bytes):
+        """Cache a clean extent, coalescing with overlapping/adjacent
+        cached extents (new data wins), then enforce the LRU byte budget."""
+        if not data or not self.max_cached_bytes:
+            return
+        key = (group, oid)
+        end = offset + len(data)
+        exts = self.clean[key]
+        touch = [e for e in exts if e.offset <= end and offset <= e.end]
+        if not touch:
+            merged = CleanExtent(group, oid, offset, bytes(data),
+                                 self.sim.now)
+        else:
+            lo = min(offset, min(e.offset for e in touch))
+            hi = max(end, max(e.end for e in touch))
+            buf = bytearray(hi - lo)
+            for e in touch:
+                buf[e.offset - lo:e.end - lo] = e.data
+                exts.remove(e)
+                self.clean_bytes -= len(e.data)
+            buf[offset - lo:end - lo] = data
+            merged = CleanExtent(group, oid, lo, bytes(buf), self.sim.now)
+        exts.append(merged)
+        exts.sort(key=lambda e: e.offset)
+        self.clean_bytes += len(merged.data)
+        self._clean_shrink()
+
+    def _clean_shrink(self):
+        """LRU-evict whole extents until the cache fits max_cached_mb."""
+        while self.clean_bytes > self.max_cached_bytes:
+            victim = min((e for exts in self.clean.values() for e in exts),
+                         key=lambda e: e.atime)
+            vkey = (victim.group, victim.oid)
+            self.clean[vkey].remove(victim)
+            if not self.clean[vkey]:
+                del self.clean[vkey]
+            self.clean_bytes -= len(victim.data)
+            self.sim.stats.count("osc.cache_lru_evict")
+
+    def _clean_read(self, group: int, oid: int, offset: int,
+                    length: int) -> bytes | None:
+        """Serve from the clean cache iff a cached PR/PW lock covers the
+        extent (the §7.4 validity rule) — zero RPCs on a hit."""
+        exts = self.clean.get((group, oid))
+        if not exts:
+            return None
+        end = offset + length
+        for e in exts:
+            if e.offset <= offset and end <= e.end:
+                if self.locks.match(self._res(group, oid), "PR",
+                                    (offset, end)) is None:
+                    # no covering lock: the pages are unprotected — a
+                    # revocation should already have dropped them, but
+                    # never serve unguarded data (count + drop)
+                    self.sim.stats.count("osc.cache_uncovered")
+                    self._invalidate_clean(group, oid, (e.offset, e.end))
+                    return None
+                e.atime = self.sim.now
+                self.sim.stats.count("osc.cache_hit")
+                self.sim.stats.count("osc.cache_hit_bytes", length)
+                o = offset - e.offset
+                return e.data[o:o + length]
+        return None
+
+    def _invalidate_clean(self, group: int, oid: int,
+                          extent: tuple | None = None):
+        """Drop clean pages overlapping `extent` (None = whole object)."""
+        key = (group, oid)
+        exts = self.clean.get(key)
+        if not exts:
+            return
+        lo, hi = extent if extent is not None else (0, dlm_mod.MAX_EXT)
+        keep = []
+        for e in exts:
+            if e.offset < hi and lo < e.end:
+                self.clean_bytes -= len(e.data)
+                self.sim.stats.count("osc.cache_invalidate")
+            else:
+                keep.append(e)
+        if keep:
+            self.clean[key] = keep
+        else:
+            self.clean.pop(key, None)
 
     # ------------------------------------------------------- BRW engine
     def _pack(self, items: list, nbytes_of) -> list[list]:
@@ -251,9 +435,18 @@ class Osc:
                                   for d in vec],
                       "mtime": max(d.mtime for d in vec)})
         self.grant = rep.data.get("grant", self.grant)
+        self._note_written_size(group, oid, rep.data)
         self.sim.stats.count("osc.brw_write_rpc")
         self.sim.stats.count("osc.brw_write_niobufs", len(vec))
         return rep.data
+
+    def _note_written_size(self, group: int, oid: int, rep_data: dict):
+        """Write replies carry the post-write object size: keep the
+        lock-cached size current so getattr_locked stays RPC-free."""
+        key = (group, oid)
+        if key in self._sizes and isinstance(rep_data, dict) \
+                and "size" in rep_data:
+            self._sizes[key] = max(self._sizes[key], rep_data["size"])
 
     def _send_vectors(self, rpcs: list[tuple]) -> list:
         """Dispatch BRW RPCs with at most max_rpcs_in_flight concurrent."""
@@ -273,15 +466,26 @@ class Osc:
             "write", {"group": d.group, "oid": d.oid, "offset": d.offset,
                       "data": d.data, "mtime": d.mtime})
         self.grant = rep.data.get("grant", self.grant)
+        self._note_written_size(d.group, d.oid, rep.data)
         return rep.data
 
     def flush(self, group=None, oid=None):
         """Write back dirty extents (all, or one object's), coalesced into
-        vectored BRW RPCs under in-flight flow control."""
+        vectored BRW RPCs under in-flight flow control. Flushed pages are
+        not thrown away: they stay cached as CLEAN extents, still covered
+        by the PW lock the write took."""
         todo = [d for d in self.dirty
                 if group is None or (d.group, d.oid) == (group, oid)]
         if not todo:
             return 0
+        act = fail_mod.state.check("osc.flush")
+        if act == "delay":
+            pass                       # check() already stalled the clock
+        elif act in ("drop", "crash"):
+            # client-side site: the flush's first BRW RPC is lost on the
+            # wire (OBD_FAIL_*_NET); the import recovers via timeout ->
+            # reconnect -> resend, so the flush still completes
+            self.sim.faults.drop_next[self.imp.active_nid] += 1
         if self.vectored_brw:
             self._send_vectors(self._build_vectors(todo))
         else:
@@ -292,6 +496,7 @@ class Osc:
         for d in todo:
             self.dirty.remove(d)
             self.dirty_bytes -= len(d.data)
+            self._clean_insert(d.group, d.oid, d.offset, d.data)
         return len(todo)
 
     def _drop_dirty_beyond(self, group, oid, size):
@@ -315,6 +520,11 @@ class Osc:
         hit = self._cached_read(group, oid, offset, length)
         if hit is not None:
             return hit
+        # then from the clean cache, if a cached lock still covers it
+        hit = self._clean_read(group, oid, offset, length)
+        if hit is not None:
+            return hit
+        self.sim.stats.count("osc.cache_miss")
         self.flush(group, oid)             # partial overlap: write back first
         if lock:
             self.lock(group, oid, "PR", (offset, offset + length))
@@ -326,8 +536,13 @@ class Osc:
         if rep.data and "referral" in (rep.data or {}):
             ref = rep.data["referral"]
             self.sim.stats.count("osc.followed_referral")
-            return self._read_via(ref, group, oid, offset, length)
-        return rep.bulk
+            data = self._read_via(ref, group, oid, offset, length)
+        else:
+            data = rep.bulk
+        if self.locks.match(self._res(group, oid), "PR",
+                            (offset, offset + len(data or b""))):
+            self._clean_insert(group, oid, offset, data)
+        return data
 
     def readv(self, group: int, oid: int, iov: list,
               *, lock: bool = True) -> list[bytes]:
@@ -345,16 +560,19 @@ class Osc:
         miss: list[tuple[int, int, int]] = []      # (iov_idx, offset, length)
         for i, (off, ln) in enumerate(iov):
             hit = self._cached_read(group, oid, off, ln)
+            if hit is None:
+                hit = self._clean_read(group, oid, off, ln)
             if hit is not None:
                 out[i] = hit
             else:
+                self.sim.stats.count("osc.cache_miss")
                 miss.append((i, off, ln))
         if not miss:
             return out                       # fully served from cache
         self.flush(group, oid)               # partial overlap: write back
+        span = (min(off for _, off, _ in miss),
+                max(off + ln for _, off, ln in miss))
         if lock:
-            span = (min(off for _, off, _ in miss),
-                    max(off + ln for _, off, ln in miss))
             self.lock(group, oid, "PR", span)
         # pack misses into vectors bounded by max_pages_per_rpc
         batches = self._pack(sorted(miss, key=lambda m: m[1]),
@@ -373,14 +591,43 @@ class Osc:
                         for _, off, ln in batch]
             self.sim.stats.count("osc.brw_read_rpc")
             return rep.bulk
+        covered = bool(lock) or self.locks.match(
+            self._res(group, oid), "PR", span) is not None
         for i in range(0, len(batches), self.max_rpcs_in_flight):
             window = batches[i:i + self.max_rpcs_in_flight]
             chunk_lists = self.sim.parallel(
                 [(lambda b=b: one(b)) for b in window])
             for batch, chunks in zip(window, chunk_lists):
-                for (idx, _, _), chunk in zip(batch, chunks):
+                for (idx, off, _), chunk in zip(batch, chunks):
                     out[idx] = chunk
+                    if covered:
+                        self._clean_insert(group, oid, off, chunk)
         return out
+
+    def getattr_locked(self, group: int, oid: int) -> dict:
+        """size/mtime under a PR lock (the §6.2.3 ordering: enqueueing
+        revokes writers' PW locks so their caches flush first). While a
+        cached whole-object PR/PW lock is held nobody else can change the
+        object, so the grant-time LVB (§7.7) plus our own tracked writes
+        IS the current size — zero RPCs on the warm path."""
+        key = (group, oid)
+        if key not in self._sizes or self.locks.match(
+                self._res(group, oid), "PR", dlm_mod.WHOLE) is None:
+            lk, lvb = self.lock(group, oid, "PR")
+            if not (lk is not None and lk.covers("PR", dlm_mod.WHOLE)
+                    and key in self._sizes):
+                # contended object (lock not grown to whole): fall back
+                a = self.getattr(group, oid)
+                return {"size": a["size"], "mtime": a["mtime"]}
+        else:
+            self.sim.stats.count("osc.getattr_cached")
+        size = self._sizes[key]
+        mtime = self._mtimes.get(key, 0.0)
+        for d in self.dirty:
+            if (d.group, d.oid) == key:
+                size = max(size, d.end)
+                mtime = max(mtime, d.mtime)
+        return {"size": size, "mtime": mtime}
 
     def _read_via(self, ref: dict, group, oid, offset, length) -> bytes:
         imp = self._cobd_imports.get(ref["uuid"])

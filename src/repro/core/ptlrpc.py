@@ -67,6 +67,8 @@ LDLM_REQUEST_PORTAL = 17
 LDLM_REPLY_PORTAL = 18
 PING_PORTAL = 23
 
+PAGE_SIZE = 4096               # BRW page granularity (cost model + OSC)
+
 REQUEST_PORTALS = {"ost": OST_REQUEST_PORTAL, "mds": MDS_REQUEST_PORTAL,
                    "ldlm": LDLM_REQUEST_PORTAL, "ping": PING_PORTAL,
                    "ldlm_cb": LDLM_CB_REQUEST_PORTAL}
@@ -168,12 +170,13 @@ class Service:
     """
 
     def __init__(self, target: "Target", policy: str = "fifo",
-                 cpu_cost: float = 5e-6, niobuf_cost: float = 1e-6,
-                 **params):
+                 cpu_cost: float = 5e-6, seek_cost: float = 4e-5,
+                 page_cost: float = 5e-7, **params):
         self.target = target
         self.sim = target.sim
         self.cpu_cost = cpu_cost
-        self.niobuf_cost = niobuf_cost
+        self.seek_cost = seek_cost     # per discontiguous niobuf run
+        self.page_cost = page_cost     # per 4 KiB page transferred
         self.policy: nrs_mod.NrsPolicy = nrs_mod.make_policy(
             policy, self.sim, **params)
 
@@ -183,10 +186,37 @@ class Service:
         self.policy = nrs_mod.make_policy(name, self.sim, **params)
         return self.policy
 
+    @staticmethod
+    def _nio_len(n: dict) -> int:
+        d = n.get("data")
+        return len(d) if d is not None else n.get("length", 0)
+
     def request_cost(self, req: Request) -> float:
+        """Seek-aware scatter/gather service cost (§4.5.6): a *contiguous*
+        run of niobufs is one disk seek plus per-page transfer, every
+        discontiguity charges another seek — so NRS scheduling (and the
+        benchmarks) see a scattered vector's true weight, not a flat
+        per-niobuf constant."""
         nio = req.body.get("niobufs")
-        n = len(nio) if isinstance(nio, (list, tuple)) else 1
-        return self.cpu_cost + self.niobuf_cost * n
+        if not isinstance(nio, (list, tuple)) or not nio:
+            if "data" in req.body or "length" in req.body:
+                # legacy single-extent BRW: one run
+                ln = self._nio_len(req.body)
+                pages = max(1, (ln + PAGE_SIZE - 1) // PAGE_SIZE)
+                return self.cpu_cost + self.seek_cost + \
+                    self.page_cost * pages
+            return self.cpu_cost
+        runs, pages, prev_end = 0, 0, None
+        for n in sorted(nio, key=lambda n: n.get("offset", 0)):
+            ln = self._nio_len(n)
+            pages += max(1, (ln + PAGE_SIZE - 1) // PAGE_SIZE)
+            off = n.get("offset", 0)
+            if prev_end is None or off != prev_end:
+                runs += 1              # discontiguity: the head seeks
+            prev_end = off + ln
+        self.sim.stats.count("nrs.seeks", runs)
+        return self.cpu_cost + self.seek_cost * runs + \
+            self.page_cost * pages
 
     def process(self, req: Request, arrival: float) -> Reply:
         cost = self.request_cost(req)
@@ -419,6 +449,12 @@ class Node:
                 reply = target.service.process(req, ev.arrival_time)
                 fail.maybe_fail(f"ptlrpc.{target.svc_kind}.before_reply")
                 fail.raise_if_pending(target)
+            except fail_mod.FailLocDrop:
+                # OBD_FAIL_*_NET-style action: the in-flight request is
+                # lost on the wire — target stays up, no reply goes out,
+                # the client recovers via timeout -> resend
+                self.sim.stats.count("fail.drop")
+                return
             except fail_mod.FailLocHit:
                 # the armed OBD_FAIL site powers the serving target off at
                 # this exact point: uncommitted state dies through the
@@ -491,6 +527,11 @@ class Import:
         self.max_reconnects = 8
         self.generation = 0
         self.connect_data: dict = {}
+        # eviction observers: upper layers (OSC page cache, LockClient,
+        # dentry cache, MDS peer cross-check) register here — after a
+        # -107 every piece of state the server granted this import is
+        # void and MUST be dropped, not just the replay queue
+        self.evict_cbs: list[Callable[[], None]] = []
 
     # ------------------------------------------------------------ wiring
     @property
@@ -559,6 +600,11 @@ class Import:
                 self.server_boot_count = 0
                 self._connect_cycle()
                 req.conn_generation = self.generation
+                # server-granted state died with the export: locks, dirty
+                # extents, clean pages, dentries — observers drop it all
+                # (and the MDS peer cross-check repairs namespace halves)
+                for cb in list(self.evict_cbs):
+                    cb()
                 continue
             self._note_reply(req, reply)
             if reply.status:

@@ -101,6 +101,7 @@ class Simulator:
         from repro.core import fail as fail_mod
         self.fail = fail_mod.state
         self.fail.reset()
+        self.fail.sim = self       # 'delay' actions advance this clock
 
     @property
     def now(self) -> float:

@@ -24,6 +24,7 @@ from typing import Optional
 
 from repro.core import lov as lov_mod
 from repro.core import mdc as mdc_mod
+from repro.core import osc as osc_mod
 from repro.core import mds as mds_mod
 from repro.core import ptlrpc as R
 from repro.core.cluster import LustreCluster
@@ -46,6 +47,10 @@ class FileHandle:
     pos: int = 0
     max_written: int = 0
     mtime: float = 0.0
+    # per-handle sequential-read detector state (readahead):
+    ra_next: int = 0           # offset the next sequential read starts at
+    ra_window: int = 0         # current readahead window (bytes, ramps up)
+    ra_pos: int = 0            # how far readahead has already fetched
 
 
 @dataclasses.dataclass
@@ -61,17 +66,28 @@ class LustreClient:
                  default_stripe_size: int = 1 << 20,
                  max_pages_per_rpc: int | None = None,
                  max_rpcs_in_flight: int | None = None,
-                 vectored_brw: bool | None = None):
+                 vectored_brw: bool | None = None,
+                 max_cached_mb: int | None = None,
+                 readahead_pages: int | None = None):
         self.cluster = cluster
         self.rpc = cluster.make_client_rpc(node_idx)
         self.lmv = cluster.make_lmv(self.rpc)
-        # BRW pipeline knobs: per-client override of the cluster defaults
+        # BRW pipeline + read cache knobs: per-client override of the
+        # cluster defaults
         osc_kw = {k: v for k, v in (
             ("max_pages_per_rpc", max_pages_per_rpc),
             ("max_rpcs_in_flight", max_rpcs_in_flight),
-            ("vectored_brw", vectored_brw)) if v is not None}
+            ("vectored_brw", vectored_brw),
+            ("max_cached_mb", max_cached_mb)) if v is not None}
         self.lov = cluster.make_lov(self.rpc, **osc_kw)
+        self.readahead_pages = cluster.readahead_pages \
+            if readahead_pages is None else readahead_pages
         self.sim = cluster.sim
+        # eviction by an MDS voids every lock that guards the dentry
+        # cache: drop the locks (local-only) and the dentries with them
+        for mdc in self.lmv.mdcs:
+            mdc.imp.evict_cbs.append(
+                lambda m=mdc: self._on_mds_evicted(m))
         self.default_stripe_count = default_stripe_count or len(
             cluster.ost_targets)
         self.default_stripe_size = default_stripe_size
@@ -153,6 +169,13 @@ class LustreClient:
     def _invalidate(self, parent: tuple, name: str):
         self.dcache.pop((tuple(parent), name), None)
 
+    def _on_mds_evicted(self, mdc):
+        """The MDS evicted us: the PR locks guarding cached dentries are
+        gone server-side — drop them locally and purge the dcache."""
+        self.sim.stats.count("fs.evicted_invalidate")
+        mdc.locks.drop_all()
+        self.dcache.clear()
+
     # ------------------------------------------------------------- files
     def creat(self, path: str, *, stripe_count: int = 0,
               stripe_size: int = 0, stripe_offset: int = -1,
@@ -209,15 +232,52 @@ class LustreClient:
             raise FsError(-22, "no stripe md")
         off = fh.pos if offset is None else offset
         # PR-locked size query: flushes any writer's write-back cache
-        # before we trust the OST sizes (§6.2.3 ordering)
+        # before we trust the OST sizes (§6.2.3 ordering); served from
+        # the cached locks' value blocks when warm (zero RPCs)
         size = self.lov.getattr_locked(fh.lsm)["size"]
         length = max(0, min(length, size - off))
         if length == 0:
             return b""
         out = self.lov.read(fh.lsm, off, length)
+        self._maybe_readahead(fh, off, len(out), size)
         fh.pos = off + len(out)
         self.sim.stats.add_bytes("fs.read", len(out))
         return out
+
+    def _maybe_readahead(self, fh: FileHandle, off: int, nread: int,
+                         size: int):
+        """Per-handle sequential-read detector: a read starting exactly
+        where the last one ended (or at 0 on a fresh handle) extends a
+        readahead window that ramps up to `readahead_pages`, fetched
+        stripe-aware into the OSC clean caches (one vectored OST_READ per
+        stripe object). A seek resets the window."""
+        ra_max = self.readahead_pages * osc_mod.PAGE_SIZE
+        if ra_max <= 0:
+            return
+        if off != fh.ra_next:
+            # seek: not sequential — back off, and forget the old fetch
+            # horizon (a stale ra_pos ahead of a backward seek would
+            # suppress refills for the whole re-scanned range; refetching
+            # still-cached runs costs zero RPCs, readv skips them)
+            fh.ra_window = 0
+            fh.ra_pos = off + nread
+            fh.ra_next = off + nread
+            return
+        fh.ra_next = off + nread
+        fh.ra_window = min(ra_max, max(fh.ra_window * 2, ra_max // 4, 1))
+        # hysteresis: refill only when less than half a window is still
+        # ahead of the reader, and then fetch a FULL window — large
+        # batched fetches, not a per-read top-up RPC
+        ahead = fh.ra_pos - (off + nread)
+        if ahead >= fh.ra_window // 2:
+            return
+        start = max(off + nread, fh.ra_pos)
+        end = min(off + nread + fh.ra_window, size)
+        if end > start:
+            self.lov.readahead(fh.lsm, start, end - start)
+            fh.ra_pos = end
+            self.sim.stats.count("fs.readahead")
+            self.sim.stats.add_bytes("fs.readahead", end - start)
 
     def fsync(self, fh: FileHandle):
         if fh.lsm is not None:

@@ -86,6 +86,11 @@ def test_no_parity_fails_on_lost_stripe():
     victim = ea["objects"][0]
     tgt = next(x for x in c.ost_targets if x.uuid == victim["ost"])
     tgt.obd.objects.pop((victim["group"], victim["oid"]))
+    # the writers' lock-covered clean caches would (correctly!) mask the
+    # lost object — drop the locks so the restore reads cold
+    for fs_ in w:
+        for osc in fs_.lov.oscs:
+            osc.locks.cancel_all()
     with pytest.raises(Exception):
         cm.restore(2)
 

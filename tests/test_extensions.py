@@ -21,7 +21,8 @@ REPO = os.path.join(os.path.dirname(__file__), "..")
 def test_hedged_read_beats_slow_mirror():
     c = LustreCluster(osts=2, mdses=1, clients=1, commit_interval=16)
     rpc = c.make_client_rpc(0)
-    a, b = c.make_oscs(rpc, writeback=False)
+    # cache off: this test measures WIRE latency of the straggler mirror
+    a, b = c.make_oscs(rpc, writeback=False, max_cached_mb=0)
     r = lov_mod.Raid1(a, b)
     oid = r.create()
     r.write(oid, 0, bytes(1 << 16) * 16)            # 1 MiB mirrored

@@ -209,6 +209,72 @@ def test_wfq_fairness_end_to_end():
         pe[heavy.rpc.uuid]["queue_wait_s"]
 
 
+def test_wfq_jobid_classes_two_jobs_one_client():
+    """ISSUE-4 satellite: WFQ classes are per-JOBID — two batch jobs
+    multiplexed over ONE client uuid get their own weighted fair shares
+    (previously they shared one per-uuid chain)."""
+    pol = N.make_policy("wfq", None, weights={"big-job": 3.0,
+                                              "small-job": 1.0})
+    big = R.Request(opcode="write", body={"oid": 1}, client_uuid="c0",
+                    jobid="big-job")
+    small = R.Request(opcode="write", body={"oid": 2}, client_uuid="c0",
+                      jobid="small-job")
+    b_starts, s_starts = [], []
+    for _ in range(12):                   # interleaved: both classes active
+        b_starts.append(pol.schedule(big, 0.0, 1e-3))
+        s_starts.append(pol.schedule(small, 0.0, 1e-3))
+    # steady state: spacing is cost * total_weight / own_weight per class
+    b_gap = b_starts[6] - b_starts[5]
+    s_gap = s_starts[6] - s_starts[5]
+    assert abs(b_gap * 3 - s_gap) < 1e-9, (b_gap, s_gap)
+    info = pol.info()
+    assert info["per_jobid"] == {"big-job": 12, "small-job": 12}
+    # untagged requests still class by client uuid
+    plain = R.Request(opcode="write", body={"oid": 3}, client_uuid="c9")
+    assert pol.schedule(plain, 0.0, 1e-3) == 0.0   # own fresh chain
+
+
+def test_wfq_jobid_fairness_end_to_end():
+    """Two jobs sharing ONE client uuid, installed via the lctl knob:
+    the weight-4 job's requests are scheduled ~4x as densely as the
+    weight-1 job's (their fair-queue chains advance 1:4), which per-uuid
+    WFQ could not do — both jobs would share a single chain."""
+    c = mk()
+    c.ost_targets[0].service.cpu_cost = 2e-3
+    osc = osc_for(c, 0)
+    c.lctl("nrs", "OST0000", "wfq",
+           {"weights": {"gold-job": 4.0, "lead-job": 1.0}})
+    g_oid = osc.create(0)["oid"]
+    l_oid = osc.create(0)["oid"]
+
+    def one(job, oid, i):
+        osc.rpc.jobid = job
+        osc.write(0, oid, i * 8, b"j" * 8)
+    thunks = []
+    for i in range(12):                    # interleaved: both classes active
+        thunks.append(lambda i=i: one("gold-job", g_oid, i))
+        thunks.append(lambda i=i: one("lead-job", l_oid, i))
+    c.sim.parallel(thunks)
+    pol = c.ost_targets[0].service.policy
+    # equal work, 4:1 weights -> the light job's chain stretched ~4x as far
+    assert pol.chains["lead-job"] > 2.5 * pol.chains["gold-job"], pol.chains
+    info = pol.info()
+    assert info["per_jobid"]["gold-job"] >= 12
+    assert info["per_jobid"]["lead-job"] >= 12
+    assert info["by_jobid"] is False
+
+
+def test_wfq_by_jobid_flag_classifies_all_tagged():
+    pol = N.make_policy("wfq", None, by_jobid=True)
+    a = R.Request(opcode="write", body={"oid": 1}, client_uuid="c0",
+                  jobid="jA")
+    b = R.Request(opcode="write", body={"oid": 2}, client_uuid="c0",
+                  jobid="jB")
+    pol.schedule(a, 0.0, 1e-3)
+    assert pol.schedule(b, 0.0, 1e-3) == 0.0   # own chain despite same uuid
+    assert pol.info()["by_jobid"] is True
+
+
 def test_wfq_control_ops_not_queued():
     pol = N.make_policy("wfq", None, weights={"c": 0.001})
     busy = R.Request(opcode="write", body={"oid": 1}, client_uuid="c")

@@ -231,12 +231,20 @@ def test_changelog_replay_not_duplicated_by_resend():
 
 def _sweep_workload(fs):
     """Mixed metadata + data workload spanning both MDTs and both OSTs:
-    every registered failpoint site is reachable from here."""
+    every registered failpoint site is reachable from here (the
+    cross-client read drives OST extent ASTs + read-cache invalidation
+    through every crash point too)."""
     fs.mkdir("/d1")                              # remote mkdir -> MDS1
     fs.mkdir("/d2")
     fh = fs.creat("/d1/f", stripe_count=2)
     for i in range(4):
         fs.write(fh, b"x" * 64, offset=i * 64)
+    # a second client reads while the writer's cache is dirty: blocking
+    # AST -> flush -> clean-cache promotion/invalidation under crashes
+    fs2 = LustreClient(fs.cluster, 1).mount()
+    fh2 = fs2.open("/d1/f")
+    assert fs2.read(fh2, 256, offset=0) == b"x" * 256
+    fs2.close(fh2)
     fs.close(fh)
     fh = fs.creat("/top")
     fs.close(fh)
@@ -258,7 +266,7 @@ def test_crash_point_sweep(site):
     machinery heal the cluster, and prove (a) the audit mirror still
     matches readdir/stat ground truth and (b) every changelog record
     was delivered exactly once."""
-    c = LustreCluster(osts=2, mdses=2, clients=1, commit_interval=3)
+    c = LustreCluster(osts=2, mdses=2, clients=2, commit_interval=3)
     fs = LustreClient(c).mount()
     aud = ChangelogAuditor(fs)
     c.lctl("set_param", "fail_loc", site)        # arm (fires once)
@@ -394,6 +402,158 @@ def test_steady_state_snapshot_advances_serving_cut():
     for t in c.mds_targets:
         assert t.cluster_cut == cut[t.uuid]
     assert c.procfs()["targets"]["MDS0000"]["cluster_cut"] == cut["MDS0000"]
+
+
+# ------------------------------------ OBD_FAIL drop / delay actions
+
+def test_fail_action_drop_blocking_ast_evicts_holder():
+    """Armed with action=drop, the dlm.blocking_ast site loses the AST on
+    the wire: the holder never answers and is evicted (§7.4) — and its
+    next RPC triggers the full client-side eviction cleanup."""
+    c = LustreCluster(osts=1, mdses=1, clients=2, commit_interval=8)
+    a = c.make_oscs(c.make_client_rpc(0))[0]
+    b = c.make_oscs(c.make_client_rpc(1), writeback=False)[0]
+    oid = a.create(0)["oid"]
+    a.write(0, oid, 0, b"dirty-doomed")        # cached under a's PW lock
+    c.lctl("set_param", "fail_loc", "dlm.blocking_ast", 1, "drop")
+    b.write(0, oid, 0, b"winner-data!")        # AST lost -> a evicted
+    assert c.sim.fail.fired == 1
+    assert c.stats.counters["dlm.evictions"] == 1
+    assert b.read(0, oid, 0, 12) == b"winner-data!"
+    # a comes back: -107 -> reconnect, and ALL its stale state is gone
+    assert a.statfs()["capacity"] > 0
+    assert a.dirty_bytes == 0 and not a.locks.locks
+    assert a.read(0, oid, 0, 12) == b"winner-data!"   # never stale
+
+
+def test_fail_action_delay_stalls_site():
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=8)
+    osc = c.make_oscs(c.make_client_rpc(0))[0]
+    oid = osc.create(0)["oid"]
+    osc.write(0, oid, 0, b"slowpoke")
+    c.lctl("set_param", "fail_delay", 0.5)
+    c.lctl("set_param", "fail_loc", "osc.flush", 1, "delay")
+    t0 = c.now
+    osc.flush()
+    assert c.now - t0 >= 0.5                   # the flush stalled
+    assert c.sim.fail.fired == 1
+    assert c.ost_targets[0].obd.read(0, oid, 0, 8) == b"slowpoke"
+
+
+def test_fail_action_drop_osc_flush_recovers_via_resend():
+    """action=drop on osc.flush loses the flush's first BRW RPC on the
+    wire; the import times out, reconnects, resends — no data lost."""
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=8)
+    osc = c.make_oscs(c.make_client_rpc(0))[0]
+    oid = osc.create(0)["oid"]
+    osc.write(0, oid, 0, b"must-arrive")
+    c.lctl("set_param", "fail_loc", "osc.flush", 1, "drop")
+    osc.flush()
+    assert c.sim.fail.fired == 1
+    assert c.stats.counters["rpc.timeout"] >= 1
+    assert c.ost_targets[0].obd.read(0, oid, 0, 11) == b"must-arrive"
+
+
+def test_fail_action_drop_server_site_resends_from_reply_cache():
+    """A server-side site armed with drop behaves like OBD_FAIL_*_NET:
+    the reply is lost, the target stays up, and the resend is answered
+    from the reply cache — the op executes exactly once."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    user = fs.changelog_register()
+    c.lctl("set_param", "fail_loc", "ptlrpc.mds.before_reply", 1, "drop")
+    fs.mkdir("/dropped-reply")
+    assert c.sim.fail.fired == 1
+    assert c.stats.counters["fail.drop"] == 1
+    assert c.stats.counters["rpc.timeout"] >= 1
+    recs = [r for r in fs.changelog_read(user) if r["name"] == "dropped-reply"]
+    assert len(recs) == 1                      # executed exactly once
+    assert fs.stat("/dropped-reply")["type"] == "dir"
+
+
+def test_fail_action_validated():
+    c = LustreCluster(osts=1, mdses=1, clients=1)
+    with pytest.raises(ValueError):
+        c.lctl("set_param", "fail_action", "explode")
+    with pytest.raises(ValueError):
+        c.lctl("set_param", "fail_loc", "osc.flush", 1, "explode")
+
+
+# -------------------------------- post-eviction namespace cross-check
+
+def test_peer_eviction_crosschecks_namespace_halves():
+    """ISSUE-4 satellite (ROADMAP): an MDS whose peer import is evicted
+    loses its replayable cross-MDT halves — the cross-check drops the
+    dangling dirents instead of leaving entries that resolve nowhere."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=10_000)
+    fs = LustreClient(c).mount()
+    mds0, mds1 = c.mds_targets
+    fs.mkdir("/survivor")                      # inode on MDS1, entry on MDS0
+    mds0.commit()
+    mds1.commit()                              # survivor fully durable
+    fs.mkdir("/dangling")                      # inode half NOT committed
+    assert fs.resolve("/dangling")[0] == 1
+    assert fs.resolve("/survivor")[0] == 1
+    mds0.commit()                              # the ENTRY half is durable
+    # mds1 dies losing the uncommitted inode half, and evicts mds0's
+    # import while down (recovery window expiry stand-in)
+    c.fail_node("mds1")
+    c.restart_node("mds1")
+    mds1.evicted.add(mds0.rpc.uuid)
+    mds1.recovering = False
+    # mds0's next cross-MDT op hits -107: replay queue dies, cross-check
+    # runs and drops the dangling entry
+    fs.mkdir("/fresh")                         # round-robins onto MDS1
+    assert c.stats.counters["rpc.evicted_reconnect"] >= 1
+    assert c.stats.counters["mds.peer_evicted"] >= 1
+    assert c.stats.counters["mds.crosscheck_dropped"] >= 1
+    names = fs.readdir("/")
+    assert "dangling" not in names             # no entry resolving nowhere
+    assert "survivor" in names
+    for name in names:
+        fs.stat("/" + name)                    # everything left resolves
+
+
+# ------------------------------------- consistent-cut staleness window
+
+def test_cut_derivation_cached_behind_staleness_window():
+    """ISSUE-4 satellite: a gated-read burst pays ONE dep-vector round;
+    within the staleness window new records are withheld rather than
+    re-deriving per read; after the window (or a snapshot push) they
+    serve."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=10_000)
+    fs = LustreClient(c).mount()
+    mds0 = c.mds_targets[0]
+    user = fs.changelog_register(mdt=0)
+    fs.mkdir("/warm")                          # cross-MDT halves + dep vector
+    assert [r["name"] for r in fs.changelog_read(user)] == ["warm"]
+    rounds0 = c.stats.counters.get("rpc.mds.dep_records", 0)
+    # burst: new records keep arriving, reads keep coming — ONE window,
+    # ONE derivation round at most
+    for i in range(6):
+        fs.mkdir(f"/burst{i}")
+        fs.changelog_read(user)
+    rounds = c.stats.counters.get("rpc.mds.dep_records", 0) - rounds0
+    assert rounds <= 1, rounds                 # one dep-vector round
+    # window expires -> the next read re-derives and serves everything
+    c.sim.clock.advance(mds0.cut_staleness)
+    names = {r["name"] for r in fs.changelog_read(user)}
+    assert {f"burst{i}" for i in range(6)} <= names
+
+
+def test_snapshot_push_refreshes_cut_cache():
+    """A snapshot() push is fresh knowledge: gated reads trust it without
+    re-deriving (zero extra dep-vector rounds)."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=10_000)
+    fs = LustreClient(c).mount()
+    user = fs.changelog_register(mdt=0)
+    fs.mkdir("/pushed")
+    for t in c.mds_targets:
+        t.commit()
+    c.mds_recovery(fs.rpc).snapshot()          # leader pushes the cut
+    rounds0 = c.stats.counters.get("rpc.mds.dep_records", 0)
+    assert [r["name"] for r in fs.changelog_read(user)] == ["pushed"]
+    assert c.stats.counters.get("rpc.mds.dep_records", 0) == rounds0
 
 
 def test_gateway_failover_with_lctl():
