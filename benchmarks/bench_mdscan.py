@@ -1,0 +1,139 @@
+"""Metadata-scan RPC trajectory: readdir-plus + attr cache + statahead +
+batched glimpse (ISSUE-5).
+
+Workload: a builder client populates a 1024-entry striped directory; a
+COLD second client then runs an `ls -l`-shaped scan (readdir + full
+attrs for every entry). Modes:
+
+  * per_entry    — dir_pages=0, statahead off: one lookup RPC per name
+    (the seed shape; PR 4's data-path wins don't help metadata);
+  * statahead    — dir_pages=0, statahead on: sequential stats collapse
+    into batched getattr_bulk windows;
+  * readdir_plus — directory pages carry attrs + LOV EAs under the
+    dir's PR lock: O(N/page) RPCs;
+  * warm re-stat — the same client stats every entry again: everything
+    is served from the DLM-covered dentry + attr caches, ZERO RPCs.
+
+A second scenario scans a directory of files OPEN FOR WRITE (size/mtime
+live on the OSTs, §6.9.1): per-file glimpses vs ONE vectored
+glimpse_bulk per OST covering every file's stripe objects.
+
+`md_scan_metrics()` feeds the `md_scan` section of BENCH_rpc.json; the
+gate in benchmarks/run.py enforces: readdir-plus >= 16x cheaper than
+per-entry (the ISSUE-5 acceptance bar), warm re-stat at ZERO RPCs, and
+no regression vs the committed page-mode RPC count.
+"""
+from __future__ import annotations
+
+from benchmarks.common import save, table
+from repro.core import LustreCluster
+from repro.fsio import LustreClient
+
+N_ENTRIES = 1024
+N_OPEN = 64
+STRIPES = 2
+DIR_PAGES = 64
+
+
+def md_rpcs(c):
+    """Metadata + glimpse RPCs: everything MDS-bound plus the OST
+    attr/glimpse traffic a stat can cost."""
+    cnt = c.stats.counters
+    return (sum(n for k, n in cnt.items() if k.startswith("rpc.mds."))
+            + cnt.get("rpc.ost.glimpse_bulk", 0)
+            + cnt.get("rpc.ost.getattr", 0))
+
+
+def all_rpcs(c):
+    return sum(n for k, n in c.stats.counters.items()
+               if k.startswith("rpc."))
+
+
+def build(c, n, *, keep_open=0):
+    fs = LustreClient(c, 0).mount()
+    fs.mkdir("/scan")
+    handles = []
+    for i in range(n):
+        fh = fs.creat(f"/scan/f{i:04d}", stripe_count=STRIPES)
+        fs.write(fh, b"m" * (1024 * (1 + i % 3)))
+        if i < keep_open:
+            handles.append(fh)                 # size/mtime stay on OSTs
+        else:
+            fs.close(fh)
+    return fs, handles
+
+
+def md_scan_metrics() -> dict:
+    out = {}
+    for mode, kw in (("per_entry", {"dir_pages": 0, "statahead_max": 0}),
+                     ("statahead", {"dir_pages": 0, "statahead_max": 32}),
+                     ("readdir_plus", {"dir_pages": DIR_PAGES})):
+        c = LustreCluster(osts=4, mdses=1, clients=2,
+                          commit_interval=2048, **kw)
+        build(c, N_ENTRIES)
+        fs = LustreClient(c, 1).mount()        # cold scanner
+        base, t0 = md_rpcs(c), c.now
+        listing = fs.ls_l("/scan")
+        assert len(listing) == N_ENTRIES
+        out[mode] = {"cold_scan_rpcs": md_rpcs(c) - base,
+                     "scan_vtime_s": round(c.now - t0, 6),
+                     "entries": N_ENTRIES}
+        if mode == "readdir_plus":
+            base_all = all_rpcs(c)
+            for name in listing:
+                fs.stat("/scan/" + name)
+            out["warm_restat_rpcs"] = all_rpcs(c) - base_all
+    out["rpc_reduction"] = round(
+        out["per_entry"]["cold_scan_rpcs"]
+        / max(1, out["readdir_plus"]["cold_scan_rpcs"]), 2)
+    out["statahead_reduction"] = round(
+        out["per_entry"]["cold_scan_rpcs"]
+        / max(1, out["statahead"]["cold_scan_rpcs"]), 2)
+
+    # ---- batched glimpse: scanning files under write
+    glimpse = {}
+    for gmode, pages in (("per_file", 0), ("batched", DIR_PAGES)):
+        c = LustreCluster(osts=4, mdses=1, clients=2,
+                          commit_interval=2048, dir_pages=pages,
+                          statahead_max=0)
+        w, handles = build(c, N_OPEN, keep_open=N_OPEN)
+        fs = LustreClient(c, 1).mount()
+        cnt = c.stats.counters
+        base = cnt.get("rpc.ost.glimpse_bulk", 0) \
+            + cnt.get("rpc.ost.getattr", 0)
+        listing = fs.ls_l("/scan")
+        glimpse[f"{gmode}_rpcs"] = (cnt.get("rpc.ost.glimpse_bulk", 0)
+                                    + cnt.get("rpc.ost.getattr", 0)) - base
+        # correctness: live (unflushed) writer sizes observed
+        assert listing["f0000"]["size"] == handles[0].max_written
+        assert sum(o.dirty_bytes for o in w.lov.oscs) > 0
+    glimpse["files"] = N_OPEN
+    glimpse["reduction"] = round(glimpse["per_file_rpcs"]
+                                 / max(1, glimpse["batched_rpcs"]), 2)
+    out["glimpse"] = glimpse
+    return out
+
+
+def run() -> dict:
+    out = md_scan_metrics()
+    rows = [[m, out[m]["cold_scan_rpcs"],
+             f"{out[m]['scan_vtime_s']:.4f}"]
+            for m in ("per_entry", "statahead", "readdir_plus")]
+    rows.append(["warm re-stat", out["warm_restat_rpcs"], "-"])
+    table(f"ls -l scan of a {N_ENTRIES}-entry striped dir "
+          f"({STRIPES} stripes)",
+          ["mode", "md+glimpse RPCs", "vtime s"], rows)
+    g = out["glimpse"]
+    table(f"stat of {g['files']} files under write (glimpse RPCs)",
+          ["mode", "OST RPCs"],
+          [["per-file", g["per_file_rpcs"]],
+           ["batched per OST", g["batched_rpcs"]]])
+    save("mdscan", out)
+    assert out["rpc_reduction"] >= 16.0, out["rpc_reduction"]
+    assert out["warm_restat_rpcs"] == 0
+    assert g["batched_rpcs"] <= 4 * 2          # <= per-OST, not per-file
+    return out
+
+
+if __name__ == "__main__":
+    run()

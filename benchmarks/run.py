@@ -17,8 +17,8 @@ import os
 import sys
 import time
 
-BENCHES = ["striping", "nrs", "read", "intents", "dlm", "recovery", "cobd",
-           "checkpoint", "parity"]
+BENCHES = ["striping", "nrs", "read", "mdscan", "intents", "dlm",
+           "recovery", "cobd", "checkpoint", "parity"]
 
 RPC_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_rpc.json")
 
@@ -34,14 +34,18 @@ def bench_rpc() -> dict:
     from repro.core import LustreCluster
     from repro.fsio import LustreClient
 
-    baseline = read_baseline = None
+    baseline = read_baseline = md_baseline = None
     try:
         with open(RPC_JSON) as f:
             committed = json.load(f)
         baseline = committed["vectored"]["ost_write_rpcs"]
         read_baseline = committed["seq_read"]["readahead"]["ost_read_rpcs"]
     except (OSError, KeyError, ValueError, TypeError):
-        pass                                   # no (usable) baseline yet
+        committed = {}                         # no (usable) baseline yet
+    try:
+        md_baseline = committed["md_scan"]["readdir_plus"]["cold_scan_rpcs"]
+    except (KeyError, TypeError):
+        pass
 
     size, chunk = 8 << 20, 64 << 10
     out = {}
@@ -72,6 +76,12 @@ def bench_rpc() -> dict:
     sr = seq_read_metrics()
     sr["baseline_ost_read_rpcs"] = read_baseline
     out["seq_read"] = sr
+    # metadata-scan trajectory (ISSUE-5): readdir-plus + attr cache +
+    # statahead + batched glimpse
+    from benchmarks.bench_mdscan import md_scan_metrics
+    ms = md_scan_metrics()
+    ms["baseline_md_rpcs"] = md_baseline
+    out["md_scan"] = ms
     # single source of truth for the gates: main() keys its exit code off
     # these per-gate flags, and the file writes below key off the
     # combined one
@@ -82,7 +92,13 @@ def bench_rpc() -> dict:
          and sr["readahead"]["ost_read_rpcs"] > read_baseline)
         or sr["rpc_reduction"] < 4.0
         or sr["warm_reread_ost_reads"] != 0)
-    out["regressed"] = out["write_regressed"] or sr["regressed"]
+    ms["regressed"] = (
+        (md_baseline is not None
+         and ms["readdir_plus"]["cold_scan_rpcs"] > md_baseline)
+        or ms["rpc_reduction"] < 16.0
+        or ms["warm_restat_rpcs"] != 0)
+    out["regressed"] = out["write_regressed"] or sr["regressed"] \
+        or ms["regressed"]
     if not out["regressed"]:
         # a failed gate must NOT overwrite its own baseline: the second
         # run would compare against the regressed count and pass, and a
@@ -113,6 +129,19 @@ def bench_rpc() -> dict:
           f"  warm re-read: {sr['warm_reread_ost_reads']} OST_READ RPCs"
           + (f"  (baseline: {read_baseline})"
              if read_baseline is not None else ""))
+    print(f"== BENCH_rpc: ls -l scan, {ms['per_entry']['entries']}-entry "
+          f"striped dir ==\n"
+          f"  per-entry:    {ms['per_entry']['cold_scan_rpcs']} md+glimpse "
+          f"RPCs\n"
+          f"  statahead:    {ms['statahead']['cold_scan_rpcs']} RPCs  "
+          f"[{ms['statahead_reduction']}x fewer]\n"
+          f"  readdir-plus: {ms['readdir_plus']['cold_scan_rpcs']} RPCs  "
+          f"[{ms['rpc_reduction']}x fewer]\n"
+          f"  warm re-stat: {ms['warm_restat_rpcs']} RPCs; glimpse "
+          f"{ms['glimpse']['per_file_rpcs']} -> "
+          f"{ms['glimpse']['batched_rpcs']} RPCs batched"
+          + (f"  (baseline: {md_baseline})"
+             if md_baseline is not None else ""))
     return out
 
 
@@ -151,6 +180,14 @@ def main():
                 f"{sr['baseline_ost_read_rpcs']}), reduction "
                 f"{sr['rpc_reduction']}x (needs >= 4x), warm re-read "
                 f"{sr['warm_reread_ost_reads']} (needs 0)"))
+        ms = rpc["md_scan"]
+        if ms.get("regressed"):
+            failures.append((
+                "BENCH_rpc", f"md_scan gate failed: readdir-plus "
+                f"{ms['readdir_plus']['cold_scan_rpcs']} RPCs (baseline "
+                f"{ms['baseline_md_rpcs']}), reduction "
+                f"{ms['rpc_reduction']}x (needs >= 16x), warm re-stat "
+                f"{ms['warm_restat_rpcs']} (needs 0)"))
     except Exception as e:  # noqa: BLE001
         import traceback
         traceback.print_exc()

@@ -35,7 +35,8 @@ class LustreCluster(R.ClusterBase):
                  max_rpcs_in_flight: int = osc_mod.DEFAULT_MAX_RPCS_IN_FLIGHT,
                  vectored_brw: bool = True,
                  max_cached_mb: int = osc_mod.DEFAULT_MAX_CACHED_MB,
-                 readahead_pages: int = osc_mod.DEFAULT_READAHEAD_PAGES):
+                 readahead_pages: int = osc_mod.DEFAULT_READAHEAD_PAGES,
+                 dir_pages: int = 64, statahead_max: int = 32):
         super().__init__(seed)
         self.net = net
         # client-side BRW pipeline + read cache knobs, handed to every
@@ -47,6 +48,12 @@ class LustreCluster(R.ClusterBase):
         self.vectored_brw = vectored_brw
         self.max_cached_mb = max_cached_mb
         self.readahead_pages = readahead_pages
+        # metadata read-path knobs (ISSUE-5), consumed by LustreClient:
+        # dir_pages = entries per readdir-plus page (0 = seed per-entry
+        # scan path); statahead_max = attr-prefetch window for sequential
+        # stat patterns (0 disables statahead)
+        self.dir_pages = dir_pages
+        self.statahead_max = statahead_max
         self.ost_targets: list[ost_mod.OstTarget] = []
         self.mds_targets: list[mds_mod.MdsTarget] = []
         self.client_nodes: list[R.Node] = []
@@ -221,6 +228,17 @@ class LustreCluster(R.ClusterBase):
                    "invalidations": cnt.get("osc.cache_invalidate", 0),
                    "lru_evictions": cnt.get("osc.cache_lru_evict", 0),
                    "readaheads": cnt.get("lov.readahead", 0),
+               },
+               # metadata read-path rollup (ISSUE-5): attr cache +
+               # statahead + readdir-plus + batched glimpse
+               "md_cache": {
+                   "attr_hits": cnt.get("fs.attr_hit", 0),
+                   "attr_misses": cnt.get("fs.attr_miss", 0),
+                   "statahead": cnt.get("fs.statahead", 0),
+                   "statahead_hits": cnt.get("fs.statahead_hit", 0),
+                   "statahead_dropped": cnt.get("fs.statahead_dropped", 0),
+                   "readdir_plus_pages": cnt.get("mds.intent.readdir", 0),
+                   "glimpse_bulk_rpcs": cnt.get("rpc.ost.glimpse_bulk", 0),
                },
                "targets": {}}
         for t in self.ost_targets:

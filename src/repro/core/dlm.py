@@ -156,6 +156,48 @@ class LdlmNamespace:
             self._cb_imports[client_uuid] = imp
         return imp
 
+    def _glimpse_ast(self, lk: Lock) -> dict | None:
+        """Ask the holder for its CURRENT lock value block without
+        revoking the lock (§7.7 glimpse): the writer keeps its PW lock
+        and its write-back cache, the server learns the live size/mtime.
+        Returns None when the holder is unreachable or knows nothing —
+        the caller falls back to the on-disk attributes."""
+        self.sim.stats.count("dlm.glimpse_ast")
+        imp = self._cb_import(lk.client_uuid, lk.client_nid)
+        try:
+            rep = imp.request("glimpse_ast",
+                              {"handle": lk.handle,
+                               "res": list(lk.res_name)},
+                              no_recover=True)
+            d = rep.data or {}
+            return None if d.get("unknown") else d
+        except (R.TimeoutError_, R.RpcError):
+            self.sim.stats.count("dlm.glimpse_timeout")
+            return None
+
+    def glimpse_lvb(self, name, base: dict | None = None) -> dict:
+        """Current LVB for a resource: on-disk state merged with what
+        PW/EX/GR holders report over glimpse ASTs. This is how a stat of
+        a file under write learns the live size WITHOUT killing the
+        writer's cache (before: a PR enqueue revoked the PW lock).
+        `base` lets a caller that already read the disk attributes seed
+        the LVB instead of paying a second backend read."""
+        res = self.resource(tuple(name))
+        if base is not None:
+            lvb = dict(base)
+        else:
+            if self.lvb_update:
+                self.lvb_update(res)
+            lvb = dict(res.lvb)
+        for lk in list(res.granted):
+            if lk.mode in ("PW", "EX", "GR"):
+                d = self._glimpse_ast(lk)
+                if d and "size" in d:
+                    lvb["size"] = max(lvb.get("size", 0), d["size"])
+                    lvb["mtime"] = max(lvb.get("mtime", 0.0),
+                                       d.get("mtime", 0.0))
+        return lvb
+
     def _blocking_ast(self, lk: Lock) -> bool:
         """Ask the holder to drop `lk`. Returns False if the holder is
         unreachable (-> eviction)."""
@@ -234,6 +276,16 @@ class LdlmNamespace:
         res.waiting.append(lk)
         conf = res.conflicting(mode, extent, gid,
                                exclude_client=req.client_uuid)
+        if b.get("glimpse") and conf:
+            # glimpse enqueue (§7.7): the requester only wants the LVB —
+            # do NOT revoke the conflicting holders; ask them for their
+            # value blocks instead and answer without granting
+            res.waiting.remove(lk)
+            self.sim.stats.count("dlm.glimpse_served")
+            return R.Reply(data={"handle": 0, "granted": False,
+                                 "intent": None,
+                                 "lvb": self.glimpse_lvb(name),
+                                 "version": res.version})
         if conf and self.conflict_cb:
             self.conflict_cb(name)
         for other in list(conf):
@@ -322,6 +374,14 @@ class LockCallbackTarget(R.Target):
         super().__init__(f"lcb:{rpc_uuid}", node)
         self.clients: list["LockClient"] = []
         self.ops["blocking_ast"] = self.op_blocking_ast
+        self.ops["glimpse_ast"] = self.op_glimpse_ast
+
+    def op_glimpse_ast(self, req: R.Request) -> R.Reply:
+        h = req.body["handle"]
+        for lc in self.clients:
+            if h in lc.locks:
+                return R.Reply(data=lc.on_glimpse_ast(h))
+        return R.Reply(data={"unknown": True})
 
     def op_blocking_ast(self, req: R.Request) -> R.Reply:
         h = req.body["handle"]
@@ -349,6 +409,10 @@ class LockClient:
         self.imp = server_import
         self.sim = rpc.sim
         self.flush_cb = flush_cb
+        # glimpse_cb(lock) -> {"size","mtime"}: the data layer reports its
+        # CURRENT value block (dirty cache included) without dropping the
+        # lock when the server glimpses it (§7.7)
+        self.glimpse_cb: Callable[["Lock"], dict] | None = None
         self.revoke_cbs: list[Callable[["Lock"], None]] = []
         self.locks: dict[int, Lock] = {}
         self.by_res: defaultdict = defaultdict(list)
@@ -370,15 +434,18 @@ class LockClient:
     # ------------------------------------------------------------ enqueue
     def enqueue(self, res_name, mode: str, extent=None, *, gid: int = 0,
                 intent: dict | None = None, use_cache: bool = True,
-                fixup=None):
-        """Returns (lock | None, intent_data, lvb)."""
+                glimpse: bool = False, fixup=None):
+        """Returns (lock | None, intent_data, lvb). With `glimpse` the
+        server answers a conflicting enqueue with the holders' merged
+        LVB instead of revoking them (lock comes back None)."""
         if use_cache and not intent:
             lk = self.match(res_name, mode, extent)
             if lk is not None:
                 return lk, None, dict(lk.lvb)
         body = {"res": list(res_name), "mode": mode,
                 "extent": list(extent) if extent else None,
-                "gid": gid, "client_nid": self.rpc.nid, "intent": intent}
+                "gid": gid, "client_nid": self.rpc.nid, "intent": intent,
+                "glimpse": glimpse}
         rep = self.imp.request("ldlm_enqueue", body, fixup=fixup)
         d = rep.data
         if not d["granted"]:
@@ -423,6 +490,17 @@ class LockClient:
         self.by_res.clear()
 
     # --------------------------------------------------------------- ASTs
+    def on_glimpse_ast(self, handle: int) -> dict:
+        """Server asks for our current LVB: answer WITHOUT flushing or
+        dropping anything — that is the whole point of the glimpse."""
+        lk = self.locks.get(handle)
+        self.sim.stats.count("dlm.client_glimpse_ast")
+        if lk is None:
+            return {"unknown": True}
+        if self.glimpse_cb is not None:
+            return self.glimpse_cb(lk) or {}
+        return dict(lk.lvb)
+
     def on_blocking_ast(self, handle: int, res_name: tuple):
         lk = self.locks.get(handle)
         self.sim.stats.count("dlm.client_bl_ast")

@@ -267,3 +267,9 @@ register_site("osc.flush",
               "(client-side site: crash degrades to drop — the flush's "
               "first RPC is lost on the wire and the import recovers by "
               "timeout -> reconnect -> resend)")
+# Statahead prefetch (ISSUE-5):
+register_site("mds.statahead",
+              "client statahead about to ship its batched getattr_bulk/"
+              "glimpse prefetch (client-side site: crash degrades to "
+              "drop — the prefetch is abandoned and every stat falls "
+              "back to a correct synchronous fetch)")

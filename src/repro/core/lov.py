@@ -180,6 +180,49 @@ class Lov:
                 "mtime": max((a["mtime"] for a in outs), default=0.0),
                 "blocks": sum(a["blocks"] for a in outs)}
 
+    def glimpse(self, lsm: StripeMd) -> dict:
+        """size/mtime of ONE file via glimpse (§7.7): per-OST vectored
+        glimpse_bulk RPCs; writers holding PW locks are asked for their
+        LVBs, never revoked — correct even against unflushed write-back
+        caches (plain getattr reads disk and misses them)."""
+        return self.glimpse_files({0: lsm})[0]
+
+    def glimpse_files(self, lsms: dict) -> dict:
+        """Batched glimpse across MANY files: every file's stripe objects
+        are grouped per OST and fetched with ONE vectored glimpse_bulk
+        RPC per OST (a striped-directory scan pays #OSTs RPCs, not
+        #files x #stripes). lsms: key -> StripeMd; returns key ->
+        {"size", "mtime"} (logical size recombined per file)."""
+        by_ost: dict[str, list] = {}
+        for key, lsm in lsms.items():
+            for i, o in enumerate(lsm.objects):
+                by_ost.setdefault(o["ost"], []).append(
+                    (key, i, o["group"], o["oid"]))
+
+        def one(uuid, items):
+            outs = self.by_uuid[uuid].glimpse_bulk(
+                [(g, o) for _, _, g, o in items])
+            return [(k, i, a) for (k, i, _, _), a in zip(items, outs)]
+
+        parts = self.sim.parallel([(lambda u=u, it=it: one(u, it))
+                                   for u, it in by_ost.items()])
+        per_obj: dict[tuple, dict] = {}
+        for plist in parts:
+            for key, i, a in plist:
+                per_obj[(key, i)] = a or {"size": 0, "mtime": 0.0}
+        out = {}
+        for key, lsm in lsms.items():
+            attrs = [per_obj.get((key, i), {"size": 0, "mtime": 0.0})
+                     for i in range(len(lsm.objects))]
+            out[key] = {"size": logical_size(lsm,
+                                             [a["size"] for a in attrs]),
+                        "mtime": max((a["mtime"] for a in attrs),
+                                     default=0.0)}
+        if self.sim:
+            self.sim.stats.count("lov.glimpse")
+            self.sim.stats.count("lov.glimpse_files", len(lsms))
+        return out
+
     def getattr_locked(self, lsm: StripeMd) -> dict:
         """getattr under PR locks: revokes writers' PW locks first, so
         their write-back caches flush and the sizes are current (the

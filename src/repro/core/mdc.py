@@ -58,10 +58,28 @@ class Mdc:
             parent_fid, "PR", {"op": "open", "parent": tuple(parent_fid),
                                "name": name, "flags": flags, "mode": mode})
 
+    def readdir_plus(self, fid, page_size: int, after: str | None = None,
+                     want_ea: bool = True):
+        """ONE readdir-plus page (entries + per-entry attrs/EA) under
+        the directory's PR lock (ISSUE-5). `after` is a NAME cursor (the
+        last name of the previous page) so pagination stays stable under
+        concurrent creates/unlinks. Returns (lock, data)."""
+        return self.enqueue_intent(
+            fid, "PR", {"op": "readdir", "fid": tuple(fid),
+                        "page_size": page_size, "after": after,
+                        "want_ea": want_ea})
+
     # --------------------------------------------------------- plain ops
     def getattr(self, fid, want_ea: bool = False) -> dict:
         return self.imp.request("getattr", {"fid": tuple(fid),
                                             "want_ea": want_ea}).data
+
+    def getattr_bulk(self, fids: list, want_ea: bool = False) -> list:
+        """Batched getattr: ONE RPC, attrs (+EA) per fid (None for
+        unknown fids) — the statahead / readdir-plus merge primitive."""
+        return self.imp.request(
+            "getattr_bulk", {"fids": [tuple(f) for f in fids],
+                             "want_ea": want_ea}).data["attrs"]
 
     def readdir(self, fid) -> dict:
         return self.imp.request("readdir", {"fid": tuple(fid)}).data
@@ -142,17 +160,22 @@ class Lmv:
         if data.get("redirect"):
             # split directory: retry at the bucket's MDS (§6.7.3)
             bfid = tuple(data["redirect"])
-            mdc2 = self.mdc_for_fid(bfid)
-            lk2, d2 = mdc2.enqueue_intent(
+            mdc = self.mdc_for_fid(bfid)
+            lk, data = mdc.enqueue_intent(
                 bfid, "PR", {"op": "lookup", "parent": bfid,
                              "name": name, "want_ea": want_ea})
-            return lk2, d2
+        data["_granted_by"] = self.mdcs.index(mdc)
         if data.get("remote") and data.get("fid"):
-            # entry's inode lives on a peer MDS: 2nd RPC for attributes
-            # (the §6.7.3 'worst case 3 RPCs' path)
+            # entry's inode lives on a peer MDS (directly, or behind the
+            # bucket redirect): 2nd RPC for attributes (the §6.7.3
+            # 'worst case 3 RPCs' path). The lock is on the lookup-side
+            # namespace, so these attrs are NOT covered by it — flag
+            # them so the client attr cache skips them.
             fid = tuple(data["fid"])
             d2 = self.mdc_for_fid(fid).getattr(fid, want_ea)
             d2["status"] = 0
+            d2["_remote"] = True
+            d2["_granted_by"] = self.mdcs.index(mdc)
             return lk, d2
         return lk, data
 
@@ -168,6 +191,46 @@ class Lmv:
                 fid, "PR", {"op": "open", "by_fid": True, "fid": fid,
                             "flags": flags, "mode": mode})
         return lk, data
+
+    def readdir_plus(self, fid, page_size: int, want_ea: bool = True):
+        """readdir-plus page generator (ISSUE-5): yields (mdc, lock,
+        entries) pages — entries = {name: {"fid", "attrs"?, "ea"?,
+        "remote"?}} — walking the master directory and then every
+        split-dir hash bucket AT ITS OWN MDS (one page-RPC per MDT, each
+        under that MDT's dir/bucket PR lock). Entries whose inode a peer
+        MDT owns are batch-resolved with ONE getattr_bulk per owning MDT
+        per page (their attrs stay flagged `remote`: no covering lock)."""
+        todo = [tuple(fid)]
+        master = True
+        while todo:
+            dfid = todo.pop(0)
+            mdc = self.mdc_for_fid(dfid)
+            after = None
+            while True:
+                lk, data = mdc.readdir_plus(dfid, page_size, after,
+                                            want_ea)
+                st = data.get("status", 0)
+                if st:
+                    raise R.RpcError(st, str(dfid))
+                if master and data.get("buckets"):
+                    todo.extend(tuple(b) for b in data["buckets"])
+                page = data["entries"]
+                remote: dict = {}
+                for name, e in page.items():
+                    if e.get("remote"):
+                        remote.setdefault(self.mdc_for_fid(e["fid"]),
+                                          []).append(name)
+                for rmdc, names in remote.items():
+                    outs = rmdc.getattr_bulk(
+                        [page[n]["fid"] for n in names], want_ea)
+                    for n, a in zip(names, outs):
+                        if a:
+                            page[n].update(a)
+                yield mdc, lk, page
+                if data.get("next") is None:
+                    break
+                after = data["next"]
+            master = False
 
     def readdir(self, fid):
         """Client-side bucket iteration for split directories (§6.7.3)."""

@@ -28,6 +28,7 @@ Implemented:
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import itertools
 from typing import Any, Optional
@@ -59,6 +60,16 @@ class Inode:
     symlink: str = ""
     # mtime/size delegated to OSTs while a writer has the file open (§6.9.1)
     mtime_on_ost: bool = False
+    # LOCAL directory fids this inode is (or was) linked under: the dir
+    # PR locks covering clients' cached copies of our attributes (dentry
+    # + attr cache). setattr/close revoke these. Add-only — a stale
+    # entry costs a spurious revocation, never a stale cache.
+    pfids: set = dataclasses.field(default_factory=set)
+    # (peer_uuid, dir_fid) pairs for directories a PEER MDT owns that
+    # link this inode (cross-MDT mkdir/create halves): an attr change
+    # here forwards a revoke_dir_locks to the peer so clients scanning
+    # THAT directory drop their (one-shot) copies of our attrs too.
+    remote_pfids: set = dataclasses.field(default_factory=set)
 
     def attrs(self) -> dict:
         return {"fid": self.fid, "type": self.ftype, "mode": self.mode,
@@ -140,6 +151,7 @@ class MdsTarget(R.Target):
             self.inodes[ROOT_FID] = root
         ops = self.ops
         ops["getattr"] = self.op_getattr
+        ops["getattr_bulk"] = self.op_getattr_bulk
         ops["readdir"] = self.op_readdir
         ops["reint"] = self.op_reint
         ops["reint_batch"] = self.op_reint_batch
@@ -157,6 +169,7 @@ class MdsTarget(R.Target):
         ops["remote_unlink_inode"] = self.op_remote_unlink_inode
         ops["dir_nonempty"] = self.op_dir_nonempty
         ops["remote_nlink_adjust"] = self.op_remote_nlink_adjust
+        ops["revoke_dir_locks"] = self.op_revoke_dir_locks
         ops["dep_records"] = self.op_dep_records
         ops["rollback_to"] = self.op_rollback_to
         ops["prune_history"] = self.op_prune_history
@@ -477,6 +490,9 @@ class MdsTarget(R.Target):
         if op == "lookup" or op == "getattr":
             data = self._intent_lookup(it)
             return data, data.get("status", 0) == 0
+        if op == "readdir":
+            data = self._intent_readdir(it)
+            return data, data.get("status", 0) == 0
         if op == "open":
             data = self._intent_open(it, req)
             return data, data.get("status", 0) == 0 and not it.get("no_lock")
@@ -508,6 +524,65 @@ class MdsTarget(R.Target):
             d["ea"] = dict(inode.ea)
         return d
 
+    def _intent_readdir(self, it) -> dict:
+        """readdir-plus (ISSUE-5): ONE page of directory entries, each
+        carrying the entry's attributes (+ EA with the LOV stripe
+        descriptor) when its inode lives on THIS MDT, served under the
+        directory's PR lock the enqueue grants. Entries whose inode a
+        peer MDT owns are flagged `remote` — the LMV batch-resolves them
+        with ONE getattr_bulk per owning MDT, not one RPC per name. A
+        split directory returns its bucket fids; the LMV pages each
+        bucket at ITS MDS the same way (one page per MDT)."""
+        inode = self.inodes.get(tuple(it["fid"]))
+        if inode is None:
+            return {"status": -2}
+        if inode.ftype != S_IFDIR:
+            return {"status": -20}                      # ENOTDIR
+        page = max(1, int(it.get("page_size") or 64))
+        names = sorted(inode.entries)
+        # name cursor, not a numeric index: a create/unlink between two
+        # page RPCs must not shift later pages (an index cursor would
+        # skip or duplicate entries that existed for the whole scan)
+        after = it.get("after")
+        if after is not None:
+            names = names[bisect.bisect_right(names, after):]
+        entries = {}
+        for name in names[:page]:
+            fid = tuple(inode.entries[name])
+            child = self.inodes.get(fid)
+            e = {"fid": fid}
+            if child is None:
+                e["remote"] = True
+            else:
+                child.pfids.add(inode.fid)
+                e["attrs"] = child.attrs()
+                if it.get("want_ea"):
+                    e["ea"] = dict(child.ea)
+            entries[name] = e
+        d = {"status": 0, "entries": entries,
+             "next": names[page - 1] if len(names) > page else None,
+             "buckets": inode.ea.get("buckets")}
+        self.sim.stats.count("mds.readdir_plus_entries", len(entries))
+        return d
+
+    def op_getattr_bulk(self, req: R.Request) -> R.Reply:
+        """Batched getattr: attrs (+EA) for MANY fids in ONE RPC — the
+        statahead prefetch and the LMV's cross-MDT readdir-plus merge
+        ride on this instead of a getattr per name. Unknown fids answer
+        None (the caller falls back per entry)."""
+        out = []
+        for f in req.body["fids"]:
+            ino = self.inodes.get(tuple(f))
+            if ino is None:
+                out.append(None)
+                continue
+            d = {"attrs": ino.attrs()}
+            if req.body.get("want_ea"):
+                d["ea"] = dict(ino.ea)
+            out.append(d)
+        self.sim.stats.count("mds.getattr_bulk_fids", len(out))
+        return R.Reply(data={"attrs": out}, bulk_nbytes=R.wire_size(out))
+
     def _intent_open(self, it, req: R.Request) -> dict:
         """open_namei work: lookup [+create] + open (§6.4.3). Returns the
         `disposition` bitmap of which phases ran. An entry whose inode a
@@ -538,12 +613,16 @@ class MdsTarget(R.Target):
             if "c" not in flags:
                 return {"status": -2, "disposition": disp}
             disp.append("create")
-            self._revoke_client_locks(parent.fid)
+            # the create changes the parent's OWN attrs (nentries) too:
+            # revoke the locks covering cached copies of them as well
+            self._revoke_client_locks(parent.fid, *parent.pfids,
+                                      exclude=self._requester(req))
             fid = tuple(it["fid"]) if it.get("fid") else self.new_fid()
             inode = Inode(fid, S_IFREG, mode=it.get("mode", 0o644),
                           mtime=self.sim.now)
             self.inodes[fid] = inode
-            self._dir_insert(parent, name, fid)
+            self._dir_insert(parent, name, fid,
+                             exclude=self._requester(req))
             created = True
             clrec = self._cl(req, cl_mod.CL_CREAT, fid, pfid=parent.fid,
                              name=name, mode=inode.mode)
@@ -578,26 +657,51 @@ class MdsTarget(R.Target):
         exp = self.exports[req.client_uuid]
         handle = len(exp.data.setdefault("opens", {})) + 1
         exp.data["opens"][handle] = inode.fid
-        if "w" in flags and inode.ftype == S_IFREG:
-            inode.mtime_on_ost = True       # OSTs own mtime while open-write
+        if "w" in flags and inode.ftype == S_IFREG \
+                and not inode.mtime_on_ost:
+            # OSTs own mtime/size while open-write — clients caching the
+            # old attrs (mtime_on_ost=False) would skip the OST glimpse
+            # and serve a frozen size: revoke their covering dir locks
+            self._revoke_client_locks(*inode.pfids,
+                                      exclude=self._requester(req))
+            self._revoke_remote_pfids(inode, req)
+            inode.mtime_on_ost = True
         return {"status": 0, "disposition": disp, "created": created,
                 "attrs": inode.attrs(), "ea": dict(inode.ea),
                 "open_handle": handle, "_transno": transno}
 
-    def _revoke_client_locks(self, *fids):
+    def _revoke_client_locks(self, *fids, exclude: str | None = None):
         """§6.4.2: the MDS takes a write lock on the parent directories (in
         fid order) before a namespace update — here that means revoking
-        client PR locks (blocking ASTs) so cached dentries invalidate."""
+        client PR locks (blocking ASTs) so cached dentries invalidate.
+
+        `exclude` spares the REQUESTING client's own locks: it made the
+        change and fixes its own caches locally (fsio drops the touched
+        dentry/attr entries), so ASTing it back would only burn an RPC
+        round trip per operation and tear down its whole-directory cache
+        for nothing (the double-AST-per-create problem)."""
         for fid in sorted(set(tuple(f) for f in fids)):
             res = self.ldlm.resources.get(("fid", *fid))
             if not res:
                 continue
             for lk in list(res.granted):
+                if exclude is not None and lk.client_uuid == exclude:
+                    continue
                 if lk.mode in ("PR", "EX", "PW", "CW"):
                     ok = self.ldlm._blocking_ast(lk)
                     if not ok:
                         self.ldlm.evict_client(lk.client_uuid)
             self._note_contention(("fid", *fid))
+
+    @staticmethod
+    def _requester(req) -> str | None:
+        """Client uuid to spare from cache revocation: the direct
+        requester maintains its own caches after its own operation. A
+        WBC reint_batch is NOT spared — its records may touch state the
+        client cached long before entering write-back mode."""
+        if req is None or req.opcode == "reint_batch":
+            return None
+        return req.client_uuid
 
     def _note_contention(self, res_name: tuple):
         """Lock-callback traffic feeds the WBC switching policy (§6.5.2)."""
@@ -660,6 +764,11 @@ class MdsTarget(R.Target):
         if fid is not None and (b.get("size") is not None
                                 or b.get("mtime") is not None):
             inode = self._get(fid)
+            # size/mtime land on the MDS (and mtime_on_ost flips off):
+            # cached attrs under the parents' dir locks are stale now
+            self._revoke_client_locks(*inode.pfids,
+                                      exclude=self._requester(req))
+            self._revoke_remote_pfids(inode, req)
             old = (inode.size, inode.mtime, inode.mtime_on_ost)
             if b.get("size") is not None:
                 inode.size = b["size"]
@@ -696,17 +805,26 @@ class MdsTarget(R.Target):
         return R.Reply(data=out, transno=self.transno)
 
     def _dir_insert(self, parent: Inode, name: str, fid: tuple,
-                    is_dir: bool = False):
+                    is_dir: bool = False, exclude: str | None = None):
+        child = self.inodes.get(tuple(fid))
+        if child is not None:
+            # the master dir's PR lock covers clients' cached attrs of
+            # this child (readdir-plus / statahead): remember it so a
+            # later setattr/close revokes that lock
+            child.pfids.add(parent.fid)
         if "buckets" in parent.ea:
             b = parent.ea["buckets"]
             bfid = tuple(b[fhash(name, len(b))])
             if bfid[0] == self.inode_group:
                 self._get(bfid).entries[name] = fid
+                if child is not None:
+                    child.pfids.add(bfid)       # bucket lock covers too
+                self._revoke_client_locks(bfid, exclude=exclude)
             else:
                 peer = self._peer_for_group(bfid[0])
                 rep = self._peer(peer).request(
                     "bucket_insert", {"bucket": bfid, "name": name,
-                                      "fid": fid})
+                                      "fid": fid, "exclude": exclude})
                 # cross-MDS dependency: our txn depends on the peer's
                 self._last_deps = {peer: rep.transno}
             parent.entries.pop(name, None)
@@ -717,16 +835,19 @@ class MdsTarget(R.Target):
         if is_dir:
             parent.nlink += 1
 
-    def _dir_remove_raw(self, parent: Inode, name: str):
+    def _dir_remove_raw(self, parent: Inode, name: str,
+                        exclude: str | None = None):
         if "buckets" in parent.ea:
             b = parent.ea["buckets"]
             bfid = tuple(b[fhash(name, len(b))])
             if bfid[0] == self.inode_group:
                 self._get(bfid).entries.pop(name, None)
+                self._revoke_client_locks(bfid, exclude=exclude)
             else:
                 peer = self._peer_for_group(bfid[0])
                 rep = self._peer(peer).request(
-                    "bucket_remove", {"bucket": bfid, "name": name})
+                    "bucket_remove", {"bucket": bfid, "name": name,
+                                      "exclude": exclude})
                 self._last_deps = {peer: rep.transno}
         else:
             parent.entries.pop(name, None)
@@ -755,7 +876,11 @@ class MdsTarget(R.Target):
     def _reint_create(self, r, req) -> R.Reply:
         parent = self._get(r["parent"])
         name = r["name"]
-        self._revoke_client_locks(parent.fid)
+        # parent.fid: the dentries/attrs cached under the dir's lock;
+        # parent.pfids: the parent's OWN cached attrs (nlink/nentries
+        # change with this create) under ITS parents' locks
+        self._revoke_client_locks(parent.fid, *parent.pfids,
+                                  exclude=self._requester(req))
         if self._lookup_entry(parent, name) is not None:
             raise R.RpcError(-17, name)
         ftype = r.get("ftype", S_IFREG)
@@ -771,8 +896,10 @@ class MdsTarget(R.Target):
             rep = self._peer(peer).request(
                 "remote_mkdir" if ftype == S_IFDIR else "remote_create",
                 {"mode": r.get("mode", 0o644), "fid": fid,
-                 "ftype": ftype, **self._cl_origin(req)})
-            self._dir_insert(parent, name, fid, is_dir=ftype == S_IFDIR)
+                 "ftype": ftype, "pfid": parent.fid,
+                 "pfid_owner": self.uuid, **self._cl_origin(req)})
+            self._dir_insert(parent, name, fid, is_dir=ftype == S_IFDIR,
+                             exclude=self._requester(req))
             deps = {peer: rep.transno} if rep.transno else None
             clrec = self._cl(req, _cl_create_type(ftype), fid,
                              pfid=parent.fid, name=name)
@@ -792,7 +919,8 @@ class MdsTarget(R.Target):
         if r.get("ea"):
             inode.ea.update(r["ea"])
         self.inodes[fid] = inode
-        self._dir_insert(parent, name, fid, is_dir=ftype == S_IFDIR)
+        self._dir_insert(parent, name, fid, is_dir=ftype == S_IFDIR,
+                         exclude=self._requester(req))
         deps = self._last_deps
         clrec = self._cl(req, _cl_create_type(ftype), fid, pfid=parent.fid,
                          name=name, mode=inode.mode)
@@ -815,10 +943,12 @@ class MdsTarget(R.Target):
             len(parent.entries) % len(self.peer_nids)]
         rep = self._peer(peer).request(
             "remote_mkdir", {"mode": r.get("mode", 0o755),
+                             "pfid": parent.fid, "pfid_owner": self.uuid,
                              **self._cl_origin(req)},
             fixup=_pin_remote_fid)
         fid = tuple(rep.data["fid"])
-        self._dir_insert(parent, name, fid, is_dir=True)
+        self._dir_insert(parent, name, fid, is_dir=True,
+                         exclude=self._requester(req))
         deps = {peer: rep.transno}
         # the COORDINATOR (namespace side) logs the name-bearing record;
         # the peer logged only an inode-half record (remote=True)
@@ -841,6 +971,11 @@ class MdsTarget(R.Target):
         inode = Inode(fid, ftype, mode=req.body.get("mode", 0o755),
                       nlink=2 if ftype == S_IFDIR else 1,
                       mtime=self.sim.now)
+        if req.body.get("pfid"):
+            # the coordinator's directory links us: attr changes here
+            # must reach ITS clients' caches (revocation forwarding)
+            inode.remote_pfids.add((req.body["pfid_owner"],
+                                    tuple(req.body["pfid"])))
         self.inodes[fid] = inode
         # inode half of a cross-MDT create: nameless, flagged remote so
         # namespace consumers (audit mirror) don't double-apply it
@@ -894,12 +1029,37 @@ class MdsTarget(R.Target):
             "nonempty": inode.ftype == S_IFDIR
             and self._dir_nonempty(inode)})
 
+    def op_revoke_dir_locks(self, req: R.Request) -> R.Reply:
+        """Peer-forwarded attr revocation: a cross-MDT child of a dir
+        THIS MDT owns changed its attrs over there — revoke the dir's
+        client PR locks so no scan cache serves the old copy."""
+        self._revoke_client_locks(tuple(req.body["fid"]),
+                                  exclude=req.body.get("exclude") or None)
+        return R.Reply()
+
+    def _revoke_remote_pfids(self, inode: Inode,
+                             req: Optional[R.Request] = None):
+        """Forward the attr revocation to every peer-owned directory
+        linking this inode (best effort: an unreachable peer's clients
+        re-fetch when their locks lapse; its namespace half is already
+        withheld from the consistent cut anyway)."""
+        for owner, pfid in list(inode.remote_pfids):
+            try:
+                self._peer(owner).request(
+                    "revoke_dir_locks",
+                    {"fid": tuple(pfid),
+                     "exclude": self._requester(req)},
+                    no_recover=True)
+            except (R.RpcError, R.TimeoutError_):
+                self.sim.stats.count("mds.remote_revoke_skipped")
+
     def op_remote_nlink_adjust(self, req: R.Request) -> R.Reply:
         """'..'-link accounting half of a cross-MDT rename: the
         coordinator moved/removed a subdirectory of a dir THIS MDT
         owns."""
         inode = self._get(req.body["fid"])
         delta = int(req.body["delta"])
+        self._revoke_client_locks(*inode.pfids)   # cached nlink is stale
         inode.nlink += delta
 
         def undo():
@@ -996,7 +1156,8 @@ class MdsTarget(R.Target):
     def _reint_unlink(self, r, req) -> R.Reply:
         parent = self._get(r["parent"])
         name = r["name"]
-        self._revoke_client_locks(parent.fid)
+        self._revoke_client_locks(parent.fid, *parent.pfids,
+                                  exclude=self._requester(req))
         fid = self._lookup_entry(parent, name)
         if fid is None:
             raise R.RpcError(-2, name)
@@ -1008,7 +1169,8 @@ class MdsTarget(R.Target):
             rep = self._peer(peer).request(
                 "remote_unlink_inode",
                 {"fid": fid, **self._cl_origin(req)})
-            self._dir_remove_raw(parent, name)
+            self._dir_remove_raw(parent, name,
+                                 exclude=self._requester(req))
             deps = dict(self._last_deps or {})
             deps[peer] = rep.transno
             remote_was_dir = rep.data.get("ftype") == S_IFDIR
@@ -1032,7 +1194,7 @@ class MdsTarget(R.Target):
             raise R.RpcError(-39, "not empty")           # ENOTEMPTY
         was_dir = inode.ftype == S_IFDIR
         inode.nlink -= 2 if was_dir else 1
-        self._dir_remove_raw(parent, name)
+        self._dir_remove_raw(parent, name, exclude=self._requester(req))
         if was_dir:
             parent.nlink -= 1
         data = {"fid": fid}
@@ -1065,6 +1227,7 @@ class MdsTarget(R.Target):
     def op_remote_unlink_inode(self, req: R.Request) -> R.Reply:
         fid = tuple(req.body["fid"])
         inode = self._get(fid)
+        self._revoke_client_locks(*inode.pfids)   # cached nlink is stale
         was_dir = inode.ftype == S_IFDIR
         # authoritative ENOTEMPTY: the coordinator cannot see a remote
         # directory's entries, so ITS owner refuses here (before the
@@ -1103,7 +1266,11 @@ class MdsTarget(R.Target):
         peers and records the dependencies for the consistent cut. Local
         undo restores local state; cross-node atomicity is the cut's job."""
         src_fid, dst_fid = tuple(r["src"]), tuple(r["dst"])
-        self._revoke_client_locks(src_fid, dst_fid)
+        self._revoke_client_locks(
+            src_fid, dst_fid,
+            *getattr(self.inodes.get(src_fid), "pfids", ()),
+            *getattr(self.inodes.get(dst_fid), "pfids", ()),
+            exclude=self._requester(req))
         src = self.inodes.get(src_fid)
         dst = self.inodes.get(dst_fid)
         # --- read-only lookups first: the source entry and the entry the
@@ -1137,7 +1304,8 @@ class MdsTarget(R.Target):
         self._last_deps = None
         # --- source side: remove
         if src is not None:
-            self._dir_remove_raw(src, r["src_name"])
+            self._dir_remove_raw(src, r["src_name"],
+                                 exclude=self._requester(req))
             if self._last_deps:
                 deps.update(self._last_deps)
         else:
@@ -1147,7 +1315,8 @@ class MdsTarget(R.Target):
         # --- destination side: insert
         self._last_deps = None
         if dst is not None:
-            self._dir_insert(dst, r["dst_name"], fid)
+            self._dir_insert(dst, r["dst_name"], fid,
+                             exclude=self._requester(req))
             if self._last_deps:
                 deps.update(self._last_deps)
         else:
@@ -1275,7 +1444,8 @@ class MdsTarget(R.Target):
     def _reint_link(self, r, req) -> R.Reply:
         fid = tuple(r["fid"])
         parent = self._get(r["parent"])
-        self._revoke_client_locks(parent.fid)
+        self._revoke_client_locks(parent.fid, *parent.pfids,
+                                  exclude=self._requester(req))
         # EEXIST check BEFORE any nlink bump: the remote_link RPC commits
         # on the peer in its own transaction, so raising after it used to
         # leak a permanent +1 on the remote inode's nlink
@@ -1290,7 +1460,8 @@ class MdsTarget(R.Target):
             deps[peer] = rep.transno
         else:
             inode.nlink += 1
-        self._dir_insert(parent, r["name"], fid)
+        self._dir_insert(parent, r["name"], fid,
+                         exclude=self._requester(req))
         if self._last_deps:
             deps.update(self._last_deps)
         clrec = self._cl(req, cl_mod.CL_LINK, fid, pfid=parent.fid,
@@ -1306,6 +1477,7 @@ class MdsTarget(R.Target):
 
     def op_remote_link(self, req: R.Request) -> R.Reply:
         inode = self._get(req.body["fid"])
+        self._revoke_client_locks(*inode.pfids)   # cached nlink is stale
         inode.nlink += 1
 
         def undo():
@@ -1314,6 +1486,13 @@ class MdsTarget(R.Target):
 
     def _reint_setattr(self, r, req) -> R.Reply:
         inode = self._get(r["fid"])
+        # attribute update: clients may cache this inode's attrs under
+        # the PR locks of the directories it is linked in (readdir-plus
+        # / statahead) — revoke them so no stale attr is ever served
+        # (the requester drops its own copy locally)
+        self._revoke_client_locks(*inode.pfids,
+                                  exclude=self._requester(req))
+        self._revoke_remote_pfids(inode, req)
         old = (dict(inode.ea), inode.mode, inode.uid, inode.gid,
                inode.mtime, inode.size)
         a = r.get("attrs", {})
@@ -1371,6 +1550,14 @@ class MdsTarget(R.Target):
         name = req.body["name"]
         fid = tuple(req.body["fid"])
         bucket.entries[name] = fid
+        child = self.inodes.get(fid)
+        if child is not None:
+            child.pfids.add(bucket.fid)
+        # readdir-plus pages of this bucket were served under ITS PR
+        # lock; the originating client (forwarded by the coordinator)
+        # fixes its own caches, like every other requester
+        self._revoke_client_locks(bucket.fid,
+                                  exclude=req.body.get("exclude"))
 
         def undo():
             bucket.entries.pop(name, None)
@@ -1384,6 +1571,8 @@ class MdsTarget(R.Target):
         bucket = self._get(req.body["bucket"])
         name = req.body["name"]
         fid = bucket.entries.pop(name, None)
+        self._revoke_client_locks(bucket.fid,
+                                  exclude=req.body.get("exclude"))
 
         def undo():
             if fid is not None:

@@ -21,6 +21,11 @@ chains:
   * ``orr``  — object round-robin: the same fair chains keyed by
     (group, oid), modelling per-object batched ordering (disk-friendly
     grouping; requests to a cold object never wait behind a hot one).
+  * ``orr_disk`` — disk-locality ORR: the ``orr`` chains plus a
+    contiguity-aware charge — a BRW continuing exactly where the
+    object's last one ended is batched with it (the seek component of
+    the seek-aware cost model is refunded), so queues batch by on-disk
+    contiguity, not just by object.
   * ``wfq``  — weighted fair queueing: the CRR chains with per-export
     weights (a weight-3 client gets 3x the share of a weight-1 client
     under contention); installed with
@@ -181,6 +186,70 @@ class OrrPolicy(RoundRobinPolicy):
         return out
 
 
+class OrrDiskPolicy(OrrPolicy):
+    """Disk-locality ORR: the per-object fair chains of ``orr`` plus a
+    contiguity-aware charge consuming the seek-aware cost model (the
+    ROADMAP follow-up to the ISSUE-4 cost rework).
+
+    ``Service.request_cost`` charges every BRW one head seek per
+    discontiguous run. When a queued BRW *continues exactly where the
+    object's previously scheduled BRW ended*, the head is already there:
+    this policy batches the two — the chain is extended by the transfer
+    cost only, the seek component is refunded. A discontiguous request
+    (or one against a different object) pays the full seek-inclusive
+    cost, so streams are batched by on-disk contiguity, not merely by
+    object identity. ``info()["seeks_saved"]`` counts the refunds.
+
+    params:
+      seek_cost — the refund per batched contiguous continuation; keep it
+                  equal to the Service's seek_cost (default 4e-5 s).
+    """
+
+    name = "orr_disk"
+
+    def __init__(self, sim, seek_cost: float = 4e-5, **params):
+        super().__init__(sim, **params)
+        self.seek_cost = float(seek_cost)
+        self._next_off: dict = {}      # object key -> expected next offset
+        self.seeks_saved = 0
+
+    @staticmethod
+    def _span(req) -> tuple | None:
+        """(start, end) of the request's on-disk footprint, if any."""
+        b = req.body
+        nio = b.get("niobufs")
+        if isinstance(nio, (list, tuple)) and nio:
+            def ln(n):
+                d = n.get("data")
+                return len(d) if d is not None else n.get("length", 0)
+            return (min(n.get("offset", 0) for n in nio),
+                    max(n.get("offset", 0) + ln(n) for n in nio))
+        if "offset" in b and ("data" in b or "length" in b):
+            ln = len(b["data"]) if b.get("data") is not None \
+                else b.get("length", 0)
+            return (b["offset"], b["offset"] + ln)
+        return None
+
+    def schedule(self, req, arrival, cost):
+        if req.opcode not in CONTROL_OPS:
+            key = self.classify(req)
+            span = self._span(req)
+            if span is not None:
+                if self._next_off.get(key) == span[0]:
+                    # contiguous continuation: batched with the previous
+                    # BRW — no head seek between them
+                    cost = max(0.0, cost - self.seek_cost)
+                    self.seeks_saved += 1
+                self._next_off[key] = span[1]
+        return super().schedule(req, arrival, cost)
+
+    def info(self):
+        out = super().info()
+        out["seeks_saved"] = self.seeks_saved
+        out["seek_cost"] = self.seek_cost
+        return out
+
+
 class WfqPolicy(RoundRobinPolicy):
     """Weighted fair queueing (WFQ): CRR generalized with per-export
     weights.
@@ -308,7 +377,8 @@ class TbfPolicy(NrsPolicy):
 
 
 POLICIES = {p.name: p for p in
-            (FifoPolicy, RoundRobinPolicy, OrrPolicy, WfqPolicy, TbfPolicy)}
+            (FifoPolicy, RoundRobinPolicy, OrrPolicy, OrrDiskPolicy,
+             WfqPolicy, TbfPolicy)}
 
 
 def make_policy(name: str, sim, **params) -> NrsPolicy:

@@ -85,6 +85,7 @@ class Osc:
         self.imp = rpc.import_target(target_uuid, nids, "ost")
         self.locks = dlm_mod.LockClient(rpc, self.imp, flush_cb=self._flush_lock)
         self.locks.revoke_cbs.append(self._on_lock_revoked)
+        self.locks.glimpse_cb = self._on_glimpse
         self.imp.evict_cbs.append(self._on_evicted)
         self.writeback = writeback
         self.max_pages_per_rpc = max(1, max_pages_per_rpc)
@@ -109,9 +110,11 @@ class Osc:
     def _res(self, group, oid):
         return ("ext", group, oid)
 
-    def lock(self, group, oid, mode, extent=None, gid: int = 0):
+    def lock(self, group, oid, mode, extent=None, gid: int = 0,
+             glimpse: bool = False):
         lk, _, lvb = self.locks.enqueue(self._res(group, oid), mode,
-                                        extent or dlm_mod.WHOLE, gid=gid)
+                                        extent or dlm_mod.WHOLE, gid=gid,
+                                        glimpse=glimpse)
         if lk is not None and lk.covers("PR", dlm_mod.WHOLE) \
                 and "size" in lvb:
             # whole-object PR/PW lock: the LVB size/mtime stay current
@@ -125,6 +128,23 @@ class Osc:
         """Blocking AST on a PW lock: write back dirty extents under it."""
         _, group, oid = lk.res_name
         self.flush(group, oid)
+
+    def _on_glimpse(self, lk: dlm_mod.Lock) -> dict:
+        """Glimpse AST: report the live size/mtime this client knows —
+        tracked lock-cached size plus dirty write-back extents — WITHOUT
+        flushing or surrendering the lock (§7.7)."""
+        if lk.res_name[0] != "ext":
+            return {}
+        _, group, oid = lk.res_name
+        key = (group, oid)
+        size = self._sizes.get(key, 0)
+        mtime = self._mtimes.get(key, 0.0)
+        for d in self.dirty:
+            if (d.group, d.oid) == key:
+                size = max(size, d.end)
+                mtime = max(mtime, d.mtime)
+        self.sim.stats.count("osc.glimpse_answered")
+        return {"size": size, "mtime": mtime}
 
     def _on_lock_revoked(self, lk: dlm_mod.Lock):
         """A lock left the cache (AST / cancel / eviction): every clean
@@ -168,6 +188,16 @@ class Osc:
 
     def getattr(self, group: int, oid: int) -> dict:
         return self.imp.request("getattr", {"group": group, "oid": oid}).data
+
+    def glimpse_bulk(self, items: list) -> list:
+        """ONE vectored glimpse RPC for many objects of this OST:
+        items = [(group, oid), ...] -> [{"size", "mtime"} | None, ...].
+        Writers holding PW locks answer glimpse ASTs server-side; their
+        caches survive (unlike the PR-enqueue revocation path)."""
+        rep = self.imp.request("glimpse_bulk",
+                               {"objects": [list(i) for i in items]})
+        self.sim.stats.count("osc.glimpse_bulk")
+        return rep.data["attrs"]
 
     def setattr(self, group: int, oid: int, **attrs):
         return self.imp.request(
@@ -605,15 +635,22 @@ class Osc:
         return out
 
     def getattr_locked(self, group: int, oid: int) -> dict:
-        """size/mtime under a PR lock (the §6.2.3 ordering: enqueueing
-        revokes writers' PW locks so their caches flush first). While a
-        cached whole-object PR/PW lock is held nobody else can change the
-        object, so the grant-time LVB (§7.7) plus our own tracked writes
-        IS the current size — zero RPCs on the warm path."""
+        """size/mtime under a PR lock. While a cached whole-object PR/PW
+        lock is held nobody else can change the object, so the grant-time
+        LVB (§7.7) plus our own tracked writes IS the current size — zero
+        RPCs on the warm path. The cold enqueue is a GLIMPSE enqueue: a
+        conflicting writer is ASKED for its LVB via a glimpse AST instead
+        of revoked, so a stat of a file under write no longer kills the
+        writer's write-back cache (the ROADMAP'd 'glimpse ASTs proper')."""
         key = (group, oid)
         if key not in self._sizes or self.locks.match(
                 self._res(group, oid), "PR", dlm_mod.WHOLE) is None:
-            lk, lvb = self.lock(group, oid, "PR")
+            lk, lvb = self.lock(group, oid, "PR", glimpse=True)
+            if lk is None and "size" in lvb:
+                # writer active: the server merged the holders' glimpse
+                # answers into the LVB — use it, cache nothing (no lock)
+                self.sim.stats.count("osc.glimpse_stat")
+                return {"size": lvb["size"], "mtime": lvb.get("mtime", 0.0)}
             if not (lk is not None and lk.covers("PR", dlm_mod.WHOLE)
                     and key in self._sizes):
                 # contended object (lock not grown to whole): fall back

@@ -45,6 +45,7 @@ class OstTarget(R.Target):
         ops["read"] = self.op_read
         ops["write"] = self.op_write
         ops["punch"] = self.op_punch
+        ops["glimpse_bulk"] = self.op_glimpse_bulk
         ops["statfs"] = self.op_statfs
         ops["sync"] = self.op_sync
         ops["list_objects"] = self.op_list_objects
@@ -111,6 +112,27 @@ class OstTarget(R.Target):
     def op_getattr(self, req: R.Request) -> R.Reply:
         b = req.body
         return R.Reply(data=self._wrap(self.obd.getattr, b["group"], b["oid"]))
+
+    def op_glimpse_bulk(self, req: R.Request) -> R.Reply:
+        """Vectored glimpse (§7.7): ONE RPC answers size/mtime for MANY
+        objects of this OST — a striped-directory scan ships one of
+        these per OST instead of one getattr per stripe object. Each
+        object's LVB merges disk state with what PW holders report over
+        glimpse ASTs, so writers keep their locks and caches."""
+        out = []
+        for g, o in req.body["objects"]:
+            try:
+                a = self.obd.getattr(g, o)
+            except obd_mod.ObdError:
+                out.append(None)
+                continue
+            lvb = self.ldlm.glimpse_lvb(
+                ("ext", g, o), base={"size": a["size"],
+                                     "mtime": a["mtime"]})
+            out.append({"size": lvb.get("size", 0),
+                        "mtime": lvb.get("mtime", 0.0)})
+        self.sim.stats.count("ost.glimpse_objects", len(out))
+        return R.Reply(data={"attrs": out}, bulk_nbytes=R.wire_size(out))
 
     def op_setattr(self, req: R.Request) -> R.Reply:
         b = req.body

@@ -12,7 +12,13 @@ POSIX-ish API over the LMV (metadata) + LOV (data) stacks:
     with grants (ch. 10, 28.5);
   * size/mtime: while a file is open for write the OSTs own mtime/size;
     `close` ships them to the MDS (§6.9.1); `stat` consults the OSTs when
-    the MDS flag says so;
+    the MDS flag says so — via batched glimpse ASTs that leave the
+    writers' PW locks and caches intact (§7.7);
+  * metadata read-path batching (ISSUE-5): readdir-plus paged scans
+    (`dir_pages`), a fid-keyed attribute cache valid exactly while the
+    covering DLM lock is held (revocation-invalidated like the dentry
+    cache), and a statahead pipeline prefetching attr windows for
+    sequential stat patterns (`statahead_max`);
   * optional metadata write-back-cache mode for create-heavy directories
     (ch. 17).
 """
@@ -20,8 +26,10 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from collections import defaultdict
 from typing import Optional
 
+from repro.core import fail as fail_mod
 from repro.core import lov as lov_mod
 from repro.core import mdc as mdc_mod
 from repro.core import osc as osc_mod
@@ -58,6 +66,38 @@ class Dentry:
     fid: tuple | None            # None = negative entry
     attrs: dict | None
     lock_handle: int | None      # validity = lock still held
+    # which Mdc's lock cache holds the covering lock (split-dir bucket
+    # pages are covered by the BUCKET MDS's lock, not the master's);
+    # None = the parent fid's own Mdc (the common case)
+    mdc: object = None
+
+
+@dataclasses.dataclass
+class CachedAttr:
+    """One fid's cached attributes (+EA), valid exactly while the
+    covering DLM lock — the PR lock of a directory the inode is linked
+    in — is still in `mdc`'s lock cache. The MDS revokes that lock on
+    ANY attr change (setattr/close/open-for-write) via the inode's
+    pfids, so validity mirrors the dentry cache (ISSUE-5)."""
+    attrs: dict
+    ea: dict
+    mdc: object
+    lock_handle: int
+
+
+class _Statahead:
+    """Per-directory sequential-stat detector: the metadata analogue of
+    the PR 4 readahead detector. `order` is the last readdir(-plus)
+    order; stats walking it in order ramp a prefetch window."""
+
+    __slots__ = ("order", "index", "pos", "run", "fetched")
+
+    def __init__(self, order):
+        self.order = list(order)           # [(name, fid), ...]
+        self.index = {n: i for i, (n, _) in enumerate(self.order)}
+        self.pos = -1                      # index of the last stat
+        self.run = 0                       # sequential-run length
+        self.fetched = 0                   # prefetch horizon (index)
 
 
 class LustreClient:
@@ -68,7 +108,9 @@ class LustreClient:
                  max_rpcs_in_flight: int | None = None,
                  vectored_brw: bool | None = None,
                  max_cached_mb: int | None = None,
-                 readahead_pages: int | None = None):
+                 readahead_pages: int | None = None,
+                 dir_pages: int | None = None,
+                 statahead_max: int | None = None):
         self.cluster = cluster
         self.rpc = cluster.make_client_rpc(node_idx)
         self.lmv = cluster.make_lmv(self.rpc)
@@ -82,16 +124,35 @@ class LustreClient:
         self.lov = cluster.make_lov(self.rpc, **osc_kw)
         self.readahead_pages = cluster.readahead_pages \
             if readahead_pages is None else readahead_pages
+        # metadata read-path knobs (ISSUE-5): readdir-plus page size
+        # (0 = per-entry seed path) + statahead prefetch window (0 off)
+        self.dir_pages = cluster.dir_pages if dir_pages is None \
+            else dir_pages
+        self.statahead_max = cluster.statahead_max if statahead_max is None \
+            else statahead_max
         self.sim = cluster.sim
         # eviction by an MDS voids every lock that guards the dentry
-        # cache: drop the locks (local-only) and the dentries with them
+        # cache: drop the locks (local-only) and the dentries with them;
+        # lock revocation (AST/cancel) drops the attr-cache entries the
+        # lock covered — same machinery as the OSC clean cache (PR 4)
         for mdc in self.lmv.mdcs:
             mdc.imp.evict_cbs.append(
                 lambda m=mdc: self._on_mds_evicted(m))
+            mdc.locks.revoke_cbs.append(
+                lambda lk, m=mdc: self._attrs_revoked(m, lk))
         self.default_stripe_count = default_stripe_count or len(
             cluster.ost_targets)
         self.default_stripe_size = default_stripe_size
         self.dcache: dict[tuple, Dentry] = {}     # (parent, name) -> Dentry
+        # fid-keyed attribute cache, validity tied to the covering DLM
+        # lock exactly like the dentry cache (ISSUE-5 tentpole)
+        self.attr_cache: dict[tuple, CachedAttr] = {}
+        self._attr_by_lock: dict[tuple, set] = defaultdict(set)
+        # statahead pipeline state: per-dir detectors + one-shot results
+        # for entries no held lock covers (remote-MDT attrs, glimpses)
+        self._sa: dict[tuple, _Statahead] = {}
+        self._sa_attrs: dict[tuple, dict] = {}
+        self._sa_glimpse: dict[tuple, dict] = {}
         self._fh = itertools.count(1)
         self.handles: dict[int, FileHandle] = {}
         self.wbc: mdc_mod.WbcCache | None = None
@@ -112,7 +173,8 @@ class LustreClient:
             return False
         if d.lock_handle is None:
             return False
-        return d.lock_handle in mdc.locks.locks
+        owner = d.mdc if d.mdc is not None else mdc
+        return d.lock_handle in owner.locks.locks
 
     def _lookup(self, parent: tuple, name: str) -> Dentry:
         key = (tuple(parent), name)
@@ -121,17 +183,64 @@ class LustreClient:
             self.sim.stats.count("fs.dcache_hit")
             return self.dcache[key]
         lk, data = self.lmv.getattr_lock(parent, name, want_ea=True)
+        idx = data.get("_granted_by")
+        gmdc = self.lmv.mdcs[idx] if idx is not None else mdc
         if data.get("status", 0) == -2:
-            d = Dentry(None, None, lk.handle if lk else None)
+            d = Dentry(None, None, lk.handle if lk else None, gmdc)
         elif data.get("status", 0) != 0:
             raise FsError(data["status"], name)
         else:
             d = Dentry(tuple(data["attrs"]["fid"]), dict(data["attrs"]),
-                       lk.handle if lk else None)
+                       lk.handle if lk else None, gmdc)
             if "ea" in data:
                 d.attrs["_ea"] = data["ea"]
+            # the looked-up attrs ride under the same dir lock as the
+            # dentry — cache them (the 2nd-hop remote path is flagged
+            # `_remote`: its attrs have no covering lock here)
+            if lk is not None and not data.get("_remote"):
+                self._attr_put(d.fid, data["attrs"], data.get("ea"),
+                               gmdc, lk.handle)
         self.dcache[key] = d
         return d
+
+    # -------------------------------------------------- fid attr cache
+    def _attr_put(self, fid, attrs, ea, mdc, lock_handle):
+        """Cache `fid`'s attrs under a covering dir lock. No lock, no
+        cache — validity IS the lock (§7.4 applied to metadata)."""
+        if lock_handle is None or lock_handle not in mdc.locks.locks:
+            return
+        fid = tuple(fid)
+        self._attr_drop(fid)
+        self.attr_cache[fid] = CachedAttr(dict(attrs), dict(ea or {}),
+                                          mdc, lock_handle)
+        self._attr_by_lock[(id(mdc), lock_handle)].add(fid)
+
+    def _attr_drop(self, fid):
+        e = self.attr_cache.pop(tuple(fid), None)
+        if e is not None:
+            s = self._attr_by_lock.get((id(e.mdc), e.lock_handle))
+            if s:
+                s.discard(tuple(fid))
+        # one-shot statahead results for this fid die with it
+        self._sa_attrs.pop(tuple(fid), None)
+        self._sa_glimpse.pop(tuple(fid), None)
+
+    def _attr_get(self, fid) -> CachedAttr | None:
+        e = self.attr_cache.get(tuple(fid))
+        if e is None:
+            return None
+        if e.lock_handle not in e.mdc.locks.locks:
+            self._attr_drop(fid)               # lock gone: attrs invalid
+            return None
+        return e
+
+    def _attrs_revoked(self, mdc, lk):
+        """A dir lock left the MDC lock cache (blocking AST / cancel /
+        eviction): every attr it covered is unprotected — drop them."""
+        for fid in self._attr_by_lock.pop((id(mdc), lk.handle), ()):
+            dropped = self.attr_cache.pop(fid, None)
+            if dropped is not None:
+                self.sim.stats.count("fs.attr_invalidate")
 
     def resolve(self, path: str, *, follow: bool = True,
                 _depth: int = 0) -> tuple:
@@ -167,14 +276,27 @@ class LustreClient:
         return parent, parts[-1]
 
     def _invalidate(self, parent: tuple, name: str):
-        self.dcache.pop((tuple(parent), name), None)
+        """Drop our own cached view of an entry we just mutated: the MDS
+        spares OUR dir lock from the revocation storm (we are the
+        requester), so fixing our caches is our job — the entry's
+        dentry + attrs, and the parent dir's own attrs (its
+        nlink/nentries changed)."""
+        d = self.dcache.pop((tuple(parent), name), None)
+        if d is not None and d.fid is not None:
+            self._attr_drop(d.fid)
+        self._attr_drop(tuple(parent))
 
     def _on_mds_evicted(self, mdc):
         """The MDS evicted us: the PR locks guarding cached dentries are
-        gone server-side — drop them locally and purge the dcache."""
+        gone server-side — drop them locally and purge the dcache (the
+        drop_all fires revoke_cbs, which purge the attr cache entries
+        those locks covered) plus the one-shot statahead results."""
         self.sim.stats.count("fs.evicted_invalidate")
         mdc.locks.drop_all()
         self.dcache.clear()
+        self._sa.clear()
+        self._sa_attrs.clear()
+        self._sa_glimpse.clear()
 
     # ------------------------------------------------------------- files
     def creat(self, path: str, *, stripe_count: int = 0,
@@ -197,6 +319,7 @@ class LustreClient:
         self._invalidate(parent, name)
         attrs = data["attrs"]
         fid = tuple(attrs["fid"])
+        self._attr_drop(fid)       # open-for-write flips mtime_on_ost
         ea = data.get("ea", {})
         if data.get("created"):
             # client creates the data objects + writes the EA (§6.4.3)
@@ -295,6 +418,7 @@ class LustreClient:
                 a = self.lov.getattr(fh.lsm)
                 size, mtime = a["size"], max(a["mtime"], fh.mtime)
         self.lmv.close(fh.fid, fh.open_handle, size, mtime)
+        self._attr_drop(fh.fid)    # size/mtime just moved to the MDS
         self.handles.pop(id(fh), None)
 
     # ------------------------------------------------------------- dirs
@@ -321,19 +445,118 @@ class LustreClient:
 
     def readdir(self, path: str) -> dict:
         fid = self.resolve(path)
-        return {k: tuple(v)
-                for k, v in self.lmv.readdir(fid)["entries"].items()}
+        out = {k: tuple(v)
+               for k, v in self.lmv.readdir(fid)["entries"].items()}
+        # the listing order seeds the statahead detector: stats walking
+        # it sequentially will prefetch attr windows (ISSUE-5)
+        self._sa_record(fid, out.items())
+        return out
+
+    def _sa_record(self, dfid, order):
+        """Install a directory's statahead detector, keeping only the
+        most recently listed directories (a whole-namespace walk must
+        not pin a (name, fid) listing per directory forever)."""
+        self._sa.pop(tuple(dfid), None)
+        self._sa[tuple(dfid)] = _Statahead(order)
+        while len(self._sa) > 64:
+            self._sa.pop(next(iter(self._sa)))
+
+    def _absorb_page(self, dfid, mdc, lk, page):
+        """Feed one readdir-plus page into the dentry + attr caches:
+        every entry is covered by the page's dir/bucket PR lock. Attrs
+        of entries whose inode a peer MDT owns (flagged `remote`) have
+        no covering lock — they serve this pass only."""
+        if lk is None:
+            return
+        dfid = tuple(dfid)
+        for name, e in page.items():
+            attrs = e.get("attrs")
+            if attrs is None:
+                continue
+            fid = tuple(e["fid"])
+            self.dcache[(dfid, name)] = Dentry(fid, dict(attrs),
+                                               lk.handle, mdc)
+            if not e.get("remote"):
+                self._attr_put(fid, attrs, e.get("ea"), mdc, lk.handle)
+
+    def _iter_plus(self, dfid):
+        """readdir-plus iteration of ONE directory: yields (name, fid,
+        attrs, ea) while absorbing pages into the caches and recording
+        the statahead order."""
+        order = []
+        for mdc, lk, page in self.lmv.readdir_plus(dfid, self.dir_pages):
+            self._absorb_page(dfid, mdc, lk, page)
+            for name, e in page.items():
+                fid = tuple(e["fid"])
+                attrs, ea = e.get("attrs"), e.get("ea") or {}
+                if attrs is None:
+                    # raced removal of a remote inode: sync fallback
+                    try:
+                        d = self.lmv.getattr(fid, want_ea=True)
+                    except R.RpcError:
+                        continue
+                    attrs, ea = d["attrs"], d.get("ea", {})
+                order.append((name, fid))
+                yield name, fid, dict(attrs), ea
+        self._sa_record(dfid, order)
+
+    def ls_l(self, path: str) -> dict:
+        """`ls -l`: name -> full stat attrs for every entry. With
+        `dir_pages` set the listing is readdir-plus paged — attrs + LOV
+        EAs ride the directory pages under the dir's PR lock, and the
+        sizes of files under write are resolved with ONE batched glimpse
+        per OST across ALL of them. dir_pages=0 keeps the seed shape
+        (readdir + per-entry stat), still statahead-accelerated when
+        statahead_max > 0."""
+        if not self.dir_pages:
+            base = "/" + "/".join(self._parts(path))
+            base = "" if base == "/" else base
+            return {name: self.stat(f"{base}/{name}")
+                    for name in self.readdir(path)}
+        fid = self.resolve(path)
+        out: dict[str, dict] = {}
+        glimpse_lsm: dict[tuple, lov_mod.StripeMd] = {}
+        glimpse_names: dict[tuple, list] = {}   # fid -> EVERY linked name
+        for name, f, a, ea in self._iter_plus(fid):
+            if a.get("mtime_on_ost") and "lov" in ea:
+                glimpse_lsm[f] = lov_mod.StripeMd.from_ea(ea["lov"])
+                glimpse_names.setdefault(f, []).append(name)
+            if "lov" in ea:
+                a["stripe_count"] = ea["lov"]["stripe_count"]
+                a["stripe_size"] = ea["lov"]["stripe_size"]
+            out[name] = a
+        if glimpse_lsm:
+            # size/mtime of files under write live on the OSTs (§6.9.1):
+            # one vectored glimpse per OST covers every such file
+            res = self.lov.glimpse_files(glimpse_lsm)
+            for f, names in glimpse_names.items():
+                g = res[f]
+                for name in names:     # hard links share the one answer
+                    out[name] = dict(out[name], size=g["size"],
+                                     mtime=max(out[name]["mtime"],
+                                               g["mtime"]))
+        return out
 
     def walk(self):
-        """Iterative whole-namespace walk over readdir/getattr ground
-        truth (split-directory buckets included via the LMV): yields
-        (parent_fid, name, fid, attrs) for every directory entry. This is
-        the 'initial scan' primitive Robinhood-style consumers bootstrap
-        from (tools.audit.ChangelogAuditor(bootstrap=True))."""
+        """Iterative whole-namespace walk (split-directory buckets
+        included via the LMV): yields (parent_fid, name, fid, attrs) for
+        every directory entry — the 'initial scan' primitive
+        Robinhood-style consumers bootstrap from
+        (tools.audit.ChangelogAuditor(bootstrap=True)). With `dir_pages`
+        set it rides readdir-plus: attrs arrive WITH the directory pages
+        (O(N/page) RPCs + one getattr_bulk per MDT per page for
+        cross-MDT inodes), instead of one getattr per entry."""
         stack = [ROOT]
         seen = {ROOT}
         while stack:
             dfid = stack.pop()
+            if self.dir_pages:
+                for name, fid, attrs, _ in self._iter_plus(dfid):
+                    yield tuple(dfid), name, fid, attrs
+                    if attrs["type"] == "dir" and fid not in seen:
+                        seen.add(fid)
+                        stack.append(fid)
+                continue
             for name, fid in self.lmv.readdir(dfid)["entries"].items():
                 fid = tuple(fid)
                 attrs = self.lmv.getattr(fid)["attrs"]
@@ -354,6 +577,7 @@ class LustreClient:
         self.lmv.reint({"type": "link", "parent": parent, "name": name,
                         "fid": fid})
         self._invalidate(parent, name)
+        self._attr_drop(fid)       # its nlink just changed
 
     def rename(self, old: str, new: str):
         sp, sn = self._resolve_parent(old)
@@ -384,20 +608,176 @@ class LustreClient:
             lsm = lov_mod.StripeMd.from_ea(ea["lov"])
             self.lov.destroy(lsm, rep.data.get("cookies"))
 
+    # -------------------------------------------------------- statahead
+    def _sa_note_stat(self, dfid, name: str):
+        """Statahead detector: a stat hitting the next entry of the last
+        readdir order extends a sequential run; at run >= 2 the next
+        window of entries' attrs is prefetched in batch (the metadata
+        analogue of the PR 4 sequential-read detector)."""
+        st = self._sa.get(tuple(dfid))
+        if st is None or self.statahead_max <= 0:
+            return
+        i = st.index.get(name)
+        if i is None:
+            return
+        st.run = st.run + 1 if i == st.pos + 1 else 1
+        st.pos = i
+        if st.run >= 2 and i + 1 < len(st.order) \
+                and st.fetched < i + 1 + self.statahead_max // 2:
+            self._sa_prefetch(tuple(dfid), st, i + 1)
+
+    def _sa_prefetch(self, dfid, st: _Statahead, lo: int):
+        """Prefetch the next statahead window: ONE getattr_bulk per
+        owning MDT (issued concurrently), then ONE vectored glimpse per
+        OST for the fetched files whose size/mtime live on the OSTs.
+        Attrs of entries the directory's PR lock covers land in the
+        coherent attr cache; the rest (cross-MDT inodes, glimpses) are
+        one-shot. An armed `mds.statahead` failpoint (drop/crash —
+        client-side, crash degrades to drop) abandons the prefetch: the
+        following stats simply stay synchronous."""
+        hi = min(len(st.order), lo + self.statahead_max)
+        lo = max(lo, st.fetched)
+        window = [(n, tuple(f)) for n, f in st.order[lo:hi]
+                  if self._attr_get(f) is None
+                  and tuple(f) not in self._sa_attrs]
+        if not window:
+            st.fetched = max(st.fetched, hi)
+            return
+        act = fail_mod.state.check("mds.statahead")
+        if act in ("drop", "crash"):
+            self.sim.stats.count("fs.statahead_dropped")
+            return
+        dmdc = self.lmv.mdc_for_fid(dfid)
+        lk = dmdc.locks.match(("fid", *tuple(dfid)), "PR")
+        if lk is None:
+            # one PR enqueue on the dir covers the whole pipeline: the
+            # MDS revokes it on any namespace or child-attr change
+            lk, _, _ = dmdc.locks.enqueue(("fid", *tuple(dfid)), "PR")
+        by_mdc: dict = {}
+        for n, f in window:
+            by_mdc.setdefault(self.lmv.mdc_for_fid(f), []).append((n, f))
+
+        def fetch(m, items):
+            return m, items, m.getattr_bulk([f for _, f in items],
+                                            want_ea=True)
+
+        outs = self.sim.parallel([(lambda m=m, it=it: fetch(m, it))
+                                  for m, it in by_mdc.items()])
+        glimpse: dict = {}
+        for m, items, attrs in outs:
+            for (n, f), a in zip(items, attrs):
+                if a is None:
+                    continue
+                if m is dmdc and lk is not None:
+                    self._attr_put(f, a["attrs"], a.get("ea"),
+                                   dmdc, lk.handle)
+                    self.dcache[(tuple(dfid), n)] = Dentry(
+                        f, dict(a["attrs"]), lk.handle, dmdc)
+                else:
+                    # no covering lock on the OWNING MDT — serve once,
+                    # valid only while the dir lock the prefetch ran
+                    # under survives (a remote setattr forwards its
+                    # revocation to that lock via the inode's
+                    # remote_pfids, killing this entry with it)
+                    self._sa_attrs[f] = (dmdc, lk.handle if lk else None,
+                                         a)
+                ea = a.get("ea") or {}
+                if a["attrs"].get("mtime_on_ost") and "lov" in ea:
+                    glimpse[f] = lov_mod.StripeMd.from_ea(ea["lov"])
+        if glimpse:
+            for f, g in self.lov.glimpse_files(glimpse).items():
+                self._sa_glimpse[f] = (dmdc, lk.handle if lk else None, g)
+        st.fetched = max(st.fetched, hi)
+        # one-shot results are disposable (an unconsumed entry just
+        # costs a sync re-fetch): bound both pools
+        if len(self._sa_attrs) > 4096:
+            self._sa_attrs.clear()
+        if len(self._sa_glimpse) > 4096:
+            self._sa_glimpse.clear()
+        self.sim.stats.count("fs.statahead")
+        self.sim.stats.count("fs.statahead_entries", len(window))
+
+    def _sa_pop(self, pool: dict, fid):
+        """Consume a one-shot statahead result iff the dir lock it was
+        prefetched under is STILL held — a revocation (including one
+        forwarded cross-MDT) since the prefetch voids it."""
+        e = pool.pop(tuple(fid), None)
+        if e is None:
+            return None
+        mdc, handle, payload = e
+        if handle is None or handle not in mdc.locks.locks:
+            self.sim.stats.count("fs.statahead_stale_dropped")
+            return None
+        return payload
+
     # ------------------------------------------------------------- stat
     def stat(self, path: str) -> dict:
+        parts = self._parts(path)
         fid = self.resolve(path)
-        d = self.lmv.getattr(fid, want_ea=True)
-        a = d["attrs"]
-        if a.get("mtime_on_ost") and "lov" in d.get("ea", {}):
-            # size/mtime live on the OSTs while a writer is active (§6.9.1)
-            lsm = lov_mod.StripeMd.from_ea(d["ea"]["lov"])
-            oa = self.lov.getattr(lsm)
-            a = dict(a, size=oa["size"], mtime=max(a["mtime"], oa["mtime"]))
-        if "lov" in d.get("ea", {}):
-            a["stripe_count"] = d["ea"]["lov"]["stripe_count"]
-            a["stripe_size"] = d["ea"]["lov"]["stripe_size"]
+        if parts:
+            # statahead bookkeeping keyed by the parent as spelled in
+            # the path (a symlinked parent just misses the detector)
+            try:
+                parent = self.resolve("/".join(parts[:-1])) \
+                    if parts[:-1] else ROOT
+                self._sa_note_stat(parent, parts[-1])
+            except FsError:
+                pass
+        ca = self._attr_get(fid)
+        if ca is not None:
+            # warm path: the covering dir lock is still held — zero RPCs
+            self.sim.stats.count("fs.attr_hit")
+            a, ea = dict(ca.attrs), dict(ca.ea)
+        else:
+            one = self._sa_pop(self._sa_attrs, fid)
+            if one is not None:
+                self.sim.stats.count("fs.statahead_hit")
+                a, ea = dict(one["attrs"]), dict(one.get("ea") or {})
+            else:
+                self.sim.stats.count("fs.attr_miss")
+                d = self.lmv.getattr(fid, want_ea=True)
+                a, ea = dict(d["attrs"]), dict(d.get("ea") or {})
+        if a.get("mtime_on_ost") and "lov" in ea:
+            # size/mtime live on the OSTs while a writer is active
+            # (§6.9.1): a statahead-prefetched glimpse answers for free,
+            # else one batched glimpse per OST (writers keep their locks)
+            g = self._sa_pop(self._sa_glimpse, fid)
+            if g is None:
+                g = self.lov.glimpse(lov_mod.StripeMd.from_ea(ea["lov"]))
+            a = dict(a, size=g["size"], mtime=max(a["mtime"], g["mtime"]))
+        if "lov" in ea:
+            a["stripe_count"] = ea["lov"]["stripe_count"]
+            a["stripe_size"] = ea["lov"]["stripe_size"]
         return a
+
+    def setattr(self, path: str, *, mode=None, uid=None, gid=None,
+                mtime=None, size=None) -> dict:
+        """mds_reint_setattr on the path's inode (chmod/chown/utimes/
+        metadata truncate). The MDS revokes every directory PR lock
+        covering cached copies of these attrs — ours included — so no
+        client ever serves them stale."""
+        fid = self.resolve(path)
+        attrs = {k: v for k, v in (("mode", mode), ("uid", uid),
+                                   ("gid", gid), ("mtime", mtime),
+                                   ("size", size)) if v is not None}
+        rep = self.lmv.reint({"type": "setattr", "fid": fid,
+                              "attrs": attrs})
+        self._attr_drop(fid)       # we changed them: our copy is stale
+        return rep.data["attrs"]
+
+    def chmod(self, path: str, mode: int) -> dict:
+        return self.setattr(path, mode=mode)
+
+    def truncate(self, path: str, size: int):
+        """Truncate: punch the stripe objects, then setattr the MDS size
+        (which revokes the attr-covering dir locks)."""
+        fid = self.resolve(path)
+        ca = self._attr_get(fid)
+        ea = dict(ca.ea) if ca is not None else \
+            self.lmv.getattr(fid, want_ea=True).get("ea", {})
+        if "lov" in ea:
+            self.lov.punch(lov_mod.StripeMd.from_ea(ea["lov"]), size)
+        self.setattr(path, size=size, mtime=self.sim.now)
 
     def exists(self, path: str) -> bool:
         try:

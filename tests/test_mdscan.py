@@ -1,0 +1,461 @@
+"""Metadata read-path batching (ISSUE-5 tentpole).
+
+Covers the acceptance criteria:
+  * readdir-plus: a directory scan costs O(N/page) MDS RPCs, entries
+    carry attrs + LOV EAs, split-dir buckets page at THEIR MDS and
+    cross-MDT inodes batch-resolve with one getattr_bulk per MDT;
+  * the fid attr cache: a warm re-stat of a scanned tree is ZERO RPCs,
+    and a second client's chmod/truncate/write-close invalidates via
+    blocking AST (plus a hypothesis property test: random stat/setattr
+    interleavings across two clients never serve stale attrs);
+  * statahead: sequential stats over a plain readdir prefetch attr
+    windows in batch; an armed `mds.statahead` drop degrades to correct
+    synchronous stats;
+  * batched glimpse: stat/scan of files under write asks each OST ONCE
+    for many objects via glimpse ASTs — writers keep their PW locks and
+    dirty caches.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                               # pragma: no cover
+    from _hyposhim import given, settings, strategies as st
+
+from repro.core import LustreCluster
+from repro.fsio import FsError, LustreClient
+
+
+def mk(**kw):
+    kw.setdefault("osts", 2)
+    kw.setdefault("mdses", 1)
+    kw.setdefault("clients", 3)
+    kw.setdefault("commit_interval", 256)
+    return LustreCluster(**kw)
+
+
+def mds_rpcs(c):
+    return sum(n for k, n in c.stats.counters.items()
+               if k.startswith("rpc.mds."))
+
+
+def all_rpcs(c):
+    """Every RPC of any kind (MDS, OST, DLM callbacks, ...)."""
+    return sum(n for k, n in c.stats.counters.items()
+               if k.startswith("rpc."))
+
+
+def build_tree(c, n, *, path="/scan", close=True, stripe_count=2,
+               idx=0):
+    fs = LustreClient(c, idx).mount()
+    fs.mkdir_p(path)
+    handles = []
+    for i in range(n):
+        fh = fs.creat(f"{path}/f{i:04d}", stripe_count=stripe_count)
+        fs.write(fh, b"x" * (512 * (1 + i % 3)))
+        if close:
+            fs.close(fh)
+        else:
+            handles.append(fh)
+    return fs, handles
+
+
+# ------------------------------------------------------------ readdir-plus
+
+def test_readdir_plus_pages_and_rpc_count():
+    c = mk(dir_pages=8)
+    build_tree(c, 32)
+    fs2 = LustreClient(c, 1).mount()
+    base_pages = c.stats.counters.get("mds.intent.readdir", 0)
+    base_getattr = c.stats.counters.get("rpc.mds.getattr", 0)
+    listing = fs2.ls_l("/scan")
+    assert len(listing) == 32
+    # 32 entries / 8 per page = 4 page RPCs, not one getattr per entry
+    assert c.stats.counters["mds.intent.readdir"] - base_pages == 4
+    assert c.stats.counters.get("rpc.mds.getattr", 0) == base_getattr
+
+
+def test_readdir_plus_attrs_match_ground_truth():
+    c = mk(dir_pages=8)
+    fs, _ = build_tree(c, 12)
+    fs.chmod("/scan/f0003", 0o600)
+    fs2 = LustreClient(c, 1).mount()
+    listing = fs2.ls_l("/scan")
+    truth = LustreClient(c, 2).mount()
+    for name, a in listing.items():
+        t = truth.stat("/scan/" + name)
+        assert a["size"] == t["size"], name
+        assert a["mode"] == t["mode"], name
+        assert a["stripe_count"] == t["stripe_count"], name
+    assert listing["f0003"]["mode"] == 0o600
+
+
+def test_warm_restat_of_scanned_tree_is_zero_rpcs():
+    """Acceptance: after a cold scan, re-statting every entry is served
+    entirely from the DLM-covered dentry + attr caches — ZERO RPCs of
+    any kind."""
+    c = mk(dir_pages=16)
+    build_tree(c, 48)
+    fs2 = LustreClient(c, 1).mount()
+    listing = fs2.ls_l("/scan")
+    base = all_rpcs(c)
+    for name in listing:
+        st_ = fs2.stat("/scan/" + name)
+        assert st_["size"] == listing[name]["size"]
+    assert all_rpcs(c) == base
+    assert c.stats.counters["fs.attr_hit"] >= 48
+
+
+def test_walk_rides_readdir_plus_pages():
+    c = mk(dir_pages=16)
+    fs, _ = build_tree(c, 40)
+    fs.mkdir("/scan/sub")
+    fh = fs.creat("/scan/sub/inner")
+    fs.close(fh)
+    fs2 = LustreClient(c, 1).mount()
+    base = mds_rpcs(c)
+    seen = {(tuple(p), n): a for p, n, f, a in fs2.walk()}
+    # 41 entries under /scan + sub's child + /scan itself
+    assert len(seen) == 43
+    # pages, not per-entry getattrs: far fewer MDS RPCs than entries
+    assert mds_rpcs(c) - base <= 10
+    # and a ground-truth spot check
+    truth = fs.stat("/scan/f0000")
+    got = next(a for (p, n), a in seen.items() if n == "f0000")
+    assert got["size"] == truth["size"]
+
+
+def test_dir_pages_zero_keeps_seed_shape():
+    c = mk(dir_pages=0, statahead_max=0)
+    build_tree(c, 8)
+    fs2 = LustreClient(c, 1).mount()
+    base = c.stats.counters.get("mds.intent.readdir", 0)
+    base_enq = c.stats.counters.get("rpc.mds.ldlm_enqueue", 0)
+    listing = fs2.ls_l("/scan")
+    assert len(listing) == 8
+    assert c.stats.counters.get("mds.intent.readdir", 0) == base
+    # per-entry path: one lookup enqueue per name (the attrs then ride
+    # the lookup's lock — the fid attr cache works even without pages)
+    assert c.stats.counters.get("rpc.mds.ldlm_enqueue", 0) - base_enq >= 8
+
+
+# ------------------------------------------------- split / cross-MDT dirs
+
+def test_readdir_plus_split_dir_pages_per_mdt():
+    c = LustreCluster(osts=2, mdses=2, clients=2, commit_interval=256,
+                      mds_split_threshold=8, dir_pages=8)
+    fs = LustreClient(c, 0).mount()
+    fs.mkdir("/big", mode=0o755)
+    names = [f"e{i:03d}" for i in range(24)]
+    for n in names:
+        fs.close(fs.creat(f"/big/{n}", stripe_count=1))
+    assert c.stats.counters.get("mds.dir_split", 0) >= 1
+    fs2 = LustreClient(c, 1).mount()
+    base_getattr = c.stats.counters.get("rpc.mds.getattr", 0)
+    listing = fs2.ls_l("/big")
+    assert sorted(listing) == names
+    # bucket pages at their MDS + batched remote resolution — never one
+    # plain getattr per name
+    assert c.stats.counters.get("rpc.mds.getattr", 0) - base_getattr \
+        <= len(names) // 4
+    truth = LustreClient(c, 0).mount()
+    for n in names[:6]:
+        assert listing[n]["size"] == truth.stat(f"/big/{n}")["size"]
+
+
+def test_readdir_plus_cross_mdt_inodes_batch_one_bulk_per_mdt():
+    """mkdir round-robins dirs onto peer MDTs (§6.7.1.2): a dir full of
+    subdirs has remote-inode entries. The LMV must resolve them with
+    getattr_bulk batches, not a getattr per name."""
+    c = LustreCluster(osts=2, mdses=2, clients=2, commit_interval=256,
+                      dir_pages=16)
+    fs = LustreClient(c, 0).mount()
+    fs.mkdir("/d")
+    for i in range(12):
+        fs.mkdir(f"/d/s{i:02d}")
+    fs2 = LustreClient(c, 1).mount()
+    base_bulk = c.stats.counters.get("rpc.mds.getattr_bulk", 0)
+    base_getattr = c.stats.counters.get("rpc.mds.getattr", 0)
+    listing = fs2.ls_l("/d")
+    assert len(listing) == 12
+    assert all(a["type"] == "dir" for a in listing.values())
+    assert c.stats.counters.get("rpc.mds.getattr_bulk", 0) > base_bulk
+    # one bulk per MDT per page, not one getattr per remote entry
+    assert c.stats.counters.get("rpc.mds.getattr", 0) - base_getattr <= 2
+
+
+# --------------------------------------------------- attr-cache coherency
+
+def test_remote_chmod_invalidates_cached_attrs():
+    c = mk(dir_pages=8)
+    build_tree(c, 4)
+    a = LustreClient(c, 1).mount()
+    b = LustreClient(c, 2).mount()
+    assert a.ls_l("/scan")["f0001"]["mode"] == 0o644
+    assert a.stat("/scan/f0001")["mode"] == 0o644       # warm, cached
+    b.chmod("/scan/f0001", 0o640)                       # AST revokes a's lock
+    assert a.stat("/scan/f0001")["mode"] == 0o640       # never stale
+    assert c.stats.counters["fs.attr_invalidate"] >= 1
+
+
+def test_remote_truncate_invalidates_cached_attrs():
+    c = mk(dir_pages=8)
+    build_tree(c, 4)
+    a = LustreClient(c, 1).mount()
+    b = LustreClient(c, 2).mount()
+    old = a.ls_l("/scan")["f0002"]["size"]
+    assert a.stat("/scan/f0002")["size"] == old
+    b.truncate("/scan/f0002", 7)
+    assert a.stat("/scan/f0002")["size"] == 7
+
+
+def test_remote_write_close_invalidates_cached_attrs():
+    c = mk(dir_pages=8)
+    build_tree(c, 4)
+    a = LustreClient(c, 1).mount()
+    b = LustreClient(c, 2).mount()
+    before = a.ls_l("/scan")["f0000"]["size"]
+    fh = b.open("/scan/f0000", "w")
+    b.write(fh, b"y" * 4096, offset=0)
+    # mtime_on_ost flipped: a's cached attrs were revoked, a live stat
+    # must glimpse the OSTs and see the writer's (unflushed) data
+    assert a.stat("/scan/f0000")["size"] == 4096
+    b.close(fh)
+    assert a.stat("/scan/f0000")["size"] == 4096 != before
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 1),       # acting client
+                          st.integers(0, 1),       # target file
+                          st.sampled_from(["stat", "chmod", "trunc"]),
+                          st.integers(0, 7)),      # op argument
+                min_size=1, max_size=24))
+def test_property_interleaved_stat_setattr_never_stale(ops):
+    """Random stat/setattr interleavings across two clients: a stat
+    NEVER returns attrs older than the last applied setattr (the DLM
+    revocation makes the attr cache coherent, not merely fast)."""
+    c = LustreCluster(osts=1, mdses=1, clients=2, commit_interval=64,
+                      dir_pages=4)
+    clients = [LustreClient(c, 0).mount(), LustreClient(c, 1).mount()]
+    clients[0].mkdir("/p")
+    model = {}
+    for i in range(2):
+        fh = clients[0].creat(f"/p/f{i}", stripe_count=1)
+        clients[0].write(fh, b"z" * 64)
+        clients[0].close(fh)
+        model[i] = {"mode": 0o644, "size": 64}
+    for cl in clients:                     # both caches warm
+        cl.ls_l("/p")
+    for who, tgt, op, arg in ops:
+        path = f"/p/f{tgt}"
+        if op == "stat":
+            got = clients[who].stat(path)
+            assert got["mode"] == model[tgt]["mode"], (who, tgt)
+            assert got["size"] == model[tgt]["size"], (who, tgt)
+        elif op == "chmod":
+            mode = 0o600 + arg
+            clients[who].chmod(path, mode)
+            model[tgt]["mode"] = mode
+        else:
+            clients[who].setattr(path, size=arg * 16)
+            model[tgt]["size"] = arg * 16
+
+
+# ------------------------------------------------------------- statahead
+
+def test_statahead_batches_sequential_stats():
+    """dir_pages=0 (no readdir-plus): sequential stats over a plain
+    readdir must still collapse into batched getattr_bulk windows."""
+    c = mk(dir_pages=0, statahead_max=8)
+    build_tree(c, 32)
+    fs2 = LustreClient(c, 1).mount()
+    names = sorted(fs2.readdir("/scan"))
+    truth = {n: LustreClient(c, 2).mount().stat("/scan/" + n)["size"]
+             for n in names[:3]}
+    base = mds_rpcs(c)
+    for n in names:
+        fs2.stat("/scan/" + n)
+    spent = mds_rpcs(c) - base
+    # 32 per-entry stats would cost >= 64 RPCs (lookup + getattr each);
+    # statahead turns the tail into ~32/8 bulk fetches
+    assert spent <= 16, spent
+    assert c.stats.counters["fs.statahead"] >= 3
+    assert c.stats.counters["fs.attr_hit"] >= 20
+    for n, size in truth.items():
+        assert fs2.stat("/scan/" + n)["size"] == size
+
+
+def test_statahead_random_order_does_not_prefetch():
+    c = mk(dir_pages=0, statahead_max=8)
+    build_tree(c, 16)
+    fs2 = LustreClient(c, 1).mount()
+    names = sorted(fs2.readdir("/scan"))
+    for n in names[::-1][:6]:              # backwards: never sequential
+        fs2.stat("/scan/" + n)
+    assert c.stats.counters.get("fs.statahead", 0) == 0
+
+
+def test_statahead_cross_mdt_prefetch_never_stale():
+    """One-shot prefetched attrs of cross-MDT inodes must die when the
+    inode changes: the owning MDT forwards a revoke_dir_locks to the
+    directory's MDT (Inode.remote_pfids), which kills the dir lock the
+    prefetch ran under — the next stat re-fetches."""
+    c = LustreCluster(osts=2, mdses=2, clients=3, commit_interval=256,
+                      dir_pages=0, statahead_max=8)
+    b = LustreClient(c, 0).mount()
+    b.mkdir("/d")
+    for i in range(8):
+        b.mkdir(f"/d/s{i}")                    # remote-MDT children
+    a = LustreClient(c, 1).mount()
+    names = sorted(a.readdir("/d"))
+    a.stat("/d/" + names[0])
+    a.stat("/d/" + names[1])                   # sequential: prefetch fires
+    assert c.stats.counters.get("fs.statahead", 0) >= 1
+    assert a._sa_attrs                         # one-shot entries pending
+    w = LustreClient(c, 2).mount()
+    w.chmod("/d/" + names[3], 0o700)           # remote-MDT setattr
+    assert a.stat("/d/" + names[3])["mode"] == 0o700   # never stale
+    assert c.stats.counters.get("fs.statahead_stale_dropped", 0) >= 1
+
+
+def test_statahead_obd_fail_drop_degrades_to_sync_stat():
+    """Satellite: an armed mds.statahead drop loses the prefetch; every
+    stat falls back to a correct synchronous fetch."""
+    c = mk(dir_pages=0, statahead_max=8)
+    build_tree(c, 12)
+    fs2 = LustreClient(c, 1).mount()
+    names = sorted(fs2.readdir("/scan"))
+    c.lctl("set_param", "fail_loc", "mds.statahead", 1, "drop")
+    sizes = [fs2.stat("/scan/" + n)["size"] for n in names]
+    assert c.stats.counters["fs.statahead_dropped"] == 1
+    assert c.sim.fail.hits.get("mds.statahead", 0) >= 1
+    truth = LustreClient(c, 2).mount()
+    assert sizes == [truth.stat("/scan/" + n)["size"] for n in names]
+
+
+# -------------------------------------------------------- batched glimpse
+
+def test_scan_glimpses_open_files_batched_per_ost():
+    """Files under write: ONE vectored glimpse RPC per OST covers every
+    such file's stripe objects (vs stripe_count RPCs per file)."""
+    c = mk(osts=4, dir_pages=16)
+    w, handles = build_tree(c, 8, close=False, stripe_count=2)
+    fs2 = LustreClient(c, 1).mount()
+    base = c.stats.counters.get("rpc.ost.glimpse_bulk", 0)
+    listing = fs2.ls_l("/scan")
+    assert c.stats.counters["rpc.ost.glimpse_bulk"] - base <= 4  # <= #OSTs
+    for i, fh in enumerate(handles):
+        assert listing[f"f{i:04d}"]["size"] == fh.max_written
+    # the writers' PW locks and dirty caches survived the whole scan
+    assert all(o.dirty_bytes >= 0 for o in w.lov.oscs)
+    assert sum(o.dirty_bytes for o in w.lov.oscs) > 0
+
+
+def test_glimpse_does_not_revoke_writer_lock():
+    """Satellite regression: a stat of a file under write asks the PW
+    holder for its LVB via a glimpse AST — the writer's dirty cache and
+    lock survive (before: the PR enqueue revoked them)."""
+    c = mk()
+    w = LustreClient(c, 0).mount()
+    fh = w.creat("/hot.bin", stripe_count=1)
+    w.write(fh, b"d" * 8192)                     # dirty, unflushed
+    dirty_before = sum(o.dirty_bytes for o in w.lov.oscs)
+    locks_before = sum(len(o.locks.locks) for o in w.lov.oscs)
+    assert dirty_before == 8192
+    r = LustreClient(c, 1).mount()
+    base_bl = c.stats.counters.get("dlm.blocking_ast", 0)
+    st_ = r.stat("/hot.bin")
+    assert st_["size"] == 8192                   # live size via glimpse
+    assert sum(o.dirty_bytes for o in w.lov.oscs) == dirty_before
+    assert sum(len(o.locks.locks) for o in w.lov.oscs) == locks_before
+    assert c.stats.counters["dlm.glimpse_ast"] >= 1
+    assert c.stats.counters.get("dlm.blocking_ast", 0) == base_bl
+    w.close(fh)
+    assert r.stat("/hot.bin")["size"] == 8192
+
+
+def test_osc_getattr_locked_glimpses_instead_of_revoking():
+    c = mk(osts=1)
+    a = c.make_oscs(c.make_client_rpc(0))[0]
+    b = c.make_oscs(c.make_client_rpc(1))[0]
+    oid = a.create(0)["oid"]
+    a.write(0, oid, 0, b"w" * 4096)              # dirty under PW
+    assert a.dirty_bytes == 4096
+    got = b.getattr_locked(0, oid)
+    assert got["size"] == 4096                   # writer's live size
+    assert a.dirty_bytes == 4096                 # cache NOT flushed
+    assert a.locks.locks                         # lock NOT revoked
+    assert c.stats.counters["osc.glimpse_answered"] >= 1
+
+
+def test_hard_linked_names_both_get_live_glimpse_size():
+    """Two links to one file under write: the batched glimpse answer
+    must land on EVERY linked name, not just the last one seen."""
+    c = mk(dir_pages=16)
+    w = LustreClient(c, 0).mount()
+    w.mkdir("/d")
+    fh = w.creat("/d/a", stripe_count=1)
+    w.write(fh, b"L" * 4096)                     # dirty, open, unflushed
+    w.link("/d/a", "/d/b")
+    listing = LustreClient(c, 1).mount().ls_l("/d")
+    assert listing["a"]["size"] == 4096
+    assert listing["b"]["size"] == 4096
+
+
+def test_own_update_does_not_revoke_own_dir_cache():
+    """The requester is spared from the revocation storm (it fixes its
+    own caches locally): creating one more file must not tear down the
+    creator's cached attrs for the directory's OTHER entries."""
+    c = mk(dir_pages=16)
+    fs, _ = build_tree(c, 8)
+    listing = fs.ls_l("/scan")
+    base_ast = c.stats.counters.get("dlm.client_bl_ast", 0)
+    fs.close(fs.creat("/scan/extra"))            # own create
+    assert c.stats.counters.get("dlm.client_bl_ast", 0) == base_ast
+    base = all_rpcs(c)
+    assert fs.stat("/scan/f0003")["size"] == listing["f0003"]["size"]
+    assert all_rpcs(c) == base                   # still warm
+    # and the dir's own attrs were self-invalidated, not served stale
+    assert fs.stat("/scan")["nentries"] == 9
+
+
+def test_readdir_plus_pagination_stable_under_mutation():
+    """Name-cursor paging: an unlink/create between two page RPCs must
+    not skip or duplicate entries that existed for the whole scan."""
+    c = mk(dir_pages=4)
+    fs, _ = build_tree(c, 12)
+    fs2 = LustreClient(c, 1).mount()
+    dfid = fs2.resolve("/scan")
+    pages = fs2.lmv.readdir_plus(dfid, 4)
+    _, _, first = next(pages)                    # page 1 = f0000..f0003
+    fs.unlink("/scan/f0000")                     # mutate mid-scan
+    fs.close(fs.creat("/scan/f0001a"))
+    seen = list(first)
+    for _, _, page in pages:
+        seen.extend(page)
+    survivors = [f"f{i:04d}" for i in range(1, 12)]
+    assert len(seen) == len(set(seen))           # no duplicates
+    assert set(survivors) <= set(seen)           # nothing skipped
+
+
+# ------------------------------------------------------------------ misc
+
+def test_md_cache_rollup_in_procfs():
+    c = mk(dir_pages=8)
+    build_tree(c, 8)
+    fs2 = LustreClient(c, 1).mount()
+    fs2.ls_l("/scan")
+    fs2.stat("/scan/f0001")
+    mc = c.procfs()["md_cache"]
+    assert mc["attr_hits"] >= 1
+    assert mc["readdir_plus_pages"] >= 1
+
+
+def test_readdir_plus_enoent_and_enotdir():
+    c = mk(dir_pages=8)
+    fs, _ = build_tree(c, 2)
+    with pytest.raises(FsError):
+        fs.ls_l("/nope")
+    fs2 = LustreClient(c, 1).mount()
+    listing = fs2.ls_l("/")
+    assert "scan" in listing and listing["scan"]["type"] == "dir"

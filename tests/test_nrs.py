@@ -145,6 +145,84 @@ def test_orr_end_to_end_accounting():
     assert info["per_object"][f"0:{o2}"] >= 4
 
 
+# --------------------------------------------------------------- orr_disk
+
+def test_orr_disk_contiguous_stream_batches_without_seeks():
+    """ISSUE-5 satellite (ROADMAP open item): a BRW continuing exactly
+    where the object's last one ended is batched with it — the seek
+    component of the seek-aware cost model is refunded, so a contiguous
+    stream's chain is shorter than under plain orr."""
+    seek = 2e-4
+    cost = 1e-3
+    disk = N.make_policy("orr_disk", None, seek_cost=seek)
+    orr = N.make_policy("orr", None)
+
+    def contig(i):
+        return R.Request(opcode="write", client_uuid="c", body={
+            "group": 0, "oid": 1,
+            "niobufs": [{"offset": i * 4096, "data": b"x" * 4096}]})
+
+    d_starts = [disk.schedule(contig(i), 0.0, cost) for i in range(8)]
+    o_starts = [orr.schedule(contig(i), 0.0, cost) for i in range(8)]
+    assert disk.seeks_saved == 7
+    # the 8th request's START accumulates the 6 refunds of requests
+    # 2..7 (its own refund shortens its chain END, not its start)
+    assert abs((o_starts[-1] - d_starts[-1]) - 6 * seek) < 1e-12
+    assert disk.info()["seeks_saved"] == 7
+
+
+def test_orr_disk_scattered_stream_pays_full_seeks():
+    disk = N.make_policy("orr_disk", None, seek_cost=2e-4)
+    for i in [5, 1, 9, 3, 12]:                 # never contiguous
+        disk.schedule(R.Request(opcode="write", client_uuid="c", body={
+            "group": 0, "oid": 1,
+            "niobufs": [{"offset": i * 65536, "data": b"x" * 4096}]}),
+            0.0, 1e-3)
+    assert disk.seeks_saved == 0
+
+
+def test_orr_disk_cold_object_fairness_preserved():
+    """Contiguity batching must not break ORR's fairness: a request to
+    a cold object is still served immediately under a hot backlog, and
+    interleaved streams keep their per-object contiguity tracking."""
+    disk = N.make_policy("orr_disk", None, seek_cost=2e-4)
+
+    def req(oid, off):
+        return R.Request(opcode="write", client_uuid="c", body={
+            "group": 0, "oid": oid,
+            "niobufs": [{"offset": off, "data": b"x" * 4096}]})
+
+    # interleaved: hot object 1 streams contiguously, object 2 scatters
+    for i in range(6):
+        disk.schedule(req(1, i * 4096), 0.0, 1e-3)
+        disk.schedule(req(2, ((i * 7) % 13) * 65536), 0.0, 1e-3)
+    # a brand-new object starts NOW despite both backlogs
+    assert disk.schedule(req(3, 0), 0.0, 1e-3) == 0.0
+    # object 1's stream stayed contiguous even though object 2's
+    # requests arrived between its BRWs (batching by contiguity per
+    # object, not by arrival order)
+    assert disk.seeks_saved == 5
+
+
+def test_orr_disk_end_to_end_seek_count():
+    c = mk(nrs_policy="orr_disk",
+           nrs_params={"seek_cost": 4e-5})
+    osc = osc_for(c, 0)
+    o1 = osc.create(0)["oid"]
+    o2 = osc.create(0)["oid"]
+    for i in range(6):                          # interleaved streams
+        osc.write(0, o1, i * 4096, b"a" * 4096)
+        osc.write(0, o2, i * 131072, b"b" * 4096)   # scattered
+    info = c.ost_targets[0].service.policy.info()
+    assert info["policy"] == "orr_disk"
+    # o1's sequential stream was batched; o2's scattered one was not
+    assert info["seeks_saved"] >= 5
+    assert info["per_object"][f"0:{o1}"] >= 6
+    # and the switchable-policy plumbing works end to end
+    c.lctl("nrs", c.ost_targets[0].uuid, "orr_disk", {"seek_cost": 1e-4})
+    assert c.ost_targets[0].service.policy.seek_cost == 1e-4
+
+
 # -------------------------------------------------------------------- wfq
 
 def test_wfq_shares_by_weight():

@@ -296,8 +296,13 @@ def test_mds_eviction_purges_dentry_cache():
     mds = c.mds_targets[0]
     mds.evicted.add(fs.rpc.uuid)               # server-side eviction
     mds.ldlm.evict_client(fs.rpc.uuid)
-    assert fs.stat("/d/f")["type"] == "file"   # -107 -> reconnect works
+    # the client only learns of the eviction when it next talks to the
+    # MDS (a warm stat is served from the attr/dentry caches with zero
+    # RPCs since ISSUE-5) — force one RPC, then everything purges
+    fs.mkdir("/d2")                            # -107 -> reconnect + purge
     assert c.stats.counters["fs.evicted_invalidate"] >= 1
+    assert not fs.attr_cache
+    assert fs.stat("/d/f")["type"] == "file"   # re-fetched, still correct
     assert c.stats.counters["rpc.evicted_reconnect"] >= 1
 
 

@@ -251,6 +251,10 @@ def _sweep_workload(fs):
     fs.link("/d1/f", "/d2/lnk")
     fs.symlink("/d1/f", "/d2/sym")
     fs.rename("/top", "/d2/moved")               # cross-MDT rename
+    # sequential stats in readdir order drive the statahead pipeline
+    # (the mds.statahead failpoint site) through every crash point
+    for name in fs.readdir("/d2"):
+        fs.stat("/d2/" + name)
     fs.rename("/d1/f", "/d1/g")
     fs.unlink("/d2/lnk")
     fs.unlink("/d2/moved")
