@@ -1,0 +1,97 @@
+"""Untar-shaped metadata burst: the write-back cache trajectory (ch. 17).
+
+Workload: what `tar -x` does to a filesystem — a small directory tree,
+then a burst of file creates each followed by a data write, a close and
+a mode-fixing setattr. Modes:
+
+  * cold — wbc_auto off: every create is an open intent, every chmod a
+    reint, every close an MDS close (the seed shape: one-ish RPC per
+    metadata op);
+  * wbc  — wbc_auto on: the first metadata write under the tree enters
+    write-back mode (§6.5.2), ops apply to the local shadow, and the
+    final sync reintegrates everything in `wbc_batch`-sized reint_batch
+    RPCs (§6.5.3, the InterMezzo property §2.4).
+
+`untar_metrics()` feeds the `untar` section of BENCH_rpc.json; the gate
+in benchmarks/run.py enforces: the WBC burst issues <= N/8 MDS reint
+RPCs, >= 8x fewer reint RPCs than cold (the ISSUE-6 acceptance bar),
+and no regression vs the committed WBC reint-RPC count.
+"""
+from __future__ import annotations
+
+from benchmarks.common import save, table
+from repro.core import LustreCluster
+from repro.fsio import LustreClient
+
+N_DIRS = 10
+N_FILES = 1000
+FILE_BYTES = 512
+
+
+def reint_rpcs(c) -> int:
+    """MDS namespace-update RPCs: single reints + WBC batch flushes."""
+    cnt = c.stats.counters
+    return cnt.get("rpc.mds.reint", 0) + cnt.get("rpc.mds.reint_batch", 0)
+
+
+def md_rpcs(c) -> int:
+    return sum(n for k, n in c.stats.counters.items()
+               if k.startswith("rpc.mds."))
+
+
+def untar(fs):
+    fs.mkdir("/untar")
+    for d in range(N_DIRS):
+        fs.mkdir(f"/untar/d{d}")
+    data = b"t" * FILE_BYTES
+    for i in range(N_FILES):
+        path = f"/untar/d{i % N_DIRS}/f{i:04d}"
+        fh = fs.creat(path)
+        fs.write(fh, data)
+        fs.close(fh)
+        fs.setattr(path, mode=0o644)         # tar fixes the mode up
+    fs.sync()                                # tar exits: barrier
+    fs.disable_wbc()
+
+
+def untar_metrics() -> dict:
+    out = {}
+    for mode, auto in (("cold", False), ("wbc", True)):
+        c = LustreCluster(osts=1, mdses=1, clients=1,
+                          commit_interval=8192, wbc_auto=auto)
+        fs = LustreClient(c).mount()
+        r0, m0, t0 = reint_rpcs(c), md_rpcs(c), c.now
+        untar(fs)
+        out[mode] = {
+            "reint_rpcs": reint_rpcs(c) - r0,
+            "md_rpcs": md_rpcs(c) - m0,
+            "vtime_s": round(c.now - t0, 6),
+            "files": N_FILES,
+            "dirs": N_DIRS,
+        }
+        if auto:
+            cnt = c.stats.counters
+            out[mode]["wbc_grants"] = cnt.get("wbc.granted", 0)
+            out[mode]["flushes"] = cnt.get("wbc.flush", 0)
+            out[mode]["local_updates"] = cnt.get("wbc.local_update", 0)
+    out["reint_reduction"] = round(
+        out["cold"]["reint_rpcs"] / max(1, out["wbc"]["reint_rpcs"]), 2)
+    out["md_reduction"] = round(
+        out["cold"]["md_rpcs"] / max(1, out["wbc"]["md_rpcs"]), 2)
+    return out
+
+
+def run() -> dict:
+    out = untar_metrics()
+    table(f"untar burst: {N_DIRS} dirs + {N_FILES} creates + setattrs",
+          ["mode", "reint RPCs", "all MDS RPCs", "vtime s"],
+          [[m, out[m]["reint_rpcs"], out[m]["md_rpcs"],
+            f"{out[m]['vtime_s']:.4f}"] for m in ("cold", "wbc")])
+    save("untar", out)
+    assert out["wbc"]["reint_rpcs"] <= N_FILES // 8, out["wbc"]
+    assert out["reint_reduction"] >= 8.0, out["reint_reduction"]
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -17,8 +17,8 @@ import os
 import sys
 import time
 
-BENCHES = ["striping", "nrs", "read", "mdscan", "intents", "dlm",
-           "recovery", "cobd", "checkpoint", "parity"]
+BENCHES = ["striping", "nrs", "read", "mdscan", "untar", "intents",
+           "dlm", "recovery", "cobd", "checkpoint", "parity"]
 
 RPC_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_rpc.json")
 
@@ -44,6 +44,11 @@ def bench_rpc() -> dict:
         committed = {}                         # no (usable) baseline yet
     try:
         md_baseline = committed["md_scan"]["readdir_plus"]["cold_scan_rpcs"]
+    except (KeyError, TypeError):
+        pass
+    untar_baseline = None
+    try:
+        untar_baseline = committed["untar"]["wbc"]["reint_rpcs"]
     except (KeyError, TypeError):
         pass
 
@@ -82,6 +87,12 @@ def bench_rpc() -> dict:
     ms = md_scan_metrics()
     ms["baseline_md_rpcs"] = md_baseline
     out["md_scan"] = ms
+    # untar-shaped metadata burst (ISSUE-6): write-back cache + batched
+    # reintegration vs one-RPC-per-op
+    from benchmarks.bench_untar import N_FILES, untar_metrics
+    un = untar_metrics()
+    un["baseline_reint_rpcs"] = untar_baseline
+    out["untar"] = un
     # single source of truth for the gates: main() keys its exit code off
     # these per-gate flags, and the file writes below key off the
     # combined one
@@ -97,8 +108,13 @@ def bench_rpc() -> dict:
          and ms["readdir_plus"]["cold_scan_rpcs"] > md_baseline)
         or ms["rpc_reduction"] < 16.0
         or ms["warm_restat_rpcs"] != 0)
+    un["regressed"] = (
+        (untar_baseline is not None
+         and un["wbc"]["reint_rpcs"] > untar_baseline)
+        or un["wbc"]["reint_rpcs"] > N_FILES // 8
+        or un["reint_reduction"] < 8.0)
     out["regressed"] = out["write_regressed"] or sr["regressed"] \
-        or ms["regressed"]
+        or ms["regressed"] or un["regressed"]
     if not out["regressed"]:
         # a failed gate must NOT overwrite its own baseline: the second
         # run would compare against the regressed count and pass, and a
@@ -142,6 +158,14 @@ def bench_rpc() -> dict:
           f"{ms['glimpse']['batched_rpcs']} RPCs batched"
           + (f"  (baseline: {md_baseline})"
              if md_baseline is not None else ""))
+    print(f"== BENCH_rpc: untar burst, {un['wbc']['files']} files ==\n"
+          f"  cold: {un['cold']['reint_rpcs']} reint RPCs "
+          f"({un['cold']['md_rpcs']} MDS RPCs total)\n"
+          f"  wbc:  {un['wbc']['reint_rpcs']} reint RPCs "
+          f"({un['wbc']['md_rpcs']} MDS RPCs total)  "
+          f"[{un['reint_reduction']}x fewer]"
+          + (f"  (baseline: {untar_baseline})"
+             if untar_baseline is not None else ""))
     return out
 
 
@@ -180,6 +204,13 @@ def main():
                 f"{sr['baseline_ost_read_rpcs']}), reduction "
                 f"{sr['rpc_reduction']}x (needs >= 4x), warm re-read "
                 f"{sr['warm_reread_ost_reads']} (needs 0)"))
+        un = rpc["untar"]
+        if un.get("regressed"):
+            failures.append((
+                "BENCH_rpc", f"untar gate failed: wbc burst "
+                f"{un['wbc']['reint_rpcs']} reint RPCs (baseline "
+                f"{un['baseline_reint_rpcs']}, cap N/8), reduction "
+                f"{un['reint_reduction']}x (needs >= 8x)"))
         ms = rpc["md_scan"]
         if ms.get("regressed"):
             failures.append((

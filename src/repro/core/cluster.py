@@ -36,7 +36,9 @@ class LustreCluster(R.ClusterBase):
                  vectored_brw: bool = True,
                  max_cached_mb: int = osc_mod.DEFAULT_MAX_CACHED_MB,
                  readahead_pages: int = osc_mod.DEFAULT_READAHEAD_PAGES,
-                 dir_pages: int = 64, statahead_max: int = 32):
+                 dir_pages: int = 64, statahead_max: int = 32,
+                 wbc_auto: bool = False, wbc_batch: int = 64,
+                 wbc_max_dirty: int = 1024):
         super().__init__(seed)
         self.net = net
         # client-side BRW pipeline + read cache knobs, handed to every
@@ -54,6 +56,15 @@ class LustreCluster(R.ClusterBase):
         # stat patterns (0 disables statahead)
         self.dir_pages = dir_pages
         self.statahead_max = statahead_max
+        # metadata write-back cache knobs (ISSUE-6), consumed by
+        # LustreClient: wbc_auto = enter WBC on the first metadata write
+        # under a directory (the MDS §6.5.2 contention decision still
+        # arbitrates); wbc_batch = records per reint_batch RPC (0 = one
+        # RPC per flush); wbc_max_dirty = dirty-record cap forcing a
+        # full flush (cache pressure)
+        self.wbc_auto = wbc_auto
+        self.wbc_batch = wbc_batch
+        self.wbc_max_dirty = wbc_max_dirty
         self.ost_targets: list[ost_mod.OstTarget] = []
         self.mds_targets: list[mds_mod.MdsTarget] = []
         self.client_nodes: list[R.Node] = []
@@ -208,6 +219,13 @@ class LustreCluster(R.ClusterBase):
                 self.sim.fail.delay_s = float(args[1])
             else:
                 raise ValueError(args[0])
+        elif verb == "get_param":
+            # lctl("get_param", "wbc") -> one procfs section; dotted
+            # paths walk into it ("wbc.flushes", "client_cache.hit_rate")
+            node = self.procfs()
+            for part in args[0].split("."):
+                node = node[part]
+            return node
         else:
             raise ValueError(verb)
 
@@ -239,6 +257,26 @@ class LustreCluster(R.ClusterBase):
                    "statahead_dropped": cnt.get("fs.statahead_dropped", 0),
                    "readdir_plus_pages": cnt.get("mds.intent.readdir", 0),
                    "glimpse_bulk_rpcs": cnt.get("rpc.ost.glimpse_bulk", 0),
+                   "neg_hits": cnt.get("fs.neg_hit", 0),
+               },
+               # metadata write-back cache rollup (ISSUE-6): grant
+               # decisions, local (RPC-free) updates, the flush pipeline
+               # and its batch-size distribution, and how often an
+               # unrepresentable op forced a flush-and-go-synchronous
+               "wbc": {
+                   "grants": cnt.get("wbc.granted", 0),
+                   "denials": cnt.get("wbc.denied", 0),
+                   "local_updates": cnt.get("wbc.local_update", 0),
+                   "flushes": cnt.get("wbc.flush", 0),
+                   "flushed_records": cnt.get("wbc.flushed_records", 0),
+                   "batch_hist": {
+                       k.rsplit(".", 1)[1]: v for k, v in sorted(
+                           cnt.items(),
+                           key=lambda kv: (len(kv[0]), kv[0]))
+                       if k.startswith("wbc.batch_hist.")},
+                   "fallback_sync": cnt.get("wbc.fallback_sync", 0),
+                   "lost_records": cnt.get("wbc.lost_records", 0),
+                   "reint_errors": cnt.get("wbc.reint_errors", 0),
                },
                "targets": {}}
         for t in self.ost_targets:

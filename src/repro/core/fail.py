@@ -273,3 +273,15 @@ register_site("mds.statahead",
               "glimpse prefetch (client-side site: crash degrades to "
               "drop — the prefetch is abandoned and every stat falls "
               "back to a correct synchronous fetch)")
+# Metadata writeback cache reintegration (ISSUE-6):
+register_site("mdc.wbc_flush",
+              "client WBC about to ship a reint_batch flush "
+              "(client-side site: crash degrades to drop — the batch "
+              "RPC is lost on the wire and the import recovers by "
+              "timeout -> reconnect -> resend, so the flush still "
+              "completes; the unsent tail stays cached)")
+register_site("mds.reint_batch",
+              "inside op_reint_batch, before applying the next record "
+              "(the batch is ONE undo-scoped transaction: a crash here "
+              "unwinds every already-applied record and client replay "
+              "re-applies the batch exactly once)")

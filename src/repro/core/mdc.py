@@ -9,16 +9,16 @@ implementation is very trivial"): it picks the MDC by
 
 The write-back cache (ch. 17) holds a subtree lock + preallocated fids;
 updates apply to a local shadow namespace and are recorded as reintegration
-records, flushed as ONE `reint_batch` RPC (on sync, cache pressure, or a
-blocking AST on the subtree lock).
+records, flushed as batched `reint_batch` RPCs — in the background on
+batch-size/age/pressure thresholds, and as a barrier on fsync/close/
+release or a blocking AST on the subtree lock.
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
 from typing import Any, Optional
 
 from repro.core import dlm as dlm_mod
+from repro.core import fail as fail_mod
 from repro.core import mds as mds_mod
 from repro.core import ptlrpc as R
 
@@ -93,7 +93,18 @@ class Mdc:
         return self.imp.request("reint", {"rec": rec}, fixup=fixup)
 
     def reint_batch(self, records: list) -> R.Reply:
-        return self.imp.request("reint_batch", {"records": records})
+        def fixup(req, rep):
+            # pin server-assigned fids per record so REPLAY re-creates
+            # the same inodes (WBC records normally carry preallocated
+            # fids already — this covers records without one)
+            results = (rep.data or {}).get("results") or []
+            for r, res in zip(req.body["records"], results):
+                d = res.get("data") or {}
+                if r.get("type") == "create" and not r.get("fid") \
+                        and d.get("fid"):
+                    r["fid"] = tuple(d["fid"])
+        return self.imp.request("reint_batch", {"records": records},
+                                fixup=fixup)
 
     def close(self, handle: int, size=None, mtime=None,
               fid=None) -> R.Reply:
@@ -262,30 +273,59 @@ class Lmv:
 
 # -------------------------------------------------------------------- WBC
 
-@dataclasses.dataclass
-class WbcRecord:
-    rec: dict          # a reint record, replayed verbatim at flush
+_GONE = object()          # shadow negative entry: name is known absent
 
 
 class WbcCache:
     """Metadata write-back cache for one directory subtree (ch. 17).
 
-    Holds an EX subtree lock; `mkdir/create/...` below the root apply to a
-    local shadow and append records. `flush()` reintegrates in ONE RPC.
-    A blocking AST on the subtree lock triggers flush + drop (§17.2).
+    Holds an EX subtree lock + preallocated fids; namespace updates below
+    the root apply to a local shadow and append reintegration records
+    (the InterMezzo property, §2.4), shipped later as `reint_batch` RPCs.
+    Flush triggers: `release()`, a blocking AST on the subtree lock
+    (§17.2), an fsync/close barrier from the VFS layer — and, when the
+    thresholds are armed, background flushes on batch size (`batch`
+    records ship as one RPC, the tail stays dirty), total dirty records
+    (`max_dirty`: cache pressure, everything ships) or age of the oldest
+    record (`max_age`). A multi-batch flush keeps up to `max_rpcs`
+    batches in flight (§17.1 reintegration pipelining).
+
+    The shadow keeps a COMPLETE listing for every directory it owns —
+    shadow-born directories by construction, pre-existing ones seeded
+    with one readdir on first touch — so lookups, readdirs and negative
+    lookups (`GONE`) under the subtree cost zero RPCs while the EX lock
+    holds them coherent.
     """
 
-    def __init__(self, lmv: Lmv, root_fid: tuple):
+    GONE = _GONE
+
+    def __init__(self, lmv: Lmv, root_fid: tuple, *, batch: int = 0,
+                 max_dirty: int = 0, max_age: float = 0.0,
+                 max_rpcs: int = 8):
         self.lmv = lmv
         self.root_fid = tuple(root_fid)
         self.mdc = lmv.mdc_for_fid(root_fid)
         self.sim = lmv.sim
+        self.batch = batch             # background flush unit (0 = off)
+        self.max_dirty = max_dirty     # dirty-record cap (0 = off)
+        self.max_age = max_age         # oldest-record age cap (0 = off)
+        self.max_rpcs = max(1, max_rpcs)
         self.records: list[dict] = []
         self.fids: list[tuple] = []
-        self.shadow: dict[tuple, dict] = {}    # fid -> {name: fid} created
-        self.shadow_attrs: dict[tuple, dict] = {}
+        self.shadow: dict[tuple, dict] = {}    # dir fid -> {name: fid}
+        self.shadow_attrs: dict[tuple, dict] = {}   # shadow-born inodes
+        self.complete: set[tuple] = set()      # dirs with full listings
+        self.gone: set[tuple] = set()          # (pfid, name) known absent
+        self.known: set[tuple] = set()         # fids inside the subtree
         self.lock: dlm_mod.Lock | None = None
         self.active = False
+        self.first_dirty_t: float | None = None
+        # fsio sinks: destroy_cb consumes unlink reply data (ea+cookies)
+        # so flushed unlinks still destroy their OST objects
+        self.destroy_cb = None
+        self._orig_cb: Any = None
+        self._cb_installed = False
+        self._revoke_cb = None
 
     # ------------------------------------------------------------ grant
     def acquire(self) -> bool:
@@ -296,20 +336,48 @@ class WbcCache:
             return False
         self.lock = lk
         self.active = True
+        self.known.add(self.root_fid)
         self.fids = self.mdc.prealloc_fids(128)
         self.sim.stats.count("wbc.granted")
-        # flush when the subtree lock is revoked
-        orig_cb = self.mdc.locks.flush_cb
+        # flush when the subtree lock is revoked; remember the ORIGINAL
+        # callback so release() can restore it (a wrapper per
+        # enable/disable cycle used to pile up here, each flushing a
+        # dead cache)
+        self._orig_cb = self.mdc.locks.flush_cb
+        self._cb_installed = True
 
         def cb(lock):
             if self.lock is not None and lock.handle == self.lock.handle:
                 self.flush()
-            if orig_cb:
-                orig_cb(lock)
+            elif self._orig_cb:
+                self._orig_cb(lock)
         self.mdc.locks.flush_cb = cb
+        # the lock leaving the cache for ANY reason (AST, eviction)
+        # deactivates the cache: the shadow is only coherent under it
+        def rcb(lock):
+            if self.lock is not None and lock.handle == self.lock.handle:
+                self._deactivate(lost=True)
+        self._revoke_cb = rcb
+        self.mdc.locks.revoke_cbs.append(rcb)
         if lk is not None:
             lk.dirty = True
         return True
+
+    def _deactivate(self, lost: bool = False):
+        """The subtree lock is gone (or being released): the shadow is no
+        longer coherent. With `lost`, pending records die with the lock —
+        eviction semantics: exactly the unflushed tail is lost."""
+        if lost and self.records:
+            self.sim.stats.count("wbc.lost_records", len(self.records))
+            self.records = []
+        self.first_dirty_t = None
+        self.active = False
+        self.lock = None
+        self.shadow.clear()
+        self.shadow_attrs.clear()
+        self.complete.clear()
+        self.gone.clear()
+        self.known.clear()
 
     def _fid(self) -> tuple:
         if not self.fids:
@@ -317,25 +385,108 @@ class WbcCache:
         return self.fids.pop(0)
 
     def in_subtree(self, fid: tuple) -> bool:
-        return tuple(fid) == self.root_fid or tuple(fid) in self.shadow_attrs
+        return tuple(fid) == self.root_fid or tuple(fid) in self.known
+
+    # ----------------------------------------------------- shadow reads
+    def _ensure_listing(self, pfid: tuple) -> bool:
+        """Make the shadow's listing of `pfid` complete. Shadow-born dirs
+        are complete by construction; a pre-existing dir is seeded with
+        ONE readdir under the subtree EX lock (amortised over every later
+        lookup/readdir below it). Returns False when the shadow cannot
+        own the dir (split into buckets, outside the subtree)."""
+        p = tuple(pfid)
+        if p in self.complete:
+            return True
+        if p in self.shadow_attrs:                 # shadow-born
+            self.shadow.setdefault(p, {})
+            self.complete.add(p)
+            return True
+        if not self.in_subtree(p):
+            return False
+        try:
+            out = self.lmv.readdir(p)
+        except R.RpcError:
+            return False
+        if out.get("buckets"):
+            return False                           # split dir: too big
+        listing = self.shadow.setdefault(p, {})
+        for name, fid in out["entries"].items():
+            if (p, name) in self.gone:
+                continue                           # locally unlinked
+            listing.setdefault(name, tuple(fid))   # local updates win
+            self.known.add(tuple(fid))
+        self.gone = {g for g in self.gone if g[0] != p}
+        self.complete.add(p)
+        self.sim.stats.count("wbc.seed")
+        return True
+
+    def lookup(self, parent_fid, name):
+        """Shadow lookup: a fid, GONE (known absent — the shadow's
+        negative entry), or None (the shadow does not know)."""
+        p = tuple(parent_fid)
+        if (p, name) in self.gone:
+            return _GONE
+        ent = self.shadow.get(p, {}).get(name)
+        if ent is not None:
+            return ent
+        return _GONE if p in self.complete else None
+
+    def child(self, parent_fid, name):
+        """Resolve one component under the WBC. Returns (handled, fid):
+        handled=False falls through to the MDS; handled=True with
+        fid=None is an authoritative ENOENT answered locally."""
+        p = tuple(parent_fid)
+        if not self.active or not self.in_subtree(p):
+            return False, None
+        hit = self.lookup(p, name)
+        if hit is _GONE:
+            return True, None
+        if hit is not None:
+            return True, hit
+        if not self._ensure_listing(p):
+            return False, None
+        hit = self.lookup(p, name)
+        return True, None if hit is _GONE else hit
+
+    def listing(self, pfid) -> dict | None:
+        """Complete {name: fid} view of a shadow-owned directory."""
+        if not self._ensure_listing(pfid):
+            return None
+        return dict(self.shadow.get(tuple(pfid), {}))
+
+    def attrs(self, fid) -> dict | None:
+        return self.shadow_attrs.get(tuple(fid))
 
     # --------------------------------------------------------- local ops
     def create(self, parent_fid, name, ftype=mds_mod.S_IFREG,
                mode=0o644, ea=None, target="") -> tuple:
         """Local create: zero RPCs (the InterMezzo property, §2.4)."""
         fid = self._fid()
-        rec = {"type": "create", "parent": tuple(parent_fid), "name": name,
+        p = tuple(parent_fid)
+        rec = {"type": "create", "parent": p, "name": name,
                "fid": fid, "ftype": ftype, "mode": mode, "remote_ok": False}
         if ea:
             rec["ea"] = ea
         if target:
             rec["target"] = target
         self.records.append(rec)
-        self.shadow.setdefault(tuple(parent_fid), {})[name] = fid
+        self.shadow.setdefault(p, {})[name] = fid
+        self.gone.discard((p, name))
         self.shadow_attrs[fid] = {"fid": fid, "type": ftype, "mode": mode,
-                                  "nlink": 2 if ftype == "dir" else 1,
-                                  "mtime": self.sim.now, "size": 0}
-        self.sim.stats.count("wbc.local_update")
+                                  "nlink": 2 if ftype == mds_mod.S_IFDIR
+                                  else 1,
+                                  "mtime": self.sim.now, "size": 0,
+                                  "mtime_on_ost": False}
+        if ea:
+            self.shadow_attrs[fid]["ea"] = dict(ea)
+        if target:
+            self.shadow_attrs[fid]["symlink"] = target
+        self.known.add(fid)
+        if ftype == mds_mod.S_IFDIR:
+            # born in the cache: its listing is complete by construction
+            self.shadow.setdefault(fid, {})
+            self.complete.add(fid)
+        self._note_dirty()
         return fid
 
     def setattr(self, fid, attrs=None, ea=None):
@@ -343,33 +494,116 @@ class WbcCache:
         if ea:
             rec["ea"] = ea
         self.records.append(rec)
-        if tuple(fid) in self.shadow_attrs:
-            self.shadow_attrs[tuple(fid)].update(attrs or {})
-        self.sim.stats.count("wbc.local_update")
+        sa = self.shadow_attrs.get(tuple(fid))
+        if sa is not None:
+            sa.update(attrs or {})
+            if ea:
+                sa.setdefault("ea", {}).update(ea)
+        self._note_dirty()
 
     def unlink(self, parent_fid, name):
-        self.records.append({"type": "unlink", "parent": tuple(parent_fid),
-                             "name": name})
-        self.shadow.get(tuple(parent_fid), {}).pop(name, None)
-        self.sim.stats.count("wbc.local_update")
+        p = tuple(parent_fid)
+        self.records.append({"type": "unlink", "parent": p, "name": name})
+        fid = self.shadow.get(p, {}).pop(name, None)
+        if fid is not None:
+            self.shadow_attrs.pop(tuple(fid), None)
+            self.shadow.pop(tuple(fid), None)
+            self.complete.discard(tuple(fid))
+            self.known.discard(tuple(fid))
+        if p not in self.complete:
+            # incomplete listing: remember the negative entry explicitly
+            self.gone.add((p, name))
+        self._note_dirty()
 
-    def lookup(self, parent_fid, name):
-        return self.shadow.get(tuple(parent_fid), {}).get(name)
+    def forget(self, pfid):
+        """Drop the shadow's claim on one directory (a synchronous op
+        slipped past the shadow): the next access re-seeds it."""
+        p = tuple(pfid)
+        self.shadow.pop(p, None)
+        self.complete.discard(p)
+        self.gone = {g for g in self.gone if g[0] != p}
 
     # -------------------------------------------------------------- flush
+    def _note_dirty(self):
+        self.sim.stats.count("wbc.local_update")
+        if self.first_dirty_t is None:
+            self.first_dirty_t = self.sim.now
+        if self.max_dirty and len(self.records) >= self.max_dirty:
+            self.sim.stats.count("wbc.flush_pressure")
+            self.flush()
+        elif self.batch and len(self.records) >= self.batch:
+            self.sim.stats.count("wbc.flush_batch")
+            self._flush_n(self.batch)
+        elif self.max_age and self.sim.now - self.first_dirty_t \
+                >= self.max_age:
+            self.sim.stats.count("wbc.flush_age")
+            self.flush()
+
     def flush(self) -> int:
-        """Reintegrate: ship ALL records in one batched RPC (§17.1)."""
-        if not self.records:
+        """Barrier: reintegrate EVERY pending record (fsync/close/
+        release/AST all funnel here)."""
+        return self._flush_n(len(self.records))
+
+    def _flush_n(self, n: int) -> int:
+        """Ship the oldest `n` records, split into `batch`-sized
+        reint_batch RPCs, up to `max_rpcs` in flight per wave. Records
+        apply in order: batches within a wave arrive (and are serviced)
+        in issue order at the one owning MDS."""
+        if n <= 0 or not self.records:
             return 0
-        recs, self.records = self.records, []
-        self.mdc.reint_batch(recs)
-        self.sim.stats.count("wbc.flush")
+        recs, self.records = self.records[:n], self.records[n:]
+        if not self.records:
+            self.first_dirty_t = None
+        act = fail_mod.state.check("mdc.wbc_flush")
+        if act in ("drop", "crash"):
+            # client-side site (crash degrades to drop, like osc.flush):
+            # the first batch RPC is lost on the wire; the import
+            # recovers by timeout -> reconnect -> resend
+            self.sim.faults.drop_next[self.mdc.imp.active_nid] += 1
+        bs = self.batch or len(recs)
+        batches = [recs[i:i + bs] for i in range(0, len(recs), bs)]
+        for i in range(0, len(batches), self.max_rpcs):
+            wave = batches[i:i + self.max_rpcs]
+            if len(wave) == 1:
+                reps = [self.mdc.reint_batch(wave[0])]
+            else:
+                reps = self.sim.parallel(
+                    [(lambda b=b: self.mdc.reint_batch(b))
+                     for b in wave])
+            for b, rep in zip(wave, reps):
+                self._flush_done(b, rep)
         return len(recs)
+
+    def _flush_done(self, batch: list, rep: R.Reply):
+        st = self.sim.stats
+        st.count("wbc.flush")
+        st.count("wbc.flushed_records", len(batch))
+        size = len(batch)
+        st.count(f"wbc.batch_hist.{1 << max(0, size - 1).bit_length()}")
+        for r, res in zip(batch, (rep.data or {}).get("results") or []):
+            if res.get("status"):
+                st.count("wbc.reint_errors")
+                continue
+            d = res.get("data") or {}
+            if r["type"] == "unlink" and d.get("ea") and self.destroy_cb:
+                # the flushed unlink dropped the last link: destroy the
+                # OST objects with the returned EA + llog cookies
+                self.destroy_cb(d)
 
     def release(self):
         self.flush()
         if self.lock is not None:
             self.lock.dirty = False
-            self.mdc.locks.cancel(self.lock)
-            self.lock = None
-        self.active = False
+            self.mdc.locks.cancel(self.lock)   # fires _deactivate via rcb
+        # restore the pre-acquire callbacks (no wrapper stacking)
+        if self._cb_installed:
+            self.mdc.locks.flush_cb = self._orig_cb
+            self._cb_installed = False
+            self._orig_cb = None
+        if self._revoke_cb is not None:
+            try:
+                self.mdc.locks.revoke_cbs.remove(self._revoke_cb)
+            except ValueError:
+                pass
+            self._revoke_cb = None
+        self._deactivate()

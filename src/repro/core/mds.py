@@ -144,6 +144,10 @@ class MdsTarget(R.Target):
         # [(own_transno, {peer_uuid: peer_transno})]
         self.dep_log: list[tuple[int, dict]] = []
         self.undo_history: list[tuple[int, Any]] = []   # kept past commit
+        # batch-collection mode (op_reint_batch): while set, txn_meta
+        # accumulates (undo, deps) here instead of opening transactions,
+        # so the whole batch lands as ONE undo-scoped transaction
+        self._batch_txn: dict | None = None
         self.contention: dict[tuple, int] = {}    # fid -> recent conflicts
         self.osts: dict[str, R.Import] = {}       # for orphan cleanup
         if inode_group == 0:
@@ -471,7 +475,19 @@ class MdsTarget(R.Target):
 
     def txn_meta(self, undo, deps: dict | None = None) -> int:
         """A metadata transaction: normal undo (crash rollback) + retained
-        undo history + dependency record for the consistent cut."""
+        undo history + dependency record for the consistent cut.
+
+        In batch-collection mode (op_reint_batch) nothing is opened:
+        the (undo, deps) pair is parked on the batch and the would-be
+        batch transno is returned — `self.transno` does not advance, so
+        every changelog emit in the batch stamps the SAME transno."""
+        if self._batch_txn is not None:
+            self._batch_txn["undos"].append(undo)
+            if deps:
+                bd = self._batch_txn["deps"]
+                for peer, t in deps.items():
+                    bd[peer] = max(bd.get(peer, 0), t)
+            return self.transno + 1
         transno = self.txn(undo)
         self.undo_history.append((transno, undo))
         if deps:
@@ -696,10 +712,12 @@ class MdsTarget(R.Target):
     @staticmethod
     def _requester(req) -> str | None:
         """Client uuid to spare from cache revocation: the direct
-        requester maintains its own caches after its own operation. A
-        WBC reint_batch is NOT spared — its records may touch state the
-        client cached long before entering write-back mode."""
-        if req is None or req.opcode == "reint_batch":
+        requester maintains its own caches after its own operation.
+        This includes a WBC reint_batch — revoking the flusher's own
+        subtree EX lock would tear down the write-back cache on its
+        FIRST background flush; the client invalidates its pre-WBC
+        dentry/attr entries itself when it applies a shadow update."""
+        if req is None:
             return None
         return req.client_uuid
 
@@ -795,14 +813,57 @@ class MdsTarget(R.Target):
         return fn(r, req)
 
     def op_reint_batch(self, req: R.Request) -> R.Reply:
-        """WBC flush: apply update records in order (ch. 17). One transno
-        for the batch (single reply/ack; §6.5.3)."""
+        """WBC flush: apply update records in order as ONE undo-scoped
+        transaction (ch. 17, §6.5.3) with per-record status.
+
+        Batch-collection mode diverts every record's txn_meta into an
+        accumulator (transno frozen), so all changelog emits stamp the
+        single batch transno; one real txn_meta at the end installs a
+        composite undo running the records' undos in reverse. The reply
+        carries that transno, so the batch rides the ordinary reply
+        cache + replay machinery: a resend is answered from the cache, an
+        MDS crash rolls the whole batch back and client replay re-applies
+        it exactly once. A record that fails (e.g. EEXIST) contributes
+        only its -errno status — its partial effects (none today: every
+        handler checks before mutating) are unwound record-locally."""
         out = []
-        for r in req.body["records"]:
-            fn = getattr(self, f"_reint_{r['type']}")
-            rep = fn(r, req)
-            out.append({"status": rep.status, "data": rep.data})
-        return R.Reply(data=out, transno=self.transno)
+        self._batch_txn = {"undos": [], "deps": {}}
+        try:
+            for r in req.body["records"]:
+                fail_mod.maybe_fail("mds.reint_batch")
+                fn = getattr(self, f"_reint_{r['type']}", None)
+                if fn is None:
+                    out.append({"status": -38, "data": None})
+                    continue
+                self.sim.stats.count(f"mds.reint.{r['type']}")
+                n0 = len(self._batch_txn["undos"])
+                try:
+                    rep = fn(r, req)
+                    out.append({"status": rep.status, "data": rep.data})
+                except R.RpcError as e:
+                    # record-local rollback: a failing record must not
+                    # leave half-applied state inside the batch
+                    for u in reversed(self._batch_txn["undos"][n0:]):
+                        u()
+                    del self._batch_txn["undos"][n0:]
+                    out.append({"status": e.status, "data": None})
+        except BaseException:
+            # induced crash (FailLocHit) or bug mid-batch: no transaction
+            # was opened yet, so the target's undo_log knows nothing of
+            # the applied records — unwind them here before propagating
+            for u in reversed(self._batch_txn["undos"]):
+                u()
+            self._batch_txn = None
+            raise
+        bt, self._batch_txn = self._batch_txn, None
+        if not bt["undos"]:
+            return R.Reply(data={"results": out})
+
+        def undo_batch():
+            for u in reversed(bt["undos"]):
+                u()
+        transno = self.txn_meta(undo_batch, bt["deps"] or None)
+        return R.Reply(data={"results": out}, transno=transno)
 
     def _dir_insert(self, parent: Inode, name: str, fid: tuple,
                     is_dir: bool = False, exclude: str | None = None):
@@ -1226,7 +1287,16 @@ class MdsTarget(R.Target):
 
     def op_remote_unlink_inode(self, req: R.Request) -> R.Reply:
         fid = tuple(req.body["fid"])
-        inode = self._get(fid)
+        inode = self.inodes.get(fid)
+        if inode is None:
+            # idempotent replay (mirrors op_remote_mkdir): our inode half
+            # already committed before the coordinator's crash rolled ITS
+            # dirent half back — report the inode gone so the replayed
+            # coordinator can finish that half. The ftype is unknowable
+            # here, so a replayed cross-MDT rmdir leaves the parent's
+            # nlink one high — the drift lfsck-class repair tolerates.
+            self.sim.stats.count("mds.remote_unlink_replay")
+            return R.Reply(data={"fid": fid, "ftype": None, "last": False})
         self._revoke_client_locks(*inode.pfids)   # cached nlink is stale
         was_dir = inode.ftype == S_IFDIR
         # authoritative ENOTEMPTY: the coordinator cannot see a remote

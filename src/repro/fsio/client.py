@@ -59,6 +59,9 @@ class FileHandle:
     ra_next: int = 0           # offset the next sequential read starts at
     ra_window: int = 0         # current readahead window (bytes, ramps up)
     ra_pos: int = 0            # how far readahead has already fetched
+    # opened through the metadata write-back cache: no MDS open handle,
+    # close() records size/mtime as a cache record instead of an RPC
+    wbc: bool = False
 
 
 @dataclasses.dataclass
@@ -110,7 +113,10 @@ class LustreClient:
                  max_cached_mb: int | None = None,
                  readahead_pages: int | None = None,
                  dir_pages: int | None = None,
-                 statahead_max: int | None = None):
+                 statahead_max: int | None = None,
+                 wbc_auto: bool | None = None,
+                 wbc_batch: int | None = None,
+                 wbc_max_dirty: int | None = None):
         self.cluster = cluster
         self.rpc = cluster.make_client_rpc(node_idx)
         self.lmv = cluster.make_lmv(self.rpc)
@@ -130,6 +136,18 @@ class LustreClient:
             else dir_pages
         self.statahead_max = cluster.statahead_max if statahead_max is None \
             else statahead_max
+        # metadata write-back knobs (ISSUE-6): wbc_auto enters WBC mode
+        # on the first metadata write under a directory (the §6.5.2
+        # contention decision on the MDS still gets the final say);
+        # wbc_batch/wbc_max_dirty drive the background flush pipeline
+        self.wbc_auto = cluster.wbc_auto if wbc_auto is None else wbc_auto
+        self.wbc_batch = cluster.wbc_batch if wbc_batch is None \
+            else wbc_batch
+        self.wbc_max_dirty = cluster.wbc_max_dirty if wbc_max_dirty is None \
+            else wbc_max_dirty
+        self.wbc_max_rpcs = cluster.max_rpcs_in_flight \
+            if max_rpcs_in_flight is None else max_rpcs_in_flight
+        self._wbc_denied: set = set()   # parents the MDS refused WBC for
         self.sim = cluster.sim
         # eviction by an MDS voids every lock that guards the dentry
         # cache: drop the locks (local-only) and the dentries with them;
@@ -153,6 +171,11 @@ class LustreClient:
         self._sa: dict[tuple, _Statahead] = {}
         self._sa_attrs: dict[tuple, dict] = {}
         self._sa_glimpse: dict[tuple, dict] = {}
+        # negative-entry windows (ISSUE-6): dir fid -> (page locks,
+        # names seen) from a COMPLETE readdir-plus pass — while every
+        # page lock survives, any other name is known absent (ENOENT
+        # with zero RPCs)
+        self._neg_win: dict[tuple, tuple[list, set]] = {}
         self._fh = itertools.count(1)
         self.handles: dict[int, FileHandle] = {}
         self.wbc: mdc_mod.WbcCache | None = None
@@ -182,6 +205,9 @@ class LustreClient:
         if self._dentry_valid(key, mdc):
             self.sim.stats.count("fs.dcache_hit")
             return self.dcache[key]
+        d = self._neg_lookup(key)
+        if d is not None:
+            return d
         lk, data = self.lmv.getattr_lock(parent, name, want_ea=True)
         idx = data.get("_granted_by")
         gmdc = self.lmv.mdcs[idx] if idx is not None else mdc
@@ -200,6 +226,32 @@ class LustreClient:
             if lk is not None and not data.get("_remote"):
                 self._attr_put(d.fid, data["attrs"], data.get("ea"),
                                gmdc, lk.handle)
+        self.dcache[key] = d
+        return d
+
+    # --------------------------------------------- negative-entry window
+    def _neg_install(self, dfid, locks, names):
+        """A COMPLETE readdir-plus listing bounds the directory's
+        namespace: while every page's PR lock survives, any name NOT in
+        the listing is known absent — a later lookup miss answers ENOENT
+        with zero RPCs (§6.2.1 negative caching over the whole dir).
+        Revoked with the dir lock, exactly like the positive entries."""
+        if locks:
+            self._neg_win[tuple(dfid)] = (locks, names)
+
+    def _neg_lookup(self, key) -> Dentry | None:
+        win = self._neg_win.get(key[0])
+        if win is None:
+            return None
+        locks, names = win
+        if any(h not in m.locks.locks for m, h in locks):
+            del self._neg_win[key[0]]      # a page lock died: window void
+            return None
+        if key[1] in names:
+            return None                    # listed name: not our answer
+        self.sim.stats.count("fs.neg_hit")
+        m, h = locks[0]
+        d = Dentry(None, None, h, m)
         self.dcache[key] = d
         return d
 
@@ -249,15 +301,30 @@ class LustreClient:
         fid = ROOT
         parts = self._parts(path)
         for i, name in enumerate(parts):
-            if self.wbc and self.wbc.active:
-                sfid = self.wbc.lookup(fid, name)
-                if sfid is not None:
-                    fid = sfid
-                    continue
+            last = i == len(parts) - 1
+            if self.wbc is not None and self.wbc.active:
+                handled, sfid = self.wbc.child(fid, name)
+                if handled and sfid is None:
+                    raise FsError(-2, path)     # authoritative ENOENT
+                if handled:
+                    sa = self.wbc.attrs(sfid)
+                    if sa is not None:
+                        # shadow-born inode: attrs (symlink target
+                        # included) live entirely in the cache
+                        if sa.get("type") == "symlink" and (
+                                follow or not last):
+                            rest = "/".join(parts[i + 1:])
+                            target = sa.get("symlink", "")
+                            return self.resolve(
+                                target + "/" + rest if rest else target,
+                                follow=follow, _depth=_depth + 1)
+                        fid = sfid
+                        continue
+                    # pre-existing inode: fall through for real attrs
+                    # (symlink detection needs them)
             d = self._lookup(fid, name)
             if d.fid is None:
                 raise FsError(-2, path)
-            last = i == len(parts) - 1
             if d.attrs and d.attrs.get("type") == "symlink" and (
                     follow or not last):
                 data = self.lmv.getattr(d.fid)
@@ -285,6 +352,11 @@ class LustreClient:
         if d is not None and d.fid is not None:
             self._attr_drop(d.fid)
         self._attr_drop(tuple(parent))
+        win = self._neg_win.get(tuple(parent))
+        if win is not None:
+            # we just mutated this entry ourselves: the window can no
+            # longer prove the name absent (a create adds it)
+            win[1].add(name)
 
     def _on_mds_evicted(self, mdc):
         """The MDS evicted us: the PR locks guarding cached dentries are
@@ -294,9 +366,66 @@ class LustreClient:
         self.sim.stats.count("fs.evicted_invalidate")
         mdc.locks.drop_all()
         self.dcache.clear()
+        self._neg_win.clear()
         self._sa.clear()
         self._sa_attrs.clear()
         self._sa_glimpse.clear()
+
+    # --------------------------------------------------- wbc write routing
+    def _make_wbc(self, fid) -> mdc_mod.WbcCache:
+        w = mdc_mod.WbcCache(self.lmv, fid, batch=self.wbc_batch,
+                             max_dirty=self.wbc_max_dirty,
+                             max_rpcs=self.wbc_max_rpcs)
+        w.destroy_cb = self._destroy_from_data
+        return w
+
+    def _wbc_covering(self, fid) -> mdc_mod.WbcCache | None:
+        """The active WBC, if `fid` sits inside its subtree."""
+        w = self.wbc
+        if w is not None and w.active and w.in_subtree(fid):
+            return w
+        return None
+
+    def _wbc_for_write(self, parent) -> mdc_mod.WbcCache | None:
+        """The WBC a metadata write under `parent` should route through:
+        the active cache when it covers the parent; else, with
+        `wbc_auto`, an automatic entry attempt — the first metadata
+        write under a directory asks the MDS for the subtree lock and
+        the §6.5.2 contention decision grants or denies it. A denial is
+        remembered (no re-ask storm). Never auto-grabs the fs root."""
+        p = tuple(parent)
+        w = self._wbc_covering(p)
+        if w is None and self.wbc_auto \
+                and (self.wbc is None or not self.wbc.active) \
+                and p != tuple(ROOT) and p not in self._wbc_denied:
+            w = self._make_wbc(p)
+            if w.acquire():
+                self.wbc = w
+            else:
+                self._wbc_denied.add(p)
+                w = None
+        if w is not None and self.lmv.mdc_for_fid(p) is not w.mdc:
+            # cross-MDT record: the batch reintegrates only at the
+            # subtree root's MDS — not representable, go synchronous
+            return None
+        return w
+
+    def _wbc_sync_guard(self, *fids):
+        """A synchronous metadata write is about to touch the WBC
+        subtree (an op the shadow cannot represent: rename, hard link,
+        cross-MDT entries, dirs split into buckets). Flush pending
+        records first — server-side order must match local order — and
+        make the shadow re-learn the touched directories."""
+        w = self.wbc
+        if w is None or not w.active:
+            return
+        touched = [tuple(f) for f in fids if w.in_subtree(f)]
+        if not touched:
+            return
+        self.sim.stats.count("wbc.fallback_sync")
+        w.flush()
+        for f in touched:
+            w.forget(f)
 
     # ------------------------------------------------------------- files
     def creat(self, path: str, *, stripe_count: int = 0,
@@ -312,6 +441,16 @@ class LustreClient:
              mode: int = 0o644) -> FileHandle:
         """flags: r read, w write, c create, x exclusive."""
         parent, name = self._resolve_parent(path)
+        w = self._wbc_for_write(parent) if "c" in flags \
+            else self._wbc_covering(parent)
+        if w is not None:
+            fh = self._wbc_open(w, parent, name, flags, stripe_count,
+                                stripe_size, stripe_offset, mode, path)
+            if fh is not None:
+                return fh
+        if "c" in flags:
+            # the create may mutate the subtree behind the shadow's back
+            self._wbc_sync_guard(parent)
         lk, data = self.lmv.open(parent, name, flags, mode)
         st = data.get("status", 0)
         if st:
@@ -334,6 +473,45 @@ class LustreClient:
         else:
             lsm = None
         fh = FileHandle(fid, lsm, data.get("open_handle", 0), flags)
+        self.handles[id(fh)] = fh
+        return fh
+
+    def _wbc_open(self, w, parent, name, flags, stripe_count, stripe_size,
+                  stripe_offset, mode, path) -> FileHandle | None:
+        """Open/create under the WBC: shadow-born files open with zero
+        RPCs, and a create lands in the cache — the client still creates
+        the stripe objects itself (§6.4.3), the LOV EA rides the
+        create's follow-up setattr record. Returns None to take the
+        synchronous path (pre-existing inode, or a directory listing the
+        shadow cannot own)."""
+        handled, fid = w.child(parent, name)
+        if not handled:
+            return None
+        if fid is not None:
+            if "c" in flags and "x" in flags:
+                raise FsError(-17, path)
+            sa = w.attrs(fid)
+            if sa is None:
+                return None                # pre-existing inode: sync open
+            if sa.get("type") == "dir":
+                raise FsError(-21, path)
+            ea = sa.get("ea") or {}
+            lsm = lov_mod.StripeMd.from_ea(ea["lov"]) \
+                if "lov" in ea else None
+            self.sim.stats.count("wbc.open_local")
+            fh = FileHandle(fid, lsm, 0, flags, wbc=True)
+            self.handles[id(fh)] = fh
+            return fh
+        if "c" not in flags:
+            raise FsError(-2, path)        # authoritative ENOENT
+        fid = w.create(parent, name, "file", mode)
+        lsm = self.lov.create(
+            stripe_count=stripe_count or self.default_stripe_count,
+            stripe_size=stripe_size or self.default_stripe_size,
+            stripe_offset=stripe_offset)
+        w.setattr(fid, ea={"lov": lsm.to_ea()})
+        self._invalidate(parent, name)
+        fh = FileHandle(fid, lsm, 0, flags, wbc=True)
         self.handles[id(fh)] = fh
         return fh
 
@@ -402,21 +580,51 @@ class LustreClient:
             self.sim.stats.count("fs.readahead")
             self.sim.stats.add_bytes("fs.readahead", end - start)
 
-    def fsync(self, fh: FileHandle):
+    def _fsync_data(self, fh: FileHandle):
         if fh.lsm is not None:
             self.sim.parallel([
                 (lambda u=u: self.lov.by_uuid[u].flush())
                 for u in {o["ost"] for o in fh.lsm.objects}])
 
+    def fsync(self, fh: FileHandle):
+        """Flush the handle's dirty data — and, under WBC, reintegrate
+        pending metadata too: fsync is a durability barrier, so the
+        file's create/setattr records must reach the MDS (§17.2)."""
+        self._fsync_data(fh)
+        w = self._wbc_covering(fh.fid)
+        if w is not None and w.records:
+            self.sim.stats.count("wbc.fsync_barrier")
+            w.flush()
+
     def close(self, fh: FileHandle):
         """Flush + ship size/mtime to the MDS (§6.9.1: the OSTs owned them
-        while the file was open for write)."""
-        self.fsync(fh)
+        while the file was open for write). A WBC handle's size/mtime
+        land as a setattr record instead — close is not a reintegration
+        point (ch. 17), fsync and release are."""
+        self._fsync_data(fh)
         size = mtime = None
         if "w" in fh.flags or "c" in fh.flags:
             if fh.lsm is not None:
                 a = self.lov.getattr(fh.lsm)
                 size, mtime = a["size"], max(a["mtime"], fh.mtime)
+        if fh.wbc:
+            w = self._wbc_covering(fh.fid)
+            if w is not None and w.attrs(fh.fid) is not None:
+                if size is not None:
+                    w.setattr(fh.fid, attrs={"size": size, "mtime": mtime})
+            elif size is not None:
+                # the cache died since the open: reintegrate size/mtime
+                # synchronously (the create either flushed — fid exists —
+                # or was lost with the lock: nothing left to update)
+                try:
+                    self.lmv.mdc_for_fid(fh.fid).reint(
+                        {"type": "setattr", "fid": fh.fid,
+                         "attrs": {"size": size, "mtime": mtime}})
+                except R.RpcError:
+                    self.sim.stats.count("wbc.orphan_close")
+            self._attr_drop(fh.fid)
+            self.handles.pop(id(fh), None)
+            return
         self.lmv.close(fh.fid, fh.open_handle, size, mtime)
         self._attr_drop(fh.fid)    # size/mtime just moved to the MDS
         self.handles.pop(id(fh), None)
@@ -424,8 +632,15 @@ class LustreClient:
     # ------------------------------------------------------------- dirs
     def mkdir(self, path: str, mode: int = 0o755) -> tuple:
         parent, name = self._resolve_parent(path)
-        if self.wbc and self.wbc.active and self.wbc.in_subtree(parent):
-            return self.wbc.create(parent, name, "dir", mode)
+        w = self._wbc_for_write(parent)
+        if w is not None:
+            handled, fid = w.child(parent, name)
+            if handled:
+                if fid is not None:
+                    raise FsError(-17, path)
+                self._invalidate(parent, name)
+                return w.create(parent, name, "dir", mode)
+        self._wbc_sync_guard(parent)
         rep = self.lmv.reint({"type": "create", "parent": parent,
                               "name": name, "ftype": "dir", "mode": mode})
         self._invalidate(parent, name)
@@ -433,18 +648,24 @@ class LustreClient:
 
     def mkdir_p(self, path: str) -> tuple:
         fid = ROOT
-        for i, name in enumerate(self._parts(path)):
+        parts = self._parts(path)
+        for i in range(len(parts)):
+            sub = "/" + "/".join(parts[:i + 1])
             try:
-                d = self._lookup(fid, name)
-                if d.fid is None:
-                    raise FsError(-2, name)
-                fid = d.fid
+                fid = self.resolve(sub)
             except FsError:
-                fid = self.mkdir("/".join(self._parts(path)[:i + 1]))
+                fid = self.mkdir(sub)
         return tuple(fid)
 
     def readdir(self, path: str) -> dict:
         fid = self.resolve(path)
+        w = self._wbc_covering(fid)
+        if w is not None:
+            listing = w.listing(fid)
+            if listing is not None:
+                # the shadow owns this listing: zero RPCs once seeded
+                self.sim.stats.count("wbc.readdir_local")
+                return {k: tuple(v) for k, v in listing.items()}
         out = {k: tuple(v)
                for k, v in self.lmv.readdir(fid)["entries"].items()}
         # the listing order seeds the statahead detector: stats walking
@@ -484,9 +705,17 @@ class LustreClient:
         attrs, ea) while absorbing pages into the caches and recording
         the statahead order."""
         order = []
+        locks: list = []
+        names: set = set()
+        complete = True
         for mdc, lk, page in self.lmv.readdir_plus(dfid, self.dir_pages):
             self._absorb_page(dfid, mdc, lk, page)
+            if lk is None:
+                complete = False           # unlocked page: no window
+            elif (mdc, lk.handle) not in locks:
+                locks.append((mdc, lk.handle))
             for name, e in page.items():
+                names.add(name)
                 fid = tuple(e["fid"])
                 attrs, ea = e.get("attrs"), e.get("ea") or {}
                 if attrs is None:
@@ -499,6 +728,8 @@ class LustreClient:
                 order.append((name, fid))
                 yield name, fid, dict(attrs), ea
         self._sa_record(dfid, order)
+        if complete:
+            self._neg_install(tuple(dfid), locks, names)
 
     def ls_l(self, path: str) -> dict:
         """`ls -l`: name -> full stat attrs for every entry. With
@@ -508,7 +739,17 @@ class LustreClient:
         per OST across ALL of them. dir_pages=0 keeps the seed shape
         (readdir + per-entry stat), still statahead-accelerated when
         statahead_max > 0."""
-        if not self.dir_pages:
+        wbc_owned = False
+        if self.wbc is not None and self.wbc.active:
+            try:
+                f = self.resolve(path)
+            except FsError:
+                f = None
+            wbc_owned = f is not None and self._wbc_covering(f) is not None \
+                and self.wbc.listing(f) is not None
+        if not self.dir_pages or wbc_owned:
+            # shadow-owned dirs: a server-side readdir-plus would miss
+            # the unflushed entries — list + stat through the shadow
             base = "/" + "/".join(self._parts(path))
             base = "" if base == "/" else base
             return {name: self.stat(f"{base}/{name}")
@@ -567,6 +808,16 @@ class LustreClient:
 
     def symlink(self, target: str, path: str):
         parent, name = self._resolve_parent(path)
+        w = self._wbc_for_write(parent)
+        if w is not None:
+            handled, fid = w.child(parent, name)
+            if handled:
+                if fid is not None:
+                    raise FsError(-17, path)
+                w.create(parent, name, "symlink", 0o777, target=target)
+                self._invalidate(parent, name)
+                return
+        self._wbc_sync_guard(parent)
         self.lmv.reint({"type": "create", "parent": parent, "name": name,
                         "ftype": "symlink", "target": target})
         self._invalidate(parent, name)
@@ -574,6 +825,9 @@ class LustreClient:
     def link(self, existing: str, path: str):
         fid = self.resolve(existing)
         parent, name = self._resolve_parent(path)
+        # hard links (possibly reaching out of the subtree) are not
+        # representable in the shadow: flush + synchronous (ch. 17)
+        self._wbc_sync_guard(fid, parent)
         self.lmv.reint({"type": "link", "parent": parent, "name": name,
                         "fid": fid})
         self._invalidate(parent, name)
@@ -582,6 +836,9 @@ class LustreClient:
     def rename(self, old: str, new: str):
         sp, sn = self._resolve_parent(old)
         dp, dn = self._resolve_parent(new)
+        # renames can cross the subtree boundary or MDTs — not
+        # representable in the shadow: flush + synchronous (ch. 17)
+        self._wbc_sync_guard(sp, dp)
         rep = self.lmv.reint({"type": "rename", "src": sp, "src_name": sn,
                               "dst": dp, "dst_name": dn})
         self._invalidate(sp, sn)
@@ -592,6 +849,21 @@ class LustreClient:
 
     def unlink(self, path: str):
         parent, name = self._resolve_parent(path)
+        w = self._wbc_for_write(parent)
+        if w is not None:
+            handled, fid = w.child(parent, name)
+            if handled and fid is None:
+                raise FsError(-2, path)     # authoritative ENOENT
+            if handled and (sa := w.attrs(fid)) is not None:
+                # shadow-born inode: the unlink is fully local
+                if sa.get("type") == "dir" and w.listing(fid):
+                    raise FsError(-39, path)
+                w.unlink(parent, name)
+                self._invalidate(parent, name)
+                return
+        # pre-existing inode (the MDS owns its nlink/emptiness checks
+        # and hands back the EA for object destroys): synchronous
+        self._wbc_sync_guard(parent)
         rep = self.lmv.reint({"type": "unlink", "parent": parent,
                               "name": name})
         self._invalidate(parent, name)
@@ -600,13 +872,17 @@ class LustreClient:
     rmdir = unlink
 
     def _destroy_from_reply(self, rep):
-        """Last link gone (unlink or rename-over): the reply's LOV EA +
-        llog cookies hand the object destroys to THE CLIENT; OSTs cancel
-        the MDS records once their destroys commit (ch. 8.4)."""
-        ea = (rep.data or {}).get("ea") or {}
+        self._destroy_from_data(rep.data or {})
+
+    def _destroy_from_data(self, data: dict):
+        """Last link gone (unlink or rename-over, synchronous or via a
+        flushed WBC record): the LOV EA + llog cookies hand the object
+        destroys to THE CLIENT; OSTs cancel the MDS records once their
+        destroys commit (ch. 8.4)."""
+        ea = data.get("ea") or {}
         if "lov" in ea:
             lsm = lov_mod.StripeMd.from_ea(ea["lov"])
-            self.lov.destroy(lsm, rep.data.get("cookies"))
+            self.lov.destroy(lsm, data.get("cookies"))
 
     # -------------------------------------------------------- statahead
     def _sa_note_stat(self, dfid, name: str):
@@ -714,6 +990,17 @@ class LustreClient:
     def stat(self, path: str) -> dict:
         parts = self._parts(path)
         fid = self.resolve(path)
+        if self.wbc is not None and self.wbc.active:
+            sa = self.wbc.attrs(fid)
+            if sa is not None:
+                # shadow-born inode: attrs live in the cache, zero RPCs
+                self.sim.stats.count("wbc.stat_local")
+                a = dict(sa)
+                ea = dict(a.pop("ea", None) or {})
+                if "lov" in ea:
+                    a["stripe_count"] = ea["lov"]["stripe_count"]
+                    a["stripe_size"] = ea["lov"]["stripe_size"]
+                return a
         if parts:
             # statahead bookkeeping keyed by the parent as spelled in
             # the path (a symlinked parent just misses the detector)
@@ -760,6 +1047,12 @@ class LustreClient:
         attrs = {k: v for k, v in (("mode", mode), ("uid", uid),
                                    ("gid", gid), ("mtime", mtime),
                                    ("size", size)) if v is not None}
+        w = self.wbc
+        if w is not None and w.active and w.attrs(fid) is not None:
+            # shadow-born inode: the setattr is one more cache record
+            w.setattr(fid, attrs=attrs)
+            self._attr_drop(fid)
+            return dict(w.attrs(fid))
         rep = self.lmv.reint({"type": "setattr", "fid": fid,
                               "attrs": attrs})
         self._attr_drop(fid)       # we changed them: our copy is stale
@@ -773,8 +1066,13 @@ class LustreClient:
         (which revokes the attr-covering dir locks)."""
         fid = self.resolve(path)
         ca = self._attr_get(fid)
-        ea = dict(ca.ea) if ca is not None else \
-            self.lmv.getattr(fid, want_ea=True).get("ea", {})
+        if ca is not None:
+            ea = dict(ca.ea)
+        elif self.wbc is not None and self.wbc.active \
+                and self.wbc.attrs(fid) is not None:
+            ea = dict(self.wbc.attrs(fid).get("ea") or {})
+        else:
+            ea = self.lmv.getattr(fid, want_ea=True).get("ea", {})
         if "lov" in ea:
             self.lov.punch(lov_mod.StripeMd.from_ea(ea["lov"]), size)
         self.setattr(path, size=size, mtime=self.sim.now)
@@ -820,7 +1118,7 @@ class LustreClient:
     def enable_wbc(self, path: str) -> bool:
         """Enter metadata write-back mode for a subtree (ch. 17)."""
         fid = self.resolve(path)
-        wbc = mdc_mod.WbcCache(self.lmv, fid)
+        wbc = self._make_wbc(fid)
         if wbc.acquire():
             self.wbc = wbc
             return True

@@ -260,6 +260,13 @@ def _sweep_workload(fs):
     fs.unlink("/d2/moved")
     fs.mkdir("/d1/sub")
     fs.rmdir("/d1/sub")
+    # metadata write-back cache: local records + a reint_batch flush
+    # drive the mdc.wbc_flush / mds.reint_batch crash points
+    fs.mkdir("/wb")
+    if fs.enable_wbc("/wb"):
+        for i in range(3):
+            fs.mkdir(f"/wb/s{i}")
+        fs.disable_wbc()
 
 
 @pytest.mark.parametrize("site", sorted(F.SITES))

@@ -1,0 +1,189 @@
+"""Metadata write-back cache: shadow semantics, batched exactly-once
+reintegration, crash loss/replay bounds (ch. 17, §6.5)."""
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: sampled fallback
+    from _hyposhim import given, settings, strategies as st
+
+from repro.core import LustreCluster
+from repro.core.mds import ROOT_FID, S_IFREG
+from repro.fsio import FsError, LustreClient
+from repro.tools.audit import ChangelogAuditor
+
+
+# ------------------------------------------------- callback hygiene
+
+def test_flush_cb_restored_after_enable_disable_cycles():
+    """release() must put back the ORIGINAL dlm flush_cb: a wrapper per
+    enable/disable cycle used to pile up, each flushing a dead cache."""
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=16)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/w")
+    mdc = fs.lmv.mdc_for_fid(fs.resolve("/w"))
+    orig = mdc.locks.flush_cb
+    for cycle in range(2):
+        assert fs.enable_wbc("/w")
+        assert mdc.locks.flush_cb is not orig      # wrapper installed
+        fs.mkdir(f"/w/c{cycle}")
+        fs.disable_wbc()
+        assert mdc.locks.flush_cb is orig, f"cycle {cycle}"
+    assert set(fs.readdir("/w")) == {"c0", "c1"}
+
+
+# --------------------------------------------- batch atomicity (MDS)
+
+def test_reint_batch_eexist_mid_batch_leaves_no_half_applied_state():
+    """A failing record contributes only its -errno status: the records
+    around it land, its own partial effects are unwound, and the dup's
+    pinned fid never materialises as an inode."""
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=16)
+    fs = LustreClient(c).mount()
+    mdc = fs.lmv.mdc_for_fid(ROOT_FID)
+    fids = mdc.prealloc_fids(3)
+
+    def mk(name, fid):
+        return {"type": "create", "parent": ROOT_FID, "name": name,
+                "fid": fid, "ftype": S_IFREG, "mode": 0o644,
+                "remote_ok": False}
+
+    rep = mdc.reint_batch([mk("a", fids[0]), mk("a", fids[1]),
+                           mk("b", fids[2])])
+    assert [r["status"] for r in rep.data["results"]] == [0, -17, 0]
+    mds = c.mds_targets[0]
+    names = list(fs.readdir("/"))
+    assert names.count("a") == 1 and names.count("b") == 1
+    assert tuple(fids[0]) in mds.inodes          # first create won
+    assert tuple(fids[1]) not in mds.inodes      # dup fully unwound
+    assert fs.stat("/a")["type"] == "file"
+    assert fs.stat("/b")["type"] == "file"
+
+
+# --------------------------------------------------- property stream
+
+_OPS = st.lists(st.tuples(st.integers(0, 5), st.integers(0, 3),
+                          st.integers(0, 7)),
+                min_size=1, max_size=40)
+
+
+@settings(max_examples=15, deadline=None)
+@given(_OPS)
+def test_wbc_random_op_stream_converges(ops):
+    """Random create/mkdir/setattr/unlink streams — with forced
+    mid-stream flushes and AST-triggered flushes from a second client —
+    leave shadow ≡ post-flush namespace and changelog mirror ≡ ground
+    truth."""
+    c = LustreCluster(osts=1, mdses=1, clients=2, commit_interval=8,
+                      wbc_batch=4)
+    fs = LustreClient(c).mount()
+    fs2 = LustreClient(c, 1).mount()
+    aud = ChangelogAuditor(fs2)
+    fs.mkdir("/w")
+    assert fs.enable_wbc("/w")
+    model = {"/w": {}}                   # dir path -> {name: ftype}
+    dirs = ["/w"]
+    for kind, di, ni in ops:
+        d = dirs[di % len(dirs)]
+        name = f"n{ni % 6}"
+        path = d + "/" + name
+        ent = model[d].get(name)
+        if kind == 0:                                   # create file
+            if ent is None:
+                fs.close(fs.creat(path))
+                model[d][name] = "file"
+            else:
+                with pytest.raises(FsError):
+                    fs.creat(path)
+        elif kind == 1:                                 # mkdir
+            if ent is None:
+                fs.mkdir(path)
+                model[d][name] = "dir"
+                model[path] = {}
+                dirs.append(path)
+            else:
+                with pytest.raises(FsError):
+                    fs.mkdir(path)
+        elif kind == 2 and ent is not None:             # setattr
+            fs.setattr(path, mode=0o700 + ni % 8)
+        elif kind == 3:                                 # unlink/rmdir
+            if ent == "file":
+                fs.unlink(path)
+                del model[d][name]
+            elif ent == "dir":
+                if model[path]:
+                    with pytest.raises(FsError):
+                        fs.rmdir(path)
+                else:
+                    fs.rmdir(path)
+                    del model[d][name]
+                    del model[path]
+                    dirs.remove(path)
+        elif kind == 4:                                 # forced flush
+            fs.sync()
+        elif kind == 5:                                 # AST flush
+            fs2.readdir("/w")
+    fs.disable_wbc()                     # final barrier
+    for d in dirs:                       # namespace ≡ model, both views
+        assert set(fs.readdir(d)) == set(model[d]), d
+        assert set(fs2.readdir(d)) == set(model[d]), d
+        for name, t in model[d].items():
+            assert fs2.stat(d + "/" + name)["type"] == t
+    aud.tail()
+    report = aud.verify()
+    assert report["ok"], report["mismatches"]
+
+
+# -------------------------------------------------- crash semantics
+
+def test_client_crash_loses_exactly_the_unflushed_tail():
+    """Eviction semantics: flushed records are durable, the unflushed
+    tail dies with the client, and the changelog mirror still matches
+    the surviving namespace."""
+    c = LustreCluster(osts=1, mdses=1, clients=2, commit_interval=4)
+    fs = LustreClient(c).mount()
+    fs2 = LustreClient(c, 1).mount()
+    aud = ChangelogAuditor(fs2)
+    fs.mkdir("/w")
+    assert fs.enable_wbc("/w")
+    for i in range(4):
+        fs.mkdir(f"/w/keep{i}")
+    fs.sync()                            # durable prefix
+    for i in range(3):
+        fs.mkdir(f"/w/lost{i}")
+    w = fs.wbc
+    assert len(w.records) == 3
+    # the client dies: its subtree lock is evicted without the flush
+    # callback ever running (the revoke-cb path with nobody home)
+    w._deactivate(lost=True)
+    fs.wbc = None
+    assert c.stats.counters["wbc.lost_records"] == 3
+    assert set(fs2.readdir("/w")) == {f"keep{i}" for i in range(4)}
+    aud.tail()
+    report = aud.verify()
+    assert report["ok"], report["mismatches"]
+
+
+def test_mds_crash_mid_batch_never_double_applies():
+    """Crash the MDS on the 3rd record of a reint_batch: the whole batch
+    rolls back, client replay re-applies it exactly once — every entry
+    present once, changelog exactly-once, mirror ≡ namespace."""
+    c = LustreCluster(osts=1, mdses=1, clients=2, commit_interval=3)
+    fs = LustreClient(c).mount()
+    fs2 = LustreClient(c, 1).mount()
+    aud = ChangelogAuditor(fs2)
+    fs.mkdir("/w")
+    assert fs.enable_wbc("/w")
+    for i in range(6):
+        fs.mkdir(f"/w/d{i}")
+    c.lctl("set_param", "fail_loc", "mds.reint_batch", 3)
+    fs.sync()                            # flush -> crash -> heal
+    c.lctl("set_param", "fail_loc", "")
+    assert c.sim.fail.hits.get("mds.reint_batch", 0) >= 1
+    fs.disable_wbc()
+    names = fs2.readdir("/w")
+    assert sorted(names) == [f"d{i}" for i in range(6)]
+    aud.tail()
+    report = aud.verify()
+    assert report["ok"], report["mismatches"]
+    keys = [(r["mdt"], r["idx"]) for r in aud.feed]
+    assert len(keys) == len(set(keys))   # no record delivered twice
