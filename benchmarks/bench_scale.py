@@ -1,0 +1,246 @@
+"""Extreme-scale mixed-personality traffic harness (ISSUE-7, ch. 35).
+
+Drives a cluster with ``SCALE_CLIENTS`` (>= 1000) simultaneously-active
+clients in four personalities, each tagged by jobid so the monitoring
+plane can attribute everything it sees:
+
+  * ``stream`` — bulk writers: chunked writes to a private file, one
+    fsync barrier (the grant pipeline's customer);
+  * ``scan``   — metadata readers walking a shared directory (readdir-
+    plus + attr cache + batched glimpse);
+  * ``churn``  — small-file create/write/setattr/unlink cycles in a
+    private directory (the reint pipeline's customer);
+  * ``noisy``  — ONE noisy neighbor that explodes its op rate mid-run
+    (the anomaly detector's quarry).
+
+Every round runs all clients from the same virtual instant
+(``sim.parallel``), so NRS queueing and link busy-time produce a real
+per-jobid latency distribution; a :class:`ClusterMonitor` snapshot after
+each round merges per-target histograms into cluster-wide per-jobid
+p50/p95/p99.
+
+The documented scaling cliff: **grant exhaustion**.  Per-client grant is
+``free/(2 * exports)`` (ch. 10.12), so growing the client count from 64
+to SCALE_CLIENTS collapses the write-back window under the streamers'
+chunk size and cached writes degrade to synchronous write-through — OST
+write RPCs per streamer multiply.  ``scale_metrics()`` measures the
+cliff, per-jobid p99s, the noisy-neighbor fairness ratio (p99 with the
+noisy client active vs the quiet control), and monitoring overhead
+(collector RPCs / workload RPCs); ``benchmarks/run.py`` gates all four
+as the ``scale`` section of BENCH_rpc.json.
+"""
+from __future__ import annotations
+
+from benchmarks.common import save, table
+from repro.core import LustreCluster
+from repro.fsio import LustreClient
+from repro.tools.monitor import ChangelogAnomalyDetector
+
+SCALE_CLIENTS = 1024          # >= 1000 mixed-personality clients
+CONTROL_CLIENTS = 64          # small-N control for the grant cliff
+OST_CAPACITY = 64 << 20       # small on purpose: free/(2N) is the cliff
+CHUNK = 64 << 10              # streamer write chunk
+SHARED_FILES = 64             # scanner working set
+ROUNDS = 2
+PERSONALITIES = ("stream", "scan", "churn")
+
+_cache: dict | None = None
+
+
+def _personality(i: int, noisy: bool) -> str:
+    if noisy and i == 1:
+        return "noisy"
+    return PERSONALITIES[i % len(PERSONALITIES)]
+
+
+def _client_round(fs, i: int, job: str, rnd: int):
+    """One client's script for one round (runs inside sim.parallel)."""
+    home = f"/work/c{i}"
+    if job == "stream":
+        if rnd == 0:
+            fs.handles = getattr(fs, "handles", {})
+            # spread explicitly: each client's private RR counter would
+            # otherwise pile every first file onto OST 0
+            fs.handles[i] = fs.creat(f"{home}/big", stripe_offset=i % 4)
+        fh = fs.handles[i]
+        for k in range(2):
+            fs.write(fh, b"s" * CHUNK, offset=(rnd * 2 + k) * CHUNK)
+        if rnd == ROUNDS - 1:
+            fs.fsync(fh)
+            fs.close(fh)
+    elif job == "scan":
+        if rnd == 0:
+            fs.readdir("/shared")
+        base = (i * 7 + rnd * 8) % SHARED_FILES
+        for k in range(8):
+            fs.stat(f"/shared/s{(base + k) % SHARED_FILES}")
+    elif job == "churn":
+        path = f"{home}/r{rnd}"
+        fh = fs.creat(path)
+        fs.write(fh, b"c" * 4096)
+        fs.close(fh)
+        fs.setattr(path, mode=0o644)
+        if rnd > 0:
+            fs.unlink(f"{home}/r{rnd - 1}")
+    elif job == "noisy":
+        # round 0 establishes a modest baseline window; later rounds are
+        # the spike the changelog anomaly detector must flag
+        burst = 3 if rnd == 0 else 30
+        for k in range(burst):
+            path = f"{home}/n{rnd}_{k}"
+            fh = fs.creat(path, stripe_offset=k % 4)
+            fs.write(fh, b"n" * CHUNK)
+            fs.close(fh)
+
+
+def _workload_rpcs(c) -> int:
+    return sum(n for k, n in c.stats.counters.items()
+               if k.startswith("rpc.") and not k.endswith(".mon_collect")
+               and k not in ("rpc.timeout", "rpc.replay",
+                             "rpc.reply_cache_hit"))
+
+
+def _run(n_clients: int, noisy: bool) -> dict:
+    c = LustreCluster(osts=4, mdses=1, clients=n_clients,
+                      ost_capacity=OST_CAPACITY, commit_interval=4096)
+    setup = LustreClient(c).mount()
+    setup.mkdir("/work")
+    setup.mkdir("/shared")
+    for j in range(SHARED_FILES):
+        fh = setup.creat(f"/shared/s{j}")
+        setup.close(fh)
+    for i in range(n_clients):
+        setup.mkdir(f"/work/c{i}")
+
+    clients = []
+    for i in range(n_clients):
+        fs = LustreClient(c, i).mount()
+        fs.set_jobid(_personality(i, noisy))
+        clients.append(fs)
+
+    mon = c.monitor()
+    det = ChangelogAnomalyDetector(c, mon) if noisy else None
+    base_rpcs = _workload_rpcs(c)
+    t0 = c.now
+    anomalies = []
+    for rnd in range(ROUNDS):
+        c.sim.parallel([
+            (lambda fs=fs, i=i, r=rnd:
+             _client_round(fs, i, fs.rpc.jobid, r))
+            for i, fs in enumerate(clients)])
+        snap = mon.collect()
+        if det is not None:
+            anomalies.extend(det.poll())
+    snap = mon.collect()
+    assert not snap["partial"], snap["stale"]
+
+    cnt = c.stats.counters
+    mon_rpcs = (cnt.get("rpc.mds.mon_collect", 0)
+                + cnt.get("rpc.ost.mon_collect", 0))
+    work_rpcs = _workload_rpcs(c) - base_rpcs
+    return {
+        "clients": n_clients,
+        "vtime_s": round(c.now - t0, 6),
+        "jobs": {j: {k: s[k] for k in
+                     ("count", "p50_s", "p95_s", "p99_s", "mean_s")}
+                 for j, s in snap["cluster"]["by_jobid"].items()},
+        "grant": {
+            # the MARGINAL client's slice: min over live exports — this is
+            # what free/(2N) does to the last client through the door
+            "min_client_grant":
+                c.ost_targets[0].exports and min(
+                    e.data.get("grant", 0)
+                    for e in c.ost_targets[0].exports.values()) or 0,
+            "granted_total": snap["cluster"]["grant"]["granted_total"],
+            "shrunk_bytes": snap["cluster"]["grant"]["shrunk_bytes"],
+            "shrink_rpcs": cnt.get("rpc.ost.grant_shrink", 0),
+        },
+        "write_rpcs_per_client":
+            round(cnt.get("rpc.ost.write", 0) / n_clients, 3),
+        "overhead": {
+            "monitor_rpcs": mon_rpcs,
+            "workload_rpcs": work_rpcs,
+            "ratio": round(mon_rpcs / max(1, work_rpcs), 6),
+        },
+        "anomalies": anomalies,
+        "spans": snap["cluster"]["spans"],
+    }
+
+
+def scale_metrics(use_cache: bool = True) -> dict:
+    """The BENCH_rpc.json `scale` section (one execution per process)."""
+    global _cache
+    if use_cache and _cache is not None:
+        return _cache
+    control = _run(CONTROL_CLIENTS, noisy=False)
+    quiet = _run(SCALE_CLIENTS, noisy=False)
+    noisy = _run(SCALE_CLIENTS, noisy=True)
+
+    # fairness: how much the noisy neighbor inflates the p99 of each
+    # NORMAL jobid vs the quiet control at the same scale
+    fairness = {}
+    for j in PERSONALITIES:
+        q = quiet["jobs"].get(j, {}).get("p99_s", 0.0)
+        n = noisy["jobs"].get(j, {}).get("p99_s", 0.0)
+        fairness[j] = round(n / q, 3) if q else 0.0
+    out = {
+        "clients": SCALE_CLIENTS,
+        "control": control,
+        "quiet": quiet,
+        "noisy": noisy,
+        "fairness": {"per_jobid_p99_ratio": fairness,
+                     "max_ratio": max(fairness.values() or [0.0])},
+        # the grant-exhaustion cliff: write RPCs per streamer multiply
+        # when free/(2N) collapses below the streamers' chunk size
+        "grant_cliff": {
+            "control_clients": CONTROL_CLIENTS,
+            "control_grant": control["grant"]["min_client_grant"],
+            "scale_grant": quiet["grant"]["min_client_grant"],
+            "control_write_rpcs_per_client":
+                control["write_rpcs_per_client"],
+            "scale_write_rpcs_per_client":
+                quiet["write_rpcs_per_client"],
+            "rpc_multiplier": round(
+                quiet["write_rpcs_per_client"]
+                / max(1e-9, control["write_rpcs_per_client"]), 2),
+        },
+        "overhead_ratio": noisy["overhead"]["ratio"],
+        "noisy_flagged": any(a["jobid"] == "noisy"
+                             for a in noisy["anomalies"]),
+        "false_positives": sorted({a["jobid"] for a in noisy["anomalies"]}
+                                  - {"noisy"}),
+    }
+    _cache = out
+    return out
+
+
+def run() -> dict:
+    out = scale_metrics()
+    nj = out["noisy"]["jobs"]
+    table(f"scale harness: {SCALE_CLIENTS} clients, 4 personalities, "
+          f"{ROUNDS} rounds (noisy run)",
+          ["jobid", "rpcs traced", "p50 ms", "p95 ms", "p99 ms"],
+          [[j, nj[j]["count"],
+            round(nj[j]["p50_s"] * 1e3, 3),
+            round(nj[j]["p95_s"] * 1e3, 3),
+            round(nj[j]["p99_s"] * 1e3, 3)] for j in sorted(nj)])
+    cliff = out["grant_cliff"]
+    print(f"  grant cliff: {cliff['control_clients']} clients -> "
+          f"{cliff['control_grant'] >> 10} KiB grant, "
+          f"{cliff['control_write_rpcs_per_client']} write RPCs/client;"
+          f" {SCALE_CLIENTS} clients -> {cliff['scale_grant'] >> 10} KiB, "
+          f"{cliff['scale_write_rpcs_per_client']} RPCs/client "
+          f"[{cliff['rpc_multiplier']}x]")
+    print(f"  fairness (noisy/quiet p99): "
+          f"{out['fairness']['per_jobid_p99_ratio']}  "
+          f"monitor overhead: {out['overhead_ratio']:.4%}  "
+          f"noisy flagged: {out['noisy_flagged']}")
+    save("scale", out)
+    assert out["noisy_flagged"] and not out["false_positives"], \
+        out["false_positives"]
+    assert out["overhead_ratio"] <= 0.02, out["overhead_ratio"]
+    return out
+
+
+if __name__ == "__main__":
+    run()

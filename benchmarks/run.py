@@ -18,7 +18,7 @@ import sys
 import time
 
 BENCHES = ["striping", "nrs", "read", "mdscan", "untar", "intents",
-           "dlm", "recovery", "cobd", "checkpoint", "parity"]
+           "dlm", "recovery", "cobd", "checkpoint", "parity", "scale"]
 
 RPC_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_rpc.json")
 
@@ -49,6 +49,11 @@ def bench_rpc() -> dict:
     untar_baseline = None
     try:
         untar_baseline = committed["untar"]["wbc"]["reint_rpcs"]
+    except (KeyError, TypeError):
+        pass
+    scale_baseline = None
+    try:
+        scale_baseline = committed["scale"]["jobs"]
     except (KeyError, TypeError):
         pass
 
@@ -93,6 +98,28 @@ def bench_rpc() -> dict:
     un = untar_metrics()
     un["baseline_reint_rpcs"] = untar_baseline
     out["untar"] = un
+    # monitoring-plane scale harness (ISSUE-7): 1024 mixed-personality
+    # clients, per-jobid tail latency + noisy-neighbor fairness + the
+    # grant-exhaustion cliff + monitor overhead, all from one run of
+    # bench_scale (module-cached, so `--only scale` doesn't re-run it)
+    from benchmarks.bench_scale import (PERSONALITIES, SCALE_CLIENTS,
+                                        scale_metrics)
+    sc_full = scale_metrics()
+    sc = {
+        "clients": SCALE_CLIENTS,
+        "jobs": {j: sc_full["noisy"]["jobs"].get(j, {})
+                 for j in PERSONALITIES + ("noisy",)},
+        "fairness": sc_full["fairness"],
+        "grant_cliff": sc_full["grant_cliff"],
+        "overhead_ratio": sc_full["overhead_ratio"],
+        "noisy_flagged": sc_full["noisy_flagged"],
+        "false_positives": sc_full["false_positives"],
+        "spans": sc_full["noisy"]["spans"],
+        "baseline_p99_s": scale_baseline and {
+            j: scale_baseline.get(j, {}).get("p99_s")
+            for j in PERSONALITIES},
+    }
+    out["scale"] = sc
     # single source of truth for the gates: main() keys its exit code off
     # these per-gate flags, and the file writes below key off the
     # combined one
@@ -113,8 +140,18 @@ def bench_rpc() -> dict:
          and un["wbc"]["reint_rpcs"] > untar_baseline)
         or un["wbc"]["reint_rpcs"] > N_FILES // 8
         or un["reint_reduction"] < 8.0)
+    sc["regressed"] = (
+        any(scale_baseline is not None
+            and scale_baseline.get(j, {}).get("p99_s") is not None
+            and sc["jobs"].get(j, {}).get("p99_s", 0.0)
+            > scale_baseline[j]["p99_s"] * 1.25
+            for j in PERSONALITIES)
+        or sc["fairness"]["max_ratio"] > 4.0
+        or sc["overhead_ratio"] > 0.02
+        or not sc["noisy_flagged"] or bool(sc["false_positives"])
+        or sc["grant_cliff"]["rpc_multiplier"] < 1.2)
     out["regressed"] = out["write_regressed"] or sr["regressed"] \
-        or ms["regressed"] or un["regressed"]
+        or ms["regressed"] or un["regressed"] or sc["regressed"]
     if not out["regressed"]:
         # a failed gate must NOT overwrite its own baseline: the second
         # run would compare against the regressed count and pass, and a
@@ -166,6 +203,17 @@ def bench_rpc() -> dict:
           f"[{un['reint_reduction']}x fewer]"
           + (f"  (baseline: {untar_baseline})"
              if untar_baseline is not None else ""))
+    cl = sc["grant_cliff"]
+    print(f"== BENCH_rpc: {sc['clients']}-client scale harness ==\n"
+          f"  per-jobid p99 ms: "
+          + "  ".join(f"{j}={sc['jobs'][j].get('p99_s', 0) * 1e3:g}"
+                      for j in PERSONALITIES + ("noisy",)) + "\n"
+          f"  fairness max {sc['fairness']['max_ratio']}x  "
+          f"monitor overhead {sc['overhead_ratio']:.4%}  "
+          f"noisy flagged: {sc['noisy_flagged']}\n"
+          f"  grant cliff: {cl['control_grant'] >> 10} KiB -> "
+          f"{cl['scale_grant'] >> 10} KiB marginal grant, write RPCs/client "
+          f"x{cl['rpc_multiplier']}")
     return out
 
 
@@ -211,6 +259,17 @@ def main():
                 f"{un['wbc']['reint_rpcs']} reint RPCs (baseline "
                 f"{un['baseline_reint_rpcs']}, cap N/8), reduction "
                 f"{un['reint_reduction']}x (needs >= 8x)"))
+        sc = rpc["scale"]
+        if sc.get("regressed"):
+            failures.append((
+                "BENCH_rpc", f"scale gate failed: per-jobid p99 "
+                f"{ {j: sc['jobs'][j].get('p99_s') for j in sc['jobs']} } "
+                f"(baseline {sc['baseline_p99_s']}, headroom 1.25x), "
+                f"fairness {sc['fairness']['max_ratio']}x (cap 4x), "
+                f"overhead {sc['overhead_ratio']} (cap 0.02), noisy "
+                f"flagged {sc['noisy_flagged']} (false positives "
+                f"{sc['false_positives']}), grant-cliff multiplier "
+                f"{sc['grant_cliff']['rpc_multiplier']} (floor 1.2)"))
         ms = rpc["md_scan"]
         if ms.get("regressed"):
             failures.append((

@@ -146,6 +146,14 @@ class LustreCluster(R.ClusterBase):
     def mds_recovery(self, rpc: R.RpcClient) -> rec_mod.MdsClusterRecovery:
         return rec_mod.MdsClusterRecovery(rpc, self.mds_nids)
 
+    def monitor(self, **kw):
+        """The cluster's MELT-style collector (repro.tools.monitor),
+        created on first use; `lctl("mon_snapshot")` is the admin verb."""
+        if getattr(self, "_monitor", None) is None:
+            from repro.tools.monitor import ClusterMonitor
+            self._monitor = ClusterMonitor(self, **kw)
+        return self._monitor
+
     # ---------------------------------------------------------------- ops
     def fail_node(self, name: str):
         self.nodes[name].fail()
@@ -219,6 +227,11 @@ class LustreCluster(R.ClusterBase):
                 self.sim.fail.delay_s = float(args[1])
             else:
                 raise ValueError(args[0])
+        elif verb == "mon_snapshot":
+            # lctl("mon_snapshot") -> one cluster-wide aggregation round
+            # over real RPCs (partial + 'stale' list when targets are
+            # down); the snapshot tree is also the "monitor" procfs leaf
+            return self.monitor().collect()
         elif verb == "get_param":
             # lctl("get_param", "wbc") -> one procfs section; dotted
             # paths walk into it ("wbc.flushes", "client_cache.hit_rate")
@@ -278,6 +291,13 @@ class LustreCluster(R.ClusterBase):
                    "lost_records": cnt.get("wbc.lost_records", 0),
                    "reint_errors": cnt.get("wbc.reint_errors", 0),
                },
+               # monitoring plane (ISSUE-7): span registry roll-up + the
+               # collector's last-snapshot summary; per-target per-node
+               # counters appear under targets.<uuid>.counters below
+               "metrics": self.sim.metrics.info(),
+               "monitor": (self._monitor.info()
+                           if getattr(self, "_monitor", None) else
+                           {"snapshots": 0}),
                "targets": {}}
         for t in self.ost_targets:
             out["targets"][t.uuid] = {
@@ -292,6 +312,9 @@ class LustreCluster(R.ClusterBase):
                 "locks": sum(len(r.granted)
                              for r in t.ldlm.resources.values()),
                 "nrs": t.service.policy.info(),
+                "counters": dict(
+                    self.sim.stats.node_counters.get(t.uuid, {})),
+                "latency": self.sim.metrics.target_summary(t.uuid),
             }
         for t in self.mds_targets:
             out["targets"][t.uuid] = {
@@ -308,6 +331,9 @@ class LustreCluster(R.ClusterBase):
                 "nrs": t.service.policy.info(),
                 "changelog": t.changelog.info(),
                 "cluster_cut": t.cluster_cut,
+                "counters": dict(
+                    self.sim.stats.node_counters.get(t.uuid, {})),
+                "latency": self.sim.metrics.target_summary(t.uuid),
             }
         return out
 

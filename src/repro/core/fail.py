@@ -285,3 +285,21 @@ register_site("mds.reint_batch",
               "(the batch is ONE undo-scoped transaction: a crash here "
               "unwinds every already-applied record and client replay "
               "re-applies the batch exactly once)")
+# Monitoring plane + grant/llog maintenance (ISSUE-7):
+register_site("mon.collect",
+              "target about to assemble its mon_collect leaf (crash/"
+              "drop: the collector's single-attempt RPC times out and "
+              "the snapshot degrades to a PARTIAL one with this target "
+              "marked stale — never a hang, never a wrong total)")
+register_site("llog.cancel",
+              "llog catalog cancelling cookies (deferred: the crash "
+              "lands at the owning target's request boundary, the whole "
+              "uncommitted cancel transaction dies and the records are "
+              "re-shipped/re-cancelled after recovery — cancel is "
+              "idempotent)")
+register_site("osc.grant_shrink",
+              "client about to return idle grant to the OST (client-"
+              "side site: crash degrades to drop — the shrink RPC is "
+              "lost on the wire and the import recovers by timeout -> "
+              "reconnect -> resend; the absolute 'keep' target makes "
+              "the retry idempotent)")

@@ -106,6 +106,11 @@ class LlogCatalog:
             lg.added += 1
 
     def cancel(self, cookies) -> int:
+        # deferred crash site: cancellation is part of the surrounding
+        # transaction (destroy / changelog clear) — a crash lands at the
+        # owning target's request boundary and the undo log re-inserts
+        # the records, which are then re-shipped and re-cancelled
+        fail_mod.note("llog.cancel")
         n = 0
         for lg in list(self.logs):
             n += lg.cancel(cookies)

@@ -769,6 +769,24 @@ class MdsTarget(R.Target):
         return R.Reply(data={"inodes": len(self.inodes),
                              "group": self.inode_group})
 
+    # ---------------------------------------------------------- monitor
+    def mon_stats(self) -> dict:
+        return {
+            "namespace": {"inodes": len(self.inodes),
+                          "inode_group": self.inode_group,
+                          "pending_unlink_llog":
+                              len(self.unlink_llog.pending())},
+            "locks": {
+                "resources": len(self.ldlm.resources),
+                "granted": sum(len(r.granted)
+                               for r in self.ldlm.resources.values()),
+                "waiting": sum(len(r.waiting)
+                               for r in self.ldlm.resources.values()),
+            },
+            "changelog": self.changelog.info(),
+            "cluster_cut": self.cluster_cut,
+        }
+
     def op_close(self, req: R.Request) -> R.Reply:
         exp = self.exports[req.client_uuid]
         fid = exp.data.get("opens", {}).pop(req.body.get("handle"), None)

@@ -507,6 +507,10 @@ class Osc:
         todo = [d for d in self.dirty
                 if group is None or (d.group, d.oid) == (group, oid)]
         if not todo:
+            if group is None:
+                # idle full flush (e.g. close after a blocking AST already
+                # wrote everything back): still the moment to return grant
+                self._maybe_shrink_grant()
             return 0
         act = fail_mod.state.check("osc.flush")
         if act == "delay":
@@ -527,7 +531,33 @@ class Osc:
             self.dirty.remove(d)
             self.dirty_bytes -= len(d.data)
             self._clean_insert(d.group, d.oid, d.offset, d.data)
+        if group is None:
+            # full flush = the write burst is over: return idle grant so
+            # the OST can redistribute it (ch. 10.12 grant shrinking —
+            # at thousands of clients the per-export slice is the scarce
+            # resource, see benchmarks/bench_scale.py)
+            self._maybe_shrink_grant()
         return len(todo)
+
+    def _maybe_shrink_grant(self):
+        """Give back grant above the connect-time watermark once no dirty
+        data needs it. The RPC carries the absolute `keep` target, so a
+        resend after a drop/crash is idempotent (shrinking to 2 MB twice
+        is shrinking to 2 MB)."""
+        keep = self.imp.connect_data.get("grant", 0)
+        if self.dirty or keep <= 0 or self.grant <= keep:
+            return
+        act = fail_mod.state.check("osc.grant_shrink")
+        if act in ("drop", "crash"):
+            # client-side site: the shrink RPC is lost on the wire; the
+            # import recovers via timeout -> reconnect -> resend
+            self.sim.faults.drop_next[self.imp.active_nid] += 1
+        try:
+            rep = self.imp.request("grant_shrink", {"keep": keep})
+        except (R.TimeoutError_, R.RpcError):
+            return                     # best-effort: grant is a hint
+        self.grant = min(self.grant, rep.data.get("grant", keep))
+        self.sim.stats.count("osc.grant_shrink", node=self.rpc.uuid)
 
     def _drop_dirty_beyond(self, group, oid, size):
         for d in list(self.dirty):

@@ -51,6 +51,7 @@ class OstTarget(R.Target):
         ops["list_objects"] = self.op_list_objects
         ops["llog_cancel"] = self.op_llog_cancel
         ops["orphan_cleanup"] = self.op_orphan_cleanup
+        ops["grant_shrink"] = self.op_grant_shrink
 
     # ------------------------------------------------------------- locks
     def _lvb_update(self, res: dlm_mod.Resource):
@@ -76,6 +77,40 @@ class OstTarget(R.Target):
         exp = self.exports[req.client_uuid]
         rep.data["grant"] = self._grant_for(exp, INITIAL_GRANT)
         return rep
+
+    def op_grant_shrink(self, req: R.Request) -> R.Reply:
+        """Client returns idle grant down to an absolute `keep` target
+        (idempotent: a resent shrink converges to the same number).
+        Grant bookkeeping is volatile export state — no transno."""
+        exp = self.exports[req.client_uuid]
+        keep = max(0, int(req.body.get("keep", 0)))
+        cur = exp.data.get("grant", 0)
+        if cur > keep:
+            self.sim.stats.count("ost.grant_shrunk_bytes", cur - keep)
+            exp.data["grant"] = keep
+        return R.Reply(data={"grant": exp.data.get("grant", 0)})
+
+    # ---------------------------------------------------------- monitor
+    def mon_stats(self) -> dict:
+        sf = self.obd.statfs()
+        return {
+            "space": {"capacity": sf["capacity"], "free": sf["free"],
+                      "objects": len(self.obd.objects)},
+            "grant": {
+                "granted_total": sum(e.data.get("grant", 0)
+                                     for e in self.exports.values()),
+                "shrunk_bytes": self.sim.stats.node_counters
+                                .get(self.uuid, {})
+                                .get("ost.grant_shrunk_bytes", 0),
+            },
+            "locks": {
+                "resources": len(self.ldlm.resources),
+                "granted": sum(len(r.granted)
+                               for r in self.ldlm.resources.values()),
+                "waiting": sum(len(r.waiting)
+                               for r in self.ldlm.resources.values()),
+            },
+        }
 
     # ----------------------------------------------------------- obd ops
     def _wrap(self, fn, *a, **kw):

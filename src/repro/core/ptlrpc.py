@@ -115,6 +115,13 @@ class Request:
     jobid: str = ""              # batch-job tag: TBF NRS classification +
                                  # changelog attribution (one plumbing,
                                  # two consumers)
+    trace_id: int = 0            # span id (core.metrics): assigned ONCE at
+                                 # construction, stable across resend /
+                                 # replay / reply-cache retries so the
+                                 # registry can dedup to exactly one span
+
+
+_trace_seq = itertools.count(1)   # cluster-wide span ids (0 = untraced)
 
 
 @dataclasses.dataclass
@@ -191,41 +198,59 @@ class Service:
         d = n.get("data")
         return len(d) if d is not None else n.get("length", 0)
 
-    def request_cost(self, req: Request) -> float:
+    def cost_parts(self, req: Request) -> tuple[float, int, int]:
         """Seek-aware scatter/gather service cost (§4.5.6): a *contiguous*
         run of niobufs is one disk seek plus per-page transfer, every
         discontiguity charges another seek — so NRS scheduling (and the
         benchmarks) see a scattered vector's true weight, not a flat
-        per-niobuf constant."""
+        per-niobuf constant. Returns (cost, seeks, payload_bytes) so the
+        span recorded for this request carries its true disk weight."""
         nio = req.body.get("niobufs")
         if not isinstance(nio, (list, tuple)) or not nio:
             if "data" in req.body or "length" in req.body:
                 # legacy single-extent BRW: one run
                 ln = self._nio_len(req.body)
                 pages = max(1, (ln + PAGE_SIZE - 1) // PAGE_SIZE)
-                return self.cpu_cost + self.seek_cost + \
-                    self.page_cost * pages
-            return self.cpu_cost
-        runs, pages, prev_end = 0, 0, None
+                return (self.cpu_cost + self.seek_cost +
+                        self.page_cost * pages, 1, ln)
+            return self.cpu_cost, 0, 0
+        runs, pages, nbytes, prev_end = 0, 0, 0, None
         for n in sorted(nio, key=lambda n: n.get("offset", 0)):
             ln = self._nio_len(n)
+            nbytes += ln
             pages += max(1, (ln + PAGE_SIZE - 1) // PAGE_SIZE)
             off = n.get("offset", 0)
             if prev_end is None or off != prev_end:
                 runs += 1              # discontiguity: the head seeks
             prev_end = off + ln
         self.sim.stats.count("nrs.seeks", runs)
-        return self.cpu_cost + self.seek_cost * runs + \
-            self.page_cost * pages
+        return (self.cpu_cost + self.seek_cost * runs +
+                self.page_cost * pages, runs, nbytes)
+
+    def request_cost(self, req: Request) -> float:
+        return self.cost_parts(req)[0]
 
     def process(self, req: Request, arrival: float) -> Reply:
-        cost = self.request_cost(req)
+        cost, seeks, nio_bytes = self.cost_parts(req)
         start = self.policy.schedule(req, arrival, cost)
         self.sim.clock.advance_to(start)
         reply = self.target.handle(req)
         # the reply departs no earlier than the scheduled completion
         # (handlers issuing nested RPCs may already be later than this)
         self.sim.clock.advance_to(start + cost)
+        if req.trace_id and req.opcode not in nrs_mod.CONTROL_OPS \
+                and reply.status not in (-11, -108, -107):
+            # one span per traced RPC (ch. 35 observability): the registry
+            # dedups on trace_id, so resends / replays / reply-cache-served
+            # retries of this request never produce a second sample; the
+            # excluded statuses are recovery gates the client retries
+            # through — the span belongs to the attempt that executes
+            self.sim.metrics.record_span(
+                target=self.target.uuid, op=req.opcode,
+                export=req.client_uuid, jobid=req.jobid,
+                queue_wait=start - arrival, service=cost, seeks=seeks,
+                nbytes=nio_bytes + req.bulk_nbytes + reply.bulk_nbytes,
+                trace_id=req.trace_id)
         return reply
 
 
@@ -260,6 +285,7 @@ class Target:
         self.ops["connect"] = self.op_connect
         self.ops["disconnect"] = self.op_disconnect
         self.ops["ping"] = self.op_ping
+        self.ops["mon_collect"] = self.op_mon_collect
         node.register_target(self)
 
     # ------------------------------------------------------------- wiring
@@ -403,6 +429,33 @@ class Target:
     def op_ping(self, req: Request) -> Reply:
         return Reply(data={"boot_count": self.boot_count})
 
+    # ------------------------------------------------- std ops: monitor
+    def mon_stats(self) -> dict:
+        """Subclass hook: target-kind-specific sections of the monitoring
+        snapshot (OST: grants/space, MDS: changelog/inodes, both: locks)."""
+        return {}
+
+    def op_mon_collect(self, req: Request) -> Reply:
+        """One target's leaf of the cluster monitoring tree.  The reply
+        payload is charged to the wire like any other (wire_size of the
+        whole tree), so monitoring is a *cost-bearing* consumer the
+        overhead gate can measure, not free introspection."""
+        fail_mod.maybe_fail("mon.collect")
+        data = {
+            "uuid": self.uuid, "kind": self.svc_kind,
+            "nid": self.node.nid, "boot_count": self.boot_count,
+            "last_transno": self.transno,
+            "last_committed": self.committed_transno,
+            "recovering": self.recovering,
+            "num_exports": len(self.exports),
+            "nrs": self.service.policy.info(),
+            "counters": dict(self.sim.stats.node_counters.get(self.uuid, {})),
+            "latency": self.sim.metrics.target_summary(
+                self.uuid, max_exports=req.body.get("max_exports", 32)),
+        }
+        data.update(self.mon_stats())
+        return Reply(data=data)
+
 
 # ------------------------------------------------------------------- node
 
@@ -444,6 +497,10 @@ class Node:
         else:
             fail = self.sim.fail
             fail.enter_service(target)
+            # stats attribution context: every counter bumped while this
+            # target serves the request lands in its per-node namespace
+            # (nested server->server RPCs push the inner target on top)
+            self.sim.stats.node_stack.append(target.uuid)
             try:
                 fail.maybe_fail(f"ptlrpc.{target.svc_kind}.request_in")
                 reply = target.service.process(req, ev.arrival_time)
@@ -465,6 +522,7 @@ class Node:
                 target.restart()
                 return
             finally:
+                self.sim.stats.node_stack.pop()
                 fail.exit_service(target)
         # reply PUT matched on xid (paper §4.5.2)
         nbytes = wire_size(reply) + reply.bulk_nbytes
@@ -573,7 +631,8 @@ class Import:
                       xid=self.client.next_xid(), client_uuid=self.client.uuid,
                       boot_count=self.client.boot_count,
                       conn_generation=self.generation,
-                      bulk_nbytes=bulk_nbytes, jobid=self.client.jobid)
+                      bulk_nbytes=bulk_nbytes, jobid=self.client.jobid,
+                      trace_id=next(_trace_seq))
         for attempt in range(self.max_reconnects):
             reply = self._send_once(req)
             if reply is None:

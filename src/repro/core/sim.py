@@ -69,24 +69,54 @@ class FaultPlan:
 
 
 class Stats:
-    """Cluster-wide counters; benchmarks read these."""
+    """Cluster-wide counters; benchmarks read these.
+
+    Counters are ALSO namespaced by node uuid so the monitoring plane
+    reports per-target numbers that sum to the cluster totals.
+    Attribution is contextual: ``ptlrpc.Node._request_in`` pushes the
+    serving target's uuid onto ``node_stack`` for the duration of the
+    handler, so every count made while serving target X lands in X's
+    namespace automatically (nested server->server RPCs re-attribute
+    correctly because the inner target pushes on top).  Code running
+    outside any service context (client-side caches) may pass an
+    explicit ``node=`` fallback; counts with neither stay global-only.
+    """
 
     def __init__(self):
         self.counters = defaultdict(int)
         self.bytes = defaultdict(int)
+        self.node_counters = defaultdict(lambda: defaultdict(int))
+        self.node_bytes = defaultdict(lambda: defaultdict(int))
+        self.node_stack: list[str] = []   # serving-target uuid context
 
-    def count(self, key: str, n: int = 1):
+    def _node(self, fallback):
+        return self.node_stack[-1] if self.node_stack else fallback
+
+    def count(self, key: str, n: int = 1, node: str | None = None):
         self.counters[key] += n
+        owner = self._node(node)
+        if owner is not None:
+            self.node_counters[owner][key] += n
 
-    def add_bytes(self, key: str, n: int):
+    def add_bytes(self, key: str, n: int, node: str | None = None):
         self.bytes[key] += n
+        owner = self._node(node)
+        if owner is not None:
+            self.node_bytes[owner][key] += n
 
     def snapshot(self) -> dict:
         return {"counters": dict(self.counters), "bytes": dict(self.bytes)}
 
+    def node_snapshot(self, node: str) -> dict:
+        return {"counters": dict(self.node_counters.get(node, {})),
+                "bytes": dict(self.node_bytes.get(node, {}))}
+
     def reset(self):
         self.counters.clear()
         self.bytes.clear()
+        self.node_counters.clear()
+        self.node_bytes.clear()
+        self.node_stack.clear()
 
 
 class Simulator:
@@ -96,6 +126,10 @@ class Simulator:
         self.clock = Clock()
         self.faults = FaultPlan(seed)
         self.stats = Stats()
+        # RPC span registry (core.metrics): trace-id dedup lives HERE so
+        # exactly-once accounting survives target crash/restart
+        from repro.core.metrics import MetricsRegistry
+        self.metrics = MetricsRegistry()
         # OBD_FAIL failpoints are node-global (like obd_fail_loc); a fresh
         # simulator starts disarmed so clusters are isolated (core.fail)
         from repro.core import fail as fail_mod

@@ -1,0 +1,181 @@
+"""RPC tracing: histograms, span dedup, exactly-once, attribution."""
+from repro.core import LustreCluster
+from repro.core.metrics import (LatencyHistogram, MetricsRegistry,
+                                merge_jobid_histograms)
+from repro.fsio import LustreClient
+
+
+# ------------------------------------------------- histogram unit tests
+
+def test_bucket_edges():
+    b = LatencyHistogram.bucket_of
+    assert b(0.0) == 0
+    assert b(1e-6) == 0                  # 1 us: bucket 0 covers (0, 1]
+    assert b(1.5e-6) == 1                # (1, 2] us
+    assert b(2e-6) == 1
+    assert b(2.1e-6) == 2
+    assert b(1.0) == 20                  # 1 s ~ 2^20 us
+    assert b(1e16) == LatencyHistogram.MAX_BUCKET    # clamped
+
+
+def test_quantile_is_bucket_upper_bound():
+    h = LatencyHistogram()
+    for us in (1, 1, 1, 1, 1, 1, 1, 1, 1, 1000):   # 10 samples
+        h.record(us / 1e6)
+    assert h.count == 10
+    assert h.quantile(0.5) == 1e-6       # bucket 0 upper bound
+    # the 1000us straggler sits in bucket 10 -> p99 = 2^10 us = 1024 us
+    assert h.quantile(0.99) == 1024 / 1e6
+    s = h.summary()
+    assert s["count"] == 10 and s["max_s"] == 0.001
+    assert s["p99_s"] > s["p50_s"]
+
+
+def test_merge_matches_single_histogram_and_wire_form():
+    samples = [1e-6, 5e-6, 3e-4, 0.01, 2.0]
+    whole, a, b = (LatencyHistogram() for _ in range(3))
+    for i, s in enumerate(samples):
+        whole.record(s)
+        (a if i % 2 == 0 else b).record(s)
+    merged = LatencyHistogram()
+    merged.merge(a)
+    merged.merge(b.to_dict())            # wire (dict) form merges too
+    assert merged.buckets == whole.buckets
+    assert merged.count == whole.count
+    for q in (0.5, 0.95, 0.99):
+        assert merged.quantile(q) == whole.quantile(q)
+
+
+def test_merge_jobid_histograms_sums_buckets_across_targets():
+    reg = MetricsRegistry()
+    for i in range(4):
+        reg.record_span(target=f"ost{i % 2}", op="write", export="c0",
+                        jobid="jobA", queue_wait=0.0, service=1e-3,
+                        seeks=0, nbytes=0, trace_id=100 + i)
+    merged = merge_jobid_histograms(
+        [reg.target_summary("ost0"), reg.target_summary("ost1")])
+    assert merged["jobA"]["count"] == 4  # quantile AFTER the merge
+    assert merged["jobA"]["p99_s"] == reg.targets["ost0"].by_jobid[
+        "jobA"].quantile(0.99)
+
+
+def test_registry_dedups_on_trace_id():
+    reg = MetricsRegistry()
+    kw = dict(target="ost0", op="write", export="c0", jobid="j",
+              queue_wait=0.0, service=1e-3, seeks=1, nbytes=10)
+    assert reg.record_span(trace_id=7, **kw) is True
+    assert reg.record_span(trace_id=7, **kw) is False
+    assert reg.targets["ost0"].spans == 1
+    assert reg.dup_suppressed == 1
+
+
+def test_dedup_set_stays_bounded():
+    reg = MetricsRegistry()
+    reg.DEDUP_LIMIT = 100
+    kw = dict(target="t", op="o", export="e", jobid="j", queue_wait=0.0,
+              service=1e-6, seeks=0, nbytes=0)
+    for t in range(1, 302):
+        reg.record_span(trace_id=t, **kw)
+    assert len(reg._seen) <= reg.DEDUP_LIMIT
+    # recent ids (the only ones resend/replay can revisit) still dedup
+    assert reg.record_span(trace_id=301, **kw) is False
+
+
+# ------------------------------------------- exactly-once through ptlrpc
+
+def _spans_of(c, op):
+    return sum(t.by_op[op].count for t in c.sim.metrics.targets.values()
+               if op in t.by_op)
+
+
+def test_resent_request_after_dropped_reply_records_one_span():
+    """Reply lost after execution: the resend is served from the reply
+    cache (same xid, same trace id) — exactly one span."""
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=512)
+    fs = LustreClient(c).mount()
+    fh = fs.creat("/f")
+    c.lctl("set_param", "fail_loc", "ptlrpc.ost.before_reply", 1, "drop")
+    fs.write(fh, b"x" * 4096)
+    fs.fsync(fh)                         # the BRW reply is dropped once
+    fs.close(fh)
+    assert c.stats.counters["rpc.timeout"] >= 1
+    assert _spans_of(c, "write") == c.stats.counters["osc.brw_write_rpc"]
+
+
+def test_request_dropped_before_execution_records_one_span():
+    """Request lost before execution: only the resend executes — one
+    span, and no dedup suppression needed for it."""
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=512)
+    fs = LustreClient(c).mount()
+    fh = fs.creat("/f")
+    c.lctl("set_param", "fail_loc", "ptlrpc.ost.request_in", 1, "drop")
+    fs.write(fh, b"y" * 4096)
+    fs.fsync(fh)
+    fs.close(fh)
+    assert c.stats.counters["rpc.timeout"] >= 1
+    assert _spans_of(c, "write") == c.stats.counters["osc.brw_write_rpc"]
+
+
+def test_replayed_requests_record_one_span_each():
+    """MDS crash with uncommitted transactions: replay re-executes the
+    same Request objects (same trace ids) — the registry, which lives on
+    the Simulator and survives the restart, suppresses the duplicates."""
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=10_000)
+    fs = LustreClient(c).mount()
+    for i in range(5):
+        fs.mkdir(f"/d{i}")
+    dups0 = c.sim.metrics.dup_suppressed
+    c.fail_node("mds0")
+    c.restart_node("mds0")
+    assert fs.stat("/d4")["fid"]
+    assert c.stats.counters["rpc.replay"] >= 1
+    assert c.sim.metrics.dup_suppressed > dups0   # replays were delivered
+    # ... and every one was suppressed: one span per client-issued batch
+    assert _spans_of(c, "reint_batch") == \
+        c.stats.counters.get("wbc.flush", 0)
+
+
+def test_control_ops_are_not_traced():
+    c = LustreCluster(osts=1, mdses=1, clients=1)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/d")
+    ops = set()
+    for t in c.sim.metrics.targets.values():
+        ops |= set(t.by_op)
+    assert not ops & {"connect", "disconnect", "ping"}
+
+
+# ----------------------------------------------- per-target attribution
+
+def test_node_attribution_sums_to_cluster_totals():
+    """Satellite (a): per-target counters partition the global ones.
+    Every RPC-side counter must attribute to exactly one serving node,
+    so per-node sums equal the cluster total; non-RPC keys may also be
+    counted outside any service context, so per-node sums never exceed
+    the global value."""
+    c = LustreCluster(osts=2, mdses=2, clients=2, commit_interval=8)
+    for idx in range(2):
+        fs = LustreClient(c, idx).mount()
+        for i in range(6):
+            fs.mkdir(f"/cl{idx}_d{i}")
+        fh = fs.creat(f"/cl{idx}_f", stripe_count=2)
+        fs.write(fh, b"z" * (256 << 10))
+        fs.fsync(fh)
+        fs.close(fh)
+        fs.readdir("/")
+        fs.stat(f"/cl{idx}_f")
+    node_keys = {k for per in c.stats.node_counters.values() for k in per}
+    assert any(k.startswith("rpc.mds.") for k in node_keys)
+    assert any(k.startswith("rpc.ost.") for k in node_keys)
+    for key in node_keys:
+        node_sum = sum(per.get(key, 0)
+                       for per in c.stats.node_counters.values())
+        if key.startswith("rpc."):
+            assert node_sum == c.stats.counters[key], key
+        else:
+            assert node_sum <= c.stats.counters[key], key
+    # and the per-node slices name real targets, plus the per-client
+    # DLM-callback pseudo-targets (their uuid is the client's rpc uuid)
+    real = {t.uuid for t in c.mds_targets + c.ost_targets}
+    for uuid in c.stats.node_counters:
+        assert uuid in real or uuid.startswith(("client-", "lcb:")), uuid

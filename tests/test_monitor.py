@@ -1,0 +1,195 @@
+"""Monitoring plane: snapshot tree, degradation, anomalies, grants."""
+from repro.core import LustreCluster
+from repro.fsio import LustreClient
+from repro.tools.monitor import ChangelogAnomalyDetector
+
+
+def _workload(c, n_dirs=4, data=b"w" * (128 << 10)):
+    fs = LustreClient(c).mount()
+    for i in range(n_dirs):
+        fs.mkdir(f"/d{i}")
+    fh = fs.creat("/d0/f", stripe_count=2)
+    fs.write(fh, data)
+    fs.fsync(fh)
+    fs.close(fh)
+    fs.stat("/d0/f")
+    return fs
+
+
+# -------------------------------------------------------- snapshot tree
+
+def test_snapshot_tree_covers_every_target_with_all_sections():
+    c = LustreCluster(osts=2, mdses=2, clients=1, commit_interval=64)
+    _workload(c)
+    snap = c.lctl("mon_snapshot")
+    assert not snap["partial"] and snap["stale"] == []
+    want = {t.uuid for t in c.mds_targets + c.ost_targets}
+    assert set(snap["targets"]) == want
+    for uuid, leaf in snap["targets"].items():
+        assert not leaf["stale"]
+        for section in ("nrs", "counters", "latency"):
+            assert section in leaf, (uuid, section)
+        assert leaf["latency"]["spans"] >= 0
+    for t in c.ost_targets:
+        leaf = snap["targets"][t.uuid]
+        assert {"space", "grant", "locks"} <= set(leaf)
+    for t in c.mds_targets:
+        leaf = snap["targets"][t.uuid]
+        assert {"namespace", "locks", "changelog"} <= set(leaf)
+
+
+def test_cluster_rollups_sum_leaves_and_merge_histograms():
+    c = LustreCluster(osts=2, mdses=1, clients=1, commit_interval=64,
+                      ost_capacity=1 << 30)
+    _workload(c)
+    snap = c.lctl("mon_snapshot")
+    cl = snap["cluster"]
+    # space: exactly the sum of the OST leaves (capacity is per-OST)
+    assert cl["space"]["capacity"] == 2 * (1 << 30)
+    assert 0 < cl["space"]["free"] <= cl["space"]["capacity"]
+    # spans: sum over leaves; per-jobid quantiles come from merged
+    # buckets, so cluster count == sum of leaf counts for that jobid
+    assert cl["spans"] == sum(leaf["latency"]["spans"]
+                              for leaf in snap["targets"].values())
+    leafsum = sum(leaf["latency"]["by_jobid"].get("(none)", {})
+                  .get("count", 0) for leaf in snap["targets"].values())
+    assert cl["by_jobid"]["(none)"]["count"] == leafsum > 0
+    # counters roll up the per-node attribution (satellite a)
+    assert cl["counters"].get("rpc.mds.reint_batch",
+                              cl["counters"].get("rpc.mds.reint", 0)) > 0
+    # monitoring overhead is measured (the <=2% bound is a *scale*
+    # property, gated in bench_scale where workload RPCs dwarf it)
+    assert snap["overhead"]["ratio"] > 0
+    assert snap["overhead"]["snapshot_rpcs"] == len(snap["targets"])
+
+
+def test_partitioned_target_degrades_to_partial_snapshot():
+    """A dead OST must cost the collector a bounded timeout, mark that
+    leaf stale, and keep totals over fresh leaves only — never a hang,
+    never a silently-wrong total."""
+    c = LustreCluster(osts=2, mdses=1, clients=1, commit_interval=64,
+                      ost_capacity=1 << 30)
+    fs = _workload(c)
+    full = c.lctl("mon_snapshot")
+    assert not full["partial"]
+    c.fail_node("ost1")
+    snap = c.lctl("mon_snapshot")
+    assert snap["partial"] and snap["stale"] == ["OST0001"]
+    assert snap["targets"]["OST0001"] == {"uuid": "OST0001", "stale": True}
+    # fresh-only totals: one OST's capacity, not a stale guess of two
+    assert snap["cluster"]["space"]["capacity"] == 1 << 30
+    assert c.stats.counters["mon.snapshot_partial"] == 1
+    c.restart_node("ost1")
+    # real IO (not a cached stat) so the data client reconnects and the
+    # target's recovery window closes
+    fh = fs.open("/d0/f", "w")
+    fs.write(fh, b"again" * 1024)
+    fs.fsync(fh)
+    fs.close(fh)
+    healed = c.lctl("mon_snapshot")
+    assert not healed["partial"]
+    assert healed["cluster"]["space"]["capacity"] == 2 * (1 << 30)
+
+
+def test_mon_collect_failpoint_crashes_target_never_wrong_total():
+    """Satellite (c): a collector crashed *on the target* mid-collect
+    degrades exactly like a partition — partial snapshot, stale leaf —
+    and the next round heals through normal reconnect."""
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=64)
+    fs = _workload(c)
+    c.lctl("set_param", "fail_loc", "mon.collect")
+    snap = c.lctl("mon_snapshot")
+    assert c.sim.fail.fired == 1
+    assert snap["partial"] and len(snap["stale"]) == 1
+    fs.statfs()           # workload client reconnects; recovery ends
+    healed = c.lctl("mon_snapshot")
+    assert not healed["partial"]
+    assert c.stats.counters["mon.snapshot"] >= 2
+
+
+def test_procfs_exposes_metrics_and_monitor_state():
+    c = LustreCluster(osts=1, mdses=1, clients=1)
+    _workload(c)
+    c.lctl("mon_snapshot")
+    proc = c.procfs()
+    assert proc["metrics"]["spans"] > 0
+    assert proc["monitor"]["snapshots"] == 1
+    assert proc["monitor"]["partial"] is False
+    for t in c.ost_targets + c.mds_targets:
+        entry = proc["targets"][t.uuid] if "targets" in proc else None
+        if entry is None:
+            break
+        assert "latency" in entry and "counters" in entry
+
+
+# ------------------------------------------------------ grant shrinkage
+
+def test_grant_shrink_returns_idle_grant_to_connect_target():
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    fh = fs.creat("/big", stripe_count=1)
+    fs.write(fh, b"g" * (4 << 20))       # outruns the 2 MiB initial grant
+    fs.fsync(fh)
+    fs.close(fh)
+    osc = fs.lov.oscs[0]
+    keep = osc.imp.connect_data["grant"]
+    # write replies re-granted GRANT_CHUNK slices; the post-flush shrink
+    # returned the idle surplus down to the connect-time target
+    assert osc.grant <= keep
+    assert c.stats.counters["rpc.ost.grant_shrink"] >= 1
+    assert c.stats.counters["ost.grant_shrunk_bytes"] > 0
+    exp = next(iter(c.ost_targets[0].exports.values()))
+    assert exp.data["grant"] == osc.grant
+
+
+def test_grant_shrink_failpoint_degrades_to_drop_and_stays_idempotent():
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=64)
+    fs = LustreClient(c).mount()
+    fh = fs.creat("/big", stripe_count=1)
+    fs.write(fh, b"g" * (4 << 20))
+    c.lctl("set_param", "fail_loc", "osc.grant_shrink", 1, "drop")
+    fs.fsync(fh)                         # shrink RPC lost; flush succeeds
+    fs.close(fh)
+    assert c.sim.fail.fired == 1
+    osc = fs.lov.oscs[0]
+    keep = osc.imp.connect_data["grant"]
+    # the next idle flush retries the (absolute-target, idempotent) shrink
+    osc.flush()
+    assert osc.grant <= keep
+    exp = next(iter(c.ost_targets[0].exports.values()))
+    assert exp.data["grant"] == osc.grant
+
+
+# ----------------------------------------------------- anomaly detector
+
+def test_anomaly_detector_flags_noisy_jobid_only():
+    """Satellite (b): per-jobid op-rate spike vs rolling baseline —
+    the noisy neighbor is flagged, steady jobids are not, and the
+    baseline only absorbs a window after it was judged."""
+    c = LustreCluster(osts=1, mdses=1, clients=2, commit_interval=64)
+    steady = LustreClient(c).mount()
+    noisy = LustreClient(c, 1).mount()
+    steady.set_jobid("steady")
+    noisy.set_jobid("noisy")
+    det = ChangelogAnomalyDetector(c, spike_factor=4.0, min_ops=16)
+
+    def window(n_steady, n_noisy, tag):
+        for i in range(n_steady):
+            steady.mkdir(f"/s_{tag}_{i}")
+        for i in range(n_noisy):
+            noisy.mkdir(f"/n_{tag}_{i}")
+        return det.poll()
+
+    assert window(6, 6, "w0") == []      # first window IS the baseline
+    assert window(6, 6, "w1") == []      # steady state: nothing flagged
+    flagged = window(6, 60, "w2")        # the spike
+    assert [a["jobid"] for a in flagged] == ["noisy"]
+    assert flagged[0]["ops"] >= 60
+    assert c.stats.counters["mon.anomaly"] == 1
+    # spike absorbed into the EWMA only after judgement: a *sustained*
+    # plateau stops being "anomalous" as the baseline catches up
+    again = window(6, 60, "w3")
+    assert [a["jobid"] for a in again] in ([], ["noisy"])
+    det.close()
+    for t in c.mds_targets:
+        assert not t.changelog.users

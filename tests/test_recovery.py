@@ -267,6 +267,16 @@ def _sweep_workload(fs):
         for i in range(3):
             fs.mkdir(f"/wb/s{i}")
         fs.disable_wbc()
+    # monitoring plane: one collector round over real RPCs reaches the
+    # mon.collect site; a crash/partition there degrades to a PARTIAL
+    # snapshot (target listed in 'stale') — never a hang and never a
+    # silently-wrong total, which the sweep's healing asserts implicitly
+    snap = fs.cluster.lctl("mon_snapshot")
+    assert set(snap["targets"]) == {
+        t.uuid for t in fs.cluster.mds_targets + fs.cluster.ost_targets}
+    for uuid in snap["stale"]:
+        assert snap["targets"][uuid]["stale"], uuid
+    assert snap["partial"] == bool(snap["stale"])
 
 
 @pytest.mark.parametrize("site", sorted(F.SITES))
@@ -296,6 +306,15 @@ def test_crash_point_sweep(site):
     # all arrived through records (mirror already proved equality), plus
     # the crash actually happened
     assert c.sim.fail.fired == 1 or site not in (c.sim.fail.hits or {})
+    # trace exactly-once under EVERY crash site (ISSUE-7): one span per
+    # client-issued BRW write and per reint_batch, no matter how many
+    # resends/replays/reply-cache hits the recovery path produced
+    spans_of = lambda op: sum(  # noqa: E731
+        t.by_op[op].count for t in c.sim.metrics.targets.values()
+        if op in t.by_op)
+    assert spans_of("write") == c.stats.counters.get("osc.brw_write_rpc", 0)
+    assert spans_of("reint_batch") == \
+        c.stats.counters.get("wbc.flush", 0), site
 
 
 def test_crash_sweep_sites_cover_all_layers():
