@@ -18,6 +18,147 @@ from repro.launch.mesh import HBM_BW
 
 N = 1 << 20            # 4 MiB of int32 lanes per stripe
 
+_r5_cache: dict = {}
+
+
+def _payload(n: int, seed: int = 5) -> bytes:
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, 256, n, dtype=np.uint8).tobytes()
+
+
+def raid5_metrics() -> dict:
+    """End-to-end raid5 section (ISSUE-8) for BENCH_rpc.json:
+
+      * degraded-read overhead vs a clean cold read (byte-identical
+        reconstruction from surviving stripes + the Pallas parity
+        kernel), admin-deactivated dead OST so the number is the
+        reconstruction cost, not the timeout-discovery walk;
+      * rebuild throughput regenerating the dead OST's objects onto the
+        spare (cold maintenance client via lctl);
+      * client p99 while a rebuild runs concurrently — no-rebuild
+        baseline vs rebuild under the two-level tbf_orr throttle vs an
+        unthrottled FIFO rebuild.
+
+    Module-cached so `--only parity` and the BENCH_rpc gate share one
+    run."""
+    if _r5_cache:
+        return _r5_cache
+    from repro.core import LustreCluster
+    from repro.core.metrics import merge_jobid_histograms
+    from repro.fsio import LustreClient
+
+    out: dict = {}
+    size, ssz = 768 << 10, 64 << 10
+    data = _payload(size)
+    c = LustreCluster(osts=4, mdses=1, clients=3, spare_osts=1,
+                      commit_interval=256)
+    fs = LustreClient(c, 0).mount()
+    fh = fs.creat("/f", stripe_count=3, stripe_size=ssz,
+                  stripe_offset=0, pattern="raid5")
+    fs.write(fh, data, offset=0)
+    fs.close(fh)
+    for t in c.ost_targets:
+        t.commit()
+
+    def cold_read(idx, degraded):
+        r = LustreClient(c, idx).mount()
+        if degraded:
+            r.deactivate_ost("OST0001")
+        rpc0 = c.stats.counters.get("rpc.ost.read", 0)
+        t0 = c.now
+        f = r.open("/f")
+        got = r.read(f, size, offset=0)
+        r.close(f)
+        return {"identical": got == data,
+                "vtime_s": round(c.now - t0, 6),
+                "ost_read_rpcs":
+                    c.stats.counters.get("rpc.ost.read", 0) - rpc0}
+
+    out["clean"] = cold_read(1, degraded=False)
+    c.fail_node("ost1")
+    out["degraded"] = cold_read(2, degraded=True)
+    out["degraded"]["overhead_x"] = round(
+        out["degraded"]["vtime_s"] / max(1e-9, out["clean"]["vtime_s"]), 2)
+    out["degraded"]["reconstructed_units"] = \
+        c.stats.counters.get("lov.reconstruct_unit", 0)
+
+    # rebuild throughput: fresh maintenance client (cold caches) so the
+    # reconstruction reads really cross the wire
+    t0 = c.now
+    rep = c.lctl("rebuild", "OST0001", c.spare_uuids[0])
+    rb_vt = c.now - t0
+    out["rebuild"] = {
+        "files": rep["rebuilt"], "bytes": rep["bytes"],
+        "layout_swaps": rep["swapped"],
+        "vtime_s": round(rb_vt, 6),
+        "throughput_MBps": round(rep["bytes"] / max(1e-9, rb_vt) / 1e6, 2),
+    }
+
+    # --- client p99 with a concurrent rebuild: baseline / tbf / fifo ---
+    def p99_run(mode: str) -> float:
+        cc = LustreCluster(osts=4, mdses=1, clients=3, spare_osts=1,
+                           commit_interval=256)
+        for t in cc.ost_targets + cc.spare_targets:
+            t.service.cpu_cost = 2e-3        # OST service is the choke
+        w = LustreClient(cc, 0).mount()
+        w.mkdir("/r5")
+        fdata = _payload(192 << 10, seed=6)
+        for i in range(8):
+            f = w.creat(f"/r5/f{i}", stripe_count=3,
+                        stripe_size=16 << 10, stripe_offset=0,
+                        pattern="raid5")
+            w.write(f, fdata, offset=0)
+            w.close(f)
+        for t in cc.ost_targets:
+            t.commit()
+        if mode == "tbf":
+            cc.lctl("rebuild_throttle", 200.0, 2.0)
+        cc.fail_node("ost1")
+        app = LustreClient(cc, 1).mount()
+        app.set_jobid("app")
+        af = app.creat("/app.bin", stripe_count=2, stripe_size=16 << 10,
+                       stripe_offset=2)       # lives on the live OSTs
+        maint = LustreClient(cc, 2).mount()
+        chunk = _payload(4 << 10, seed=7)
+        nonlocal_off = [0]
+
+        def app_burst():
+            # small write + fsync per op: every op is a real wire RPC (a
+            # re-read loop would be served from the clean cache and
+            # measure nothing)
+            for _ in range(6):
+                app.write(af, chunk, offset=nonlocal_off[0])
+                app.fsync(af)
+                nonlocal_off[0] += len(chunk)
+
+        def rebuild_step():
+            # one file per round (the batch-paced rebuild): each burst
+            # contends with a live slice of rebuild traffic instead of
+            # replaying entirely before/after it
+            maint.rebuild_ost("OST0001", cc.spare_uuids[0], limit=1)
+
+        # rebuild first in thunk order: virtual-clock parallel replays
+        # thunks from one instant, and the service busy chains a thunk
+        # observes are those already laid down — the app must observe
+        # the rebuild's occupancy, not the reverse
+        for _ in range(8):
+            thunks = ([rebuild_step] if mode != "none" else []) \
+                + [app_burst]
+            cc.sim.parallel(thunks)
+        hist = merge_jobid_histograms(
+            [cc.sim.metrics.target_summary(t.uuid)
+             for t in cc.ost_targets + cc.spare_targets])
+        return hist["app"]["p99_s"]
+
+    base, tbf, fifo = p99_run("none"), p99_run("tbf"), p99_run("fifo")
+    out["throttle"] = {
+        "baseline_p99_s": base, "tbf_p99_s": tbf, "fifo_p99_s": fifo,
+        "tbf_p99_ratio": round(tbf / max(1e-9, base), 3),
+        "fifo_p99_ratio": round(fifo / max(1e-9, base), 3),
+    }
+    _r5_cache.update(out)
+    return out
+
 
 def run() -> dict:
     out = {}
@@ -43,6 +184,15 @@ def run() -> dict:
     table("XOR parity kernel: analytic TPU v5e roofline (verified vs ref)",
           ["K stripes", "HBM traffic", "roofline t", "eff GB/s",
            "ops/byte"], rows)
+    r5 = raid5_metrics()
+    out["raid5"] = r5
+    table("raid5 end-to-end (ISSUE-8)",
+          ["metric", "value"],
+          [["degraded read identical", r5["degraded"]["identical"]],
+           ["degraded overhead", f"{r5['degraded']['overhead_x']}x"],
+           ["rebuild MB/s (virtual)", r5["rebuild"]["throughput_MBps"]],
+           ["app p99 ratio (tbf)", r5["throttle"]["tbf_p99_ratio"]],
+           ["app p99 ratio (fifo)", r5["throttle"]["fifo_p99_ratio"]]])
     save("parity", out)
     return out
 

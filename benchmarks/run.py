@@ -120,6 +120,13 @@ def bench_rpc() -> dict:
             for j in PERSONALITIES},
     }
     out["scale"] = sc
+    # raid5 / SNS (ISSUE-8): degraded-read reconstruction must stay
+    # byte-identical, and a tbf_orr-throttled rebuild must hold client
+    # p99 at <= 1.5x the no-rebuild baseline (the FIFO number is the
+    # contrast, not a gate)
+    from benchmarks.bench_parity import raid5_metrics
+    r5 = raid5_metrics()
+    out["raid5"] = r5
     # single source of truth for the gates: main() keys its exit code off
     # these per-gate flags, and the file writes below key off the
     # combined one
@@ -150,8 +157,14 @@ def bench_rpc() -> dict:
         or sc["overhead_ratio"] > 0.02
         or not sc["noisy_flagged"] or bool(sc["false_positives"])
         or sc["grant_cliff"]["rpc_multiplier"] < 1.2)
+    r5["regressed"] = (
+        not r5["clean"]["identical"]
+        or not r5["degraded"]["identical"]
+        or r5["throttle"]["tbf_p99_ratio"] > 1.5
+        or r5["rebuild"]["layout_swaps"] < 1)
     out["regressed"] = out["write_regressed"] or sr["regressed"] \
-        or ms["regressed"] or un["regressed"] or sc["regressed"]
+        or ms["regressed"] or un["regressed"] or sc["regressed"] \
+        or r5["regressed"]
     if not out["regressed"]:
         # a failed gate must NOT overwrite its own baseline: the second
         # run would compare against the regressed count and pass, and a
@@ -203,6 +216,16 @@ def bench_rpc() -> dict:
           f"[{un['reint_reduction']}x fewer]"
           + (f"  (baseline: {untar_baseline})"
              if untar_baseline is not None else ""))
+    th = r5["throttle"]
+    print(f"== BENCH_rpc: raid5 degraded read + throttled rebuild ==\n"
+          f"  degraded read: identical={r5['degraded']['identical']}  "
+          f"{r5['degraded']['overhead_x']}x vtime of clean "
+          f"({r5['degraded']['reconstructed_units']} units rebuilt)\n"
+          f"  rebuild: {r5['rebuild']['bytes']} B onto spare at "
+          f"{r5['rebuild']['throughput_MBps']} MB/s (virtual), "
+          f"{r5['rebuild']['layout_swaps']} layout swap(s)\n"
+          f"  app p99 during rebuild: tbf_orr {th['tbf_p99_ratio']}x "
+          f"baseline (gate <= 1.5x), fifo {th['fifo_p99_ratio']}x")
     cl = sc["grant_cliff"]
     print(f"== BENCH_rpc: {sc['clients']}-client scale harness ==\n"
           f"  per-jobid p99 ms: "
@@ -270,6 +293,13 @@ def main():
                 f"flagged {sc['noisy_flagged']} (false positives "
                 f"{sc['false_positives']}), grant-cliff multiplier "
                 f"{sc['grant_cliff']['rpc_multiplier']} (floor 1.2)"))
+        r5 = rpc["raid5"]
+        if r5.get("regressed"):
+            failures.append((
+                "BENCH_rpc", f"raid5 gate failed: degraded identical "
+                f"{r5['degraded']['identical']}, tbf p99 ratio "
+                f"{r5['throttle']['tbf_p99_ratio']} (cap 1.5), layout "
+                f"swaps {r5['rebuild']['layout_swaps']} (floor 1)"))
         ms = rpc["md_scan"]
         if ms.get("regressed"):
             failures.append((

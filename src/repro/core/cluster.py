@@ -38,7 +38,9 @@ class LustreCluster(R.ClusterBase):
                  readahead_pages: int = osc_mod.DEFAULT_READAHEAD_PAGES,
                  dir_pages: int = 64, statahead_max: int = 32,
                  wbc_auto: bool = False, wbc_batch: int = 64,
-                 wbc_max_dirty: int = 1024):
+                 wbc_max_dirty: int = 1024,
+                 spare_osts: int = 0, rebuild_rate: float = 0.0,
+                 rebuild_burst: float = 4.0):
         super().__init__(seed)
         self.net = net
         # client-side BRW pipeline + read cache knobs, handed to every
@@ -65,19 +67,35 @@ class LustreCluster(R.ClusterBase):
         self.wbc_auto = wbc_auto
         self.wbc_batch = wbc_batch
         self.wbc_max_dirty = wbc_max_dirty
+        # raid5 rebuild knobs (ISSUE-8): spare_osts = extra OST targets
+        # excluded from stripe allocation, available as rebuild targets
+        # (lctl("rebuild", dead, spare)); rebuild_rate > 0 installs the
+        # two-level tbf_orr NRS policy on every OST with a
+        # {"rebuild": rate} rule, throttling rebuild BRWs req/s while
+        # leaving client classes unlimited (and disk-ordered)
+        self.spare_osts = spare_osts
+        self.rebuild_rate = rebuild_rate
+        self.rebuild_burst = rebuild_burst
         self.ost_targets: list[ost_mod.OstTarget] = []
+        self.spare_targets: list[ost_mod.OstTarget] = []
         self.mds_targets: list[mds_mod.MdsTarget] = []
         self.client_nodes: list[R.Node] = []
 
         # --- OST nodes (optionally paired for failover: shared storage,
         # standby node imports the same target on failure — ch. 13.8)
-        for i in range(osts):
+        for i in range(osts + spare_osts):
             node = R.Node(f"ost{i}", net, self)
             t = ost_mod.OstTarget(f"OST{i:04d}", node, ost_capacity)
             t.commit_interval = commit_interval
-            if nrs_policy != "fifo" or nrs_params:
+            if rebuild_rate > 0:
+                t.service.set_policy("tbf_orr",
+                                     rules={"rebuild": rebuild_rate},
+                                     burst=rebuild_burst)
+            elif nrs_policy != "fifo" or nrs_params:
                 t.service.set_policy(nrs_policy, **(nrs_params or {}))
-            self.ost_targets.append(t)
+            (self.ost_targets if i < osts
+             else self.spare_targets).append(t)
+        self.spare_uuids = [t.uuid for t in self.spare_targets]
         self.ost_nids = {}
         for i, t in enumerate(self.ost_targets):
             ring = [t.node.nid]
@@ -85,6 +103,8 @@ class LustreCluster(R.ClusterBase):
                 # nearest left neighbour hosts the standby (§6.7.6.4)
                 ring.append(self.ost_targets[(i + 1) % osts].node.nid)
             self.ost_nids[t.uuid] = ring
+        for t in self.spare_targets:
+            self.ost_nids[t.uuid] = [t.node.nid]
 
         # --- MDS cluster
         for i in range(mdses):
@@ -99,7 +119,7 @@ class LustreCluster(R.ClusterBase):
             for u in self.mds_targets:
                 if u is not t:
                     t.connect_peer(u.uuid, [u.node.nid])
-            for o in self.ost_targets:
+            for o in self.ost_targets + self.spare_targets:
                 t.connect_ost(o.uuid, self.ost_nids[o.uuid])
 
         # --- failover standby wiring: a restarted OST target can be
@@ -118,22 +138,26 @@ class LustreCluster(R.ClusterBase):
     def make_client_rpc(self, idx: int = 0) -> R.RpcClient:
         return R.RpcClient(self.client_nodes[idx])
 
-    def make_oscs(self, rpc: R.RpcClient, writeback=True, **osc_kw):
+    def make_oscs(self, rpc: R.RpcClient, writeback=True, *,
+                  spares: bool = False, **osc_kw):
         osc_kw.setdefault("max_pages_per_rpc", self.max_pages_per_rpc)
         osc_kw.setdefault("max_rpcs_in_flight", self.max_rpcs_in_flight)
         osc_kw.setdefault("vectored_brw", self.vectored_brw)
         osc_kw.setdefault("max_cached_mb", self.max_cached_mb)
         return [osc_mod.Osc(rpc, t.uuid, self.ost_nids[t.uuid],
                             writeback=writeback, **osc_kw)
-                for t in self.ost_targets]
+                for t in (self.spare_targets if spares
+                          else self.ost_targets)]
 
     def make_lov(self, rpc: R.RpcClient, policy: str = "round_robin",
                  group: int = 0, writeback=True, **osc_kw) -> lov_mod.Lov:
         return lov_mod.Lov(self.make_oscs(rpc, writeback, **osc_kw),
-                           group=group, policy=policy)
+                           group=group, policy=policy,
+                           spares=self.make_oscs(rpc, writeback,
+                                                 spares=True, **osc_kw))
 
     def target(self, uuid: str):
-        for t in self.ost_targets + self.mds_targets:
+        for t in self.ost_targets + self.spare_targets + self.mds_targets:
             if t.uuid == uuid:
                 return t
         raise KeyError(uuid)
@@ -227,6 +251,28 @@ class LustreCluster(R.ClusterBase):
                 self.sim.fail.delay_s = float(args[1])
             else:
                 raise ValueError(args[0])
+        elif verb == "rebuild":
+            # lctl("rebuild", dead_ost_uuid, spare_ost_uuid[, jobid])
+            # walks the namespace with a maintenance client and rebuilds
+            # every raid5 file referencing the dead OST onto the spare
+            # (ISSUE-8); returns the rebuild report dict
+            dead, spare = args[0], args[1]
+            jobid = args[2] if len(args) > 2 else "rebuild"
+            # local import: fsio sits above core in the layer stack, so a
+            # module-level import here would be circular
+            from repro.fsio.client import LustreClient
+            maint = LustreClient(self, node_idx=0)
+            return maint.rebuild_ost(dead, spare, jobid=jobid)
+        elif verb == "rebuild_throttle":
+            # lctl("rebuild_throttle", rate[, burst]) installs the
+            # two-level tbf_orr policy on every OST service, limiting the
+            # "rebuild" jobid class to `rate` RPCs/s while other traffic
+            # rides the orr_disk ordering unthrottled
+            rate = float(args[0])
+            burst = float(args[1]) if len(args) > 1 else self.rebuild_burst
+            for t in self.ost_targets + self.spare_targets:
+                t.service.set_policy("tbf_orr", rules={"rebuild": rate},
+                                     burst=burst)
         elif verb == "mon_snapshot":
             # lctl("mon_snapshot") -> one cluster-wide aggregation round
             # over real RPCs (partial + 'stale' list when targets are
@@ -291,6 +337,22 @@ class LustreCluster(R.ClusterBase):
                    "lost_records": cnt.get("wbc.lost_records", 0),
                    "reint_errors": cnt.get("wbc.reint_errors", 0),
                },
+               # raid5/SNS rollup (ISSUE-8): degraded service, parity
+               # reconstruction volume, and rebuild progress
+               "raid": {
+                   "degraded_reads": cnt.get("lov.degraded_read", 0),
+                   "degraded_read_bytes": cnt.get("lov.degraded_read_bytes", 0),
+                   "degraded_writes": cnt.get("lov.degraded_write", 0),
+                   "reconstructed_units": cnt.get("lov.reconstruct_unit", 0),
+                   "reconstructed_bytes": cnt.get("lov.reconstruct_bytes", 0),
+                   "parity_writes": cnt.get("lov.parity_write", 0),
+                   "parity_bytes": cnt.get("lov.parity_bytes", 0),
+                   "rebuilt_objects": cnt.get("lov.rebuild_object", 0),
+                   "rebuilt_bytes": cnt.get("lov.rebuild_bytes", 0),
+                   "layout_swaps": cnt.get("lov.layout_swap", 0),
+                   "rebuilds_aborted": cnt.get("lov.rebuild_aborted", 0),
+                   "ost_deactivations": cnt.get("lov.ost_inactive", 0),
+               },
                # monitoring plane (ISSUE-7): span registry roll-up + the
                # collector's last-snapshot summary; per-target per-node
                # counters appear under targets.<uuid>.counters below
@@ -299,9 +361,10 @@ class LustreCluster(R.ClusterBase):
                            if getattr(self, "_monitor", None) else
                            {"snapshots": 0}),
                "targets": {}}
-        for t in self.ost_targets:
+        for t in self.ost_targets + self.spare_targets:
             out["targets"][t.uuid] = {
                 "kind": "obdfilter", "nid": t.node.nid,
+                "spare": t in self.spare_targets,
                 "boot_count": t.boot_count,
                 "last_transno": t.transno,
                 "last_committed": t.committed_transno,

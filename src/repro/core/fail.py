@@ -303,3 +303,17 @@ register_site("osc.grant_shrink",
               "lost on the wire and the import recovers by timeout -> "
               "reconnect -> resend; the absolute 'keep' target makes "
               "the retry idempotent)")
+# raid5 OST rebuild (ISSUE-8):
+register_site("lov.rebuild",
+              "rebuilder about to reconstruct one file's dead-slot "
+              "object onto the spare (client-side site: crash degrades "
+              "to abort — the rebuild stops mid-namespace-walk; no "
+              "layout was touched yet, every file it skipped still "
+              "serves degraded reads from parity and a rerun finishes "
+              "the job)")
+register_site("lov.layout_swap",
+              "rebuilder about to commit a rebuilt file's new StripeMd "
+              "to the MDS EA (client-side site: crash degrades to "
+              "abort BEFORE the setattr — the old layout stays intact "
+              "and degraded-readable, the spare object is merely "
+              "orphaned; readers never observe a torn layout)")

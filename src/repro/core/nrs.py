@@ -34,6 +34,10 @@ chains:
     request's jobid when a ``rules`` entry matches it, else the client
     uuid) delay a request's start until a token is available, enforcing
     requests/sec rate limits per tenant or per batch job.
+  * ``tbf_orr`` — two-level composition: TBF admission (rate limits for
+    classes named in ``rules``; everyone else unlimited) feeding the
+    ``orr_disk`` ordering — QoS and disk locality compose, which is how
+    raid5 OST rebuild traffic is throttled without starving clients.
 
 Every policy keeps request accounting (per-client and per-object counts,
 total queue wait) exposed through ``info()`` — the substrate for the
@@ -376,9 +380,113 @@ class TbfPolicy(NrsPolicy):
         return out
 
 
+class TbfOrrPolicy(OrrDiskPolicy):
+    """Two-level policy (the ROADMAP'd composition): TBF rate limits
+    OVER orr_disk ordering, so QoS and disk locality compose instead of
+    being either/or.
+
+    Level 1 (admission): a token bucket per QoS class (jobid-rule first,
+    else client uuid — the TBF semantics) delays the request's effective
+    arrival until a token is free.  Level 2 (ordering): the admitted
+    request then takes the ordinary ``orr_disk`` path — per-object fair
+    chains with the contiguous-continuation seek refund.
+
+    This is what OST rebuild wants: the rebuilder runs under a
+    ``rules={"rebuild": r}`` bucket so its reconstruction BRWs trickle
+    in at r req/s and client p99 holds, while WITHIN its trickle the
+    requests still batch by object and disk contiguity (a throttled
+    rebuild that also seeks randomly would waste its whole budget).
+
+    params:
+      rate  — default tokens/sec per class; 0 = unlimited (default —
+              only classes named in ``rules`` are throttled)
+      burst — bucket depth (default 4)
+      rules — {class: rate} overrides, jobid first then client uuid
+      seek_cost — forwarded to orr_disk
+    """
+
+    name = "tbf_orr"
+
+    def __init__(self, sim, rate: float = 0.0, burst: float = 4.0,
+                 rules: dict | None = None, **params):
+        super().__init__(sim, **params)
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.rules = dict(rules or {})
+        self.buckets: dict = {}        # class -> (tokens, last_update)
+        self.throttled = 0
+        # ORR chain keys whose traffic is token-limited: they YIELD in
+        # the fair-share stretch (see _stretch)
+        self._throttled_keys: set = set()
+
+    def rate_for(self, key) -> float:
+        return float(self.rules.get(key, self.rate))
+
+    def tbf_classify(self, req):
+        jobid = getattr(req, "jobid", "")
+        if jobid and jobid in self.rules:
+            return jobid
+        return req.client_uuid
+
+    def _admit(self, req, arrival: float) -> float:
+        """Token release instant for the request's QoS class."""
+        key = self.tbf_classify(req)
+        rate = self.rate_for(key)
+        if rate <= 0:
+            return arrival             # unlimited class
+        tokens, last = self.buckets.get(key, (self.burst, arrival))
+        now = max(arrival, last)       # clock may rewind between thunks
+        tokens = min(self.burst, tokens + (now - last) * rate)
+        if tokens >= 1.0:
+            ready = now
+        else:
+            ready = now + (1.0 - tokens) / rate
+            self.throttled += 1
+        tokens = min(self.burst, tokens + (ready - now) * rate) - 1.0
+        self.buckets[key] = (tokens, ready)
+        return ready
+
+    def _stretch(self, active, key):
+        """Throttled classes yield: the token bucket IS their service
+        allocation, so their paced chains must not also count as fair-
+        share members — otherwise a rebuild spread over many objects
+        would claim one share per object ON TOP of its rate cap and
+        unthrottled clients would see 1/n service during the whole
+        rebuild window (the exact starvation the composition exists to
+        prevent). A throttled class itself still shares with everything
+        active; unthrottled classes share only with each other."""
+        if key in self._throttled_keys:
+            return float(len(active))
+        return float(max(1, sum(1 for k in active
+                                if k not in self._throttled_keys)))
+
+    def schedule(self, req, arrival, cost):
+        if req.opcode in CONTROL_OPS:
+            self._account(req, arrival, arrival)
+            return arrival
+        if self.rate_for(self.tbf_classify(req)) > 0:
+            # mirror of classify()'s key, without its batch accounting
+            oid = req.body.get("oid")
+            self._throttled_keys.add(
+                ("client", req.client_uuid) if oid is None
+                else ("obj", req.body.get("group", 0), oid))
+        # admission first, ordering second: the orr_disk chains see the
+        # token-release instant as the arrival
+        return super().schedule(req, max(arrival, self._admit(req, arrival)),
+                                cost)
+
+    def info(self):
+        out = super().info()
+        out["rate"] = self.rate
+        out["burst"] = self.burst
+        out["rules"] = dict(self.rules)
+        out["throttled"] = self.throttled
+        return out
+
+
 POLICIES = {p.name: p for p in
             (FifoPolicy, RoundRobinPolicy, OrrPolicy, OrrDiskPolicy,
-             WfqPolicy, TbfPolicy)}
+             WfqPolicy, TbfPolicy, TbfOrrPolicy)}
 
 
 def make_policy(name: str, sim, **params) -> NrsPolicy:

@@ -174,6 +174,18 @@ class Osc:
         self.grant = 0
         self.locks.drop_all()
 
+    # ------------------------------------------------------------- admin
+    @property
+    def active(self) -> bool:
+        return not self.imp.deactivated
+
+    def set_active(self, on: bool):
+        """`lctl --device <osc> activate|deactivate` analogue. While
+        inactive every RPC through this OSC fails fast with -19 (ENODEV)
+        instead of paying the reconnect walk; the LOV's raid5 paths key
+        degraded service off exactly that."""
+        self.imp.deactivated = not on
+
     # --------------------------------------------------------------- api
     def create(self, group: int, oid: int | None = None, **attrs) -> dict:
         def fixup(req, rep):

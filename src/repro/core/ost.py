@@ -34,6 +34,10 @@ class OstTarget(R.Target):
         # referral/policy module (§5.5.2): caching OST uuid -> nid
         self.caching_osts: dict[str, str] = {}
         self.referral_rr = 0
+        # per-jobid I/O byte attribution, {jobid: {"read": n, "write": n}}:
+        # server-side ground truth for "how fast is the rebuild job
+        # actually moving" vs the client jobs sharing this spindle
+        self.jobid_bytes: dict[str, dict] = {}
         ops = self.ops
         ops["connect"] = self.op_connect
         ops["disconnect"] = self.op_disconnect
@@ -110,7 +114,16 @@ class OstTarget(R.Target):
                 "waiting": sum(len(r.waiting)
                                for r in self.ldlm.resources.values()),
             },
+            "jobid_bytes": {j: dict(v)
+                            for j, v in self.jobid_bytes.items()},
         }
+
+    def _note_jobid_io(self, req: R.Request, kind: str, nbytes: int):
+        jobid = getattr(req, "jobid", "") or ""
+        if not jobid or not nbytes:
+            return
+        slot = self.jobid_bytes.setdefault(jobid, {"read": 0, "write": 0})
+        slot[kind] += nbytes
 
     # ----------------------------------------------------------- obd ops
     def _wrap(self, fn, *a, **kw):
@@ -218,6 +231,7 @@ class OstTarget(R.Target):
                                  n["offset"], n["length"]) for n in nio]
             total = sum(len(c) for c in chunks)
             self.sim.stats.add_bytes("ost.read", total)
+            self._note_jobid_io(req, "read", total)
             self.sim.stats.count("ost.brw_read_niobufs", len(nio))
             return R.Reply(data={"len": total, "niobufs": len(nio)},
                            bulk=chunks, bulk_nbytes=total)
@@ -227,6 +241,7 @@ class OstTarget(R.Target):
             return ref
         data = self._wrap(self.obd.read, group, oid, b["offset"], b["length"])
         self.sim.stats.add_bytes("ost.read", len(data))
+        self._note_jobid_io(req, "read", len(data))
         return R.Reply(data={"len": len(data)}, bulk=data,
                        bulk_nbytes=len(data))
 
@@ -247,6 +262,7 @@ class OstTarget(R.Target):
                              b.get("mtime", self.sim.now))
             total = len(data)
         self.sim.stats.add_bytes("ost.write", total)
+        self._note_jobid_io(req, "write", total)
         exp = self.exports[req.client_uuid]
         exp.data["grant"] = max(0, exp.data.get("grant", 0) - total)
         self.ldlm.bump_version(("ext", b["group"], b["oid"]), size=out["size"])

@@ -590,6 +590,11 @@ class Import:
         # -107 every piece of state the server granted this import is
         # void and MUST be dropped, not just the replay queue
         self.evict_cbs: list[Callable[[], None]] = []
+        # `lctl --device deactivate` analogue: an administratively-inactive
+        # import fails fast with -19 (ENODEV) instead of paying the full
+        # reconnect walk on every touch — the LOV marks a dead OST inactive
+        # so raid5 degraded paths and the rebuilder skip it cheaply
+        self.deactivated = False
 
     # ------------------------------------------------------------ wiring
     @property
@@ -625,6 +630,8 @@ class Import:
                 no_recover: bool = False, fixup=None) -> Reply:
         """Send a request with full recovery semantics; raises RpcError on
         application errors, TimeoutError_ if the target stays unreachable."""
+        if self.deactivated:
+            raise RpcError(-19, f"{self.target_uuid} deactivated")
         if self.state in ("NEW", "DISCONN"):
             self._connect_cycle()
         req = Request(opcode=opcode, body=dict(body, _target=self.target_uuid),

@@ -430,22 +430,25 @@ class LustreClient:
     # ------------------------------------------------------------- files
     def creat(self, path: str, *, stripe_count: int = 0,
               stripe_size: int = 0, stripe_offset: int = -1,
-              mode: int = 0o644) -> FileHandle:
-        """lstripe-style create with explicit striping (ch. 32.1)."""
+              mode: int = 0o644, pattern: str = "raid0") -> FileHandle:
+        """lstripe-style create with explicit striping (ch. 32.1).
+        pattern "raid5" adds a rotating parity stripe (ch. 15)."""
         return self.open(path, "cwx", stripe_count=stripe_count,
                          stripe_size=stripe_size,
-                         stripe_offset=stripe_offset, mode=mode)
+                         stripe_offset=stripe_offset, mode=mode,
+                         pattern=pattern)
 
     def open(self, path: str, flags: str = "r", *, stripe_count: int = 0,
              stripe_size: int = 0, stripe_offset: int = -1,
-             mode: int = 0o644) -> FileHandle:
+             mode: int = 0o644, pattern: str = "raid0") -> FileHandle:
         """flags: r read, w write, c create, x exclusive."""
         parent, name = self._resolve_parent(path)
         w = self._wbc_for_write(parent) if "c" in flags \
             else self._wbc_covering(parent)
         if w is not None:
             fh = self._wbc_open(w, parent, name, flags, stripe_count,
-                                stripe_size, stripe_offset, mode, path)
+                                stripe_size, stripe_offset, mode, path,
+                                pattern)
             if fh is not None:
                 return fh
         if "c" in flags:
@@ -465,7 +468,7 @@ class LustreClient:
             lsm = self.lov.create(
                 stripe_count=stripe_count or self.default_stripe_count,
                 stripe_size=stripe_size or self.default_stripe_size,
-                stripe_offset=stripe_offset)
+                stripe_offset=stripe_offset, pattern=pattern)
             self.lmv.mdc_for_fid(fid).reint(
                 {"type": "setattr", "fid": fid, "ea": {"lov": lsm.to_ea()}})
         elif "lov" in ea:
@@ -477,7 +480,8 @@ class LustreClient:
         return fh
 
     def _wbc_open(self, w, parent, name, flags, stripe_count, stripe_size,
-                  stripe_offset, mode, path) -> FileHandle | None:
+                  stripe_offset, mode, path,
+                  pattern: str = "raid0") -> FileHandle | None:
         """Open/create under the WBC: shadow-born files open with zero
         RPCs, and a create lands in the cache — the client still creates
         the stripe objects itself (§6.4.3), the LOV EA rides the
@@ -508,7 +512,7 @@ class LustreClient:
         lsm = self.lov.create(
             stripe_count=stripe_count or self.default_stripe_count,
             stripe_size=stripe_size or self.default_stripe_size,
-            stripe_offset=stripe_offset)
+            stripe_offset=stripe_offset, pattern=pattern)
         w.setattr(fid, ea={"lov": lsm.to_ea()})
         self._invalidate(parent, name)
         fh = FileHandle(fid, lsm, 0, flags, wbc=True)
@@ -1083,6 +1087,95 @@ class LustreClient:
             return True
         except FsError:
             return False
+
+    # ------------------------------------------------------ raid5 rebuild
+    def deactivate_ost(self, uuid: str):
+        """`lctl --device deactivate`: mark an OST dead for this client —
+        raid5 paths go degraded immediately instead of timing out."""
+        self.lov.set_active(uuid, False)
+
+    def activate_ost(self, uuid: str):
+        self.lov.set_active(uuid, True)
+
+    def rebuild_ost(self, dead_uuid: str, spare_uuid: str, *,
+                    jobid: str = "rebuild",
+                    limit: int | None = None) -> dict:
+        """Background rebuilder (ch. 15): walk the namespace, and for
+        every raid5 file striped over `dead_uuid` reconstruct the dead
+        slot's object onto `spare_uuid` from survivors + parity, then
+        swap the file's layout to the rebuilt object.
+
+        * All reconstruction I/O is tagged with `jobid` so a ``tbf_orr``
+          NRS rule ({"rebuild": rate}) throttles it server-side without
+          starving client traffic.
+        * The layout swap is a reint setattr on the LOV EA — the MDS
+          applies it under its inode lock and revokes every attr-covering
+          DLM lock, so readers re-fetch the EA atomically and never see
+          a torn layout; a reader mid-degraded-read keeps using the OLD
+          layout, which stays valid (the dead slot still reconstructs).
+        * OBD_FAIL sites: ``lov.rebuild`` fires before each file's
+          reconstruction, ``lov.layout_swap`` before each EA commit —
+          both abort the walk with the old layout intact (crash-sweep
+          proves no torn layouts / stale data either way).
+        * ``limit`` caps the number of files rebuilt in this call (the
+          batch-paced rebuild knob — callers interleave batches with
+          foreground work; every file left behind still serves degraded
+          reads and a later call resumes where the layouts say).
+        """
+        report = {"rebuilt": 0, "swapped": 0, "skipped": 0, "bytes": 0,
+                  "aborted": False}
+        spare = self.lov.by_uuid[spare_uuid]
+        prev_jobid = self.rpc.jobid
+        prev_active = self.lov.is_active(dead_uuid)
+        self.set_jobid(jobid)
+        self.lov.set_active(dead_uuid, False)
+        try:
+            for _, _, fid, attrs in self.walk():
+                if attrs.get("type") != "file":
+                    continue
+                ea = self.lmv.getattr(fid, want_ea=True).get("ea") or {}
+                if "lov" not in ea:
+                    continue
+                lsm = lov_mod.StripeMd.from_ea(ea["lov"])
+                if lsm.pattern != "raid5" or not any(
+                        o["ost"] == dead_uuid for o in lsm.objects):
+                    report["skipped"] += 1
+                    continue
+                if fail_mod.state.check("lov.rebuild") in ("drop", "crash"):
+                    # client-side site: the rebuilder dies mid-walk — no
+                    # layout touched yet, a rerun finishes the job
+                    self.sim.stats.count("lov.rebuild_aborted")
+                    report["aborted"] = True
+                    return report
+                before = self.sim.stats.counters.get("lov.rebuild_bytes", 0)
+                new_lsm = self.lov.rebuild_object(lsm, dead_uuid, spare)
+                if new_lsm is None:
+                    report["skipped"] += 1
+                    continue
+                report["rebuilt"] += 1
+                report["bytes"] += \
+                    self.sim.stats.counters.get("lov.rebuild_bytes", 0) \
+                    - before
+                if fail_mod.state.check("lov.layout_swap") in ("drop",
+                                                               "crash"):
+                    # abort BEFORE the EA commit: the old layout stays
+                    # intact (still degraded-readable); the spare object
+                    # is merely orphaned
+                    self.sim.stats.count("lov.rebuild_aborted")
+                    report["aborted"] = True
+                    return report
+                self.lmv.mdc_for_fid(fid).reint(
+                    {"type": "setattr", "fid": fid,
+                     "ea": {"lov": new_lsm.to_ea()}})
+                self._attr_drop(fid)
+                self.sim.stats.count("lov.layout_swap")
+                report["swapped"] += 1
+                if limit is not None and report["rebuilt"] >= limit:
+                    break
+        finally:
+            self.set_jobid(prev_jobid)
+            self.lov.set_active(dead_uuid, prev_active)
+        return report
 
     # -------------------------------------------------- jobid / changelog
     def set_jobid(self, jobid: str):

@@ -32,18 +32,28 @@ def _xor_kernel(x_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def xor_parity(blocks: jax.Array, *, block: int = 4096,
                interpret: bool = False) -> jax.Array:
-    """blocks (K, N) int32 -> parity (N,) int32."""
+    """blocks (K, N) int32 -> parity (N,) int32.
+
+    N need not be a multiple of `block`: the grid must tile N evenly, so
+    a ragged tail is zero-padded up to the next block boundary before the
+    call (0 is the XOR identity — padding never changes the parity) and
+    the pad lanes are sliced back off the result. Shapes are static, so
+    the pad amount is resolved at trace time (one compiled kernel per
+    distinct padded shape, exactly like the unpadded path)."""
     K, N = blocks.shape
     block = min(block, N)
-    assert N % block == 0, (N, block)
-    return pl.pallas_call(
+    padded = -(-N // block) * block
+    if padded != N:
+        blocks = jnp.pad(blocks, ((0, 0), (0, padded - N)))
+    out = pl.pallas_call(
         _xor_kernel,
-        grid=(N // block,),
+        grid=(padded // block,),
         in_specs=[pl.BlockSpec((K, block), lambda j: (0, j))],
         out_specs=pl.BlockSpec((block,), lambda j: (j,)),
-        out_shape=jax.ShapeDtypeStruct((N,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.int32),
         interpret=interpret,
     )(blocks)
+    return out[:N] if padded != N else out
 
 
 def reconstruct(survivors: jax.Array, parity: jax.Array, *,

@@ -105,3 +105,41 @@ def test_xor_parity_linearity_property():
     pb = par.xor_parity(b, interpret=True)
     pab = par.xor_parity(jnp.bitwise_xor(a, b), interpret=True)
     assert (np.asarray(jnp.bitwise_xor(pa, pb)) == np.asarray(pab)).all()
+
+
+@pytest.mark.parametrize("K,N,block", [
+    (3, 1000, 256),     # ragged tail: 1000 % 256 != 0
+    (4, 37, 64),        # whole array smaller than one block
+    (2, 513, 512),      # one lane past a block boundary
+    (5, 4100, 1024),    # big block, small spill
+])
+def test_xor_parity_ragged_tail(K, N, block):
+    """ISSUE-8: the kernel wrapper zero-pads lane counts that are not a
+    multiple of the grid block instead of asserting, and the pad lanes
+    never leak into the returned parity."""
+    rng = np.random.default_rng(K + N + block)
+    blocks = jnp.asarray(
+        rng.integers(-2**31, 2**31, size=(K, N), dtype=np.int32))
+    p = par.xor_parity(blocks, block=block, interpret=True)
+    assert p.shape == (N,)
+    assert (np.asarray(p) == np.asarray(ref.xor_parity_ref(blocks))).all()
+    for miss in range(K):
+        surv = jnp.concatenate([blocks[:miss], blocks[miss + 1:]], 0)
+        rec = par.reconstruct(surv, p, block=block, interpret=True)
+        assert (np.asarray(rec) == np.asarray(blocks[miss])).all()
+
+
+def test_parity_bytes_odd_sizes_roundtrip():
+    """Byte-level marshalling on sizes that are neither lane- nor
+    block-aligned (the raid5 tail-unit case)."""
+    rng = np.random.default_rng(11)
+    for sizes in [(1, 1), (3, 7, 5), (255, 255, 255), (1023, 1, 509)]:
+        chunks = [rng.bytes(s) for s in sizes]
+        n = max(sizes)
+        p = ops.parity_bytes(chunks)
+        assert len(p) == n
+        pad = [c.ljust(n, b"\0") for c in chunks]
+        for miss in range(len(chunks)):
+            surv = [pad[j] for j in range(len(chunks)) if j != miss]
+            back = ops.reconstruct_bytes(surv, p, sizes[miss])
+            assert back == chunks[miss], sizes

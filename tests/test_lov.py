@@ -200,3 +200,268 @@ def test_boundary_write_then_read_round_trip():
     lov.flush()
     assert lov.getattr(lsm)["size"] == len(data)
     assert lov.read(lsm, 0, len(data)) == data
+
+
+# ------------------------------------------------- ISSUE-8: raid5 / SNS
+
+from repro.core import ptlrpc as R  # noqa: E402
+
+
+def mk5(osts=3, spares=0, clients=2):
+    c = LustreCluster(osts=osts, mdses=1, clients=clients,
+                      commit_interval=32, spare_osts=spares)
+    rpc = c.make_client_rpc(0)
+    lov = c.make_lov(rpc)
+    return c, lov
+
+
+def _r5_payload(n, seed=1):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, 256, n, dtype=np.uint8).tobytes()  # non-zero
+
+
+def test_r5_parity_rotation_geometry():
+    lsm = LV.StripeMd(stripe_size=10, stripe_count=2, stripe_offset=0,
+                      objects=[], pattern="raid5")
+    # n=3 slots; the parity slot walks right-to-left one slot per round
+    assert [LV._r5_parity_slot(lsm, r) for r in range(6)] == \
+        [2, 1, 0, 2, 1, 0]
+    # in every round the data units occupy exactly the non-parity slots
+    for r in range(6):
+        p = LV._r5_parity_slot(lsm, r)
+        slots = [LV._r5_slot(lsm, r, i) for i in range(2)]
+        assert sorted(slots + [p]) == [0, 1, 2]
+
+
+def test_r5_logical_size_witnesses():
+    lsm = LV.StripeMd(stripe_size=10, stripe_count=2, stripe_offset=0,
+                      objects=[], pattern="raid5")
+    # 25 logical bytes: slot sizes are [15, 15, 10] (parity unit length
+    # mirrors data unit 0's extent in each round)
+    assert LV._r5_logical_size(lsm, [15, 15, 10]) == 25
+    # a parity-only witness still pins the size (unit 0's extent)
+    assert LV._r5_logical_size(lsm, [0, 0, 10]) == 10
+    assert LV._r5_logical_size(lsm, [0, 0, 0]) == 0
+    assert LV._r5_logical_size(lsm, [None, 15, 10]) == 25  # dead slot
+
+
+def test_raid5_round_trip_odd_size_and_rmw():
+    c, lov = mk5()
+    lsm = lov.create(stripe_count=2, stripe_size=512, stripe_offset=0,
+                     pattern="raid5")
+    assert lsm.pattern == "raid5" and len(lsm.objects) == 3
+    data = _r5_payload(5037)                  # ragged tail unit
+    lov.write(lsm, 0, data)
+    assert lov.read(lsm, 0, len(data)) == data
+    assert lov.getattr(lsm)["size"] == len(data)
+    # read-modify-write strictly inside one unit + spanning a round
+    patch = b"\xaa" * 700
+    lov.write(lsm, 300, patch)
+    want = data[:300] + patch + data[1000:]
+    assert lov.read(lsm, 0, len(want)) == want
+    assert lov.getattr(lsm)["size"] == len(want)
+
+
+def test_raid5_ea_round_trip_preserves_pattern():
+    c, lov = mk5()
+    lsm = lov.create(stripe_count=2, stripe_size=256, pattern="raid5")
+    back = LV.StripeMd.from_ea(lsm.to_ea())
+    assert back.pattern == "raid5"
+    assert back.objects == lsm.objects
+    # pre-raid5 EAs (no pattern key) still decode as raid0
+    ea = lsm.to_ea()
+    ea.pop("pattern", None)
+    assert LV.StripeMd.from_ea(ea).pattern == "raid0"
+
+
+def test_raid5_degraded_read_is_byte_identical():
+    c, lov = mk5()
+    lsm = lov.create(stripe_count=2, stripe_size=512, stripe_offset=0,
+                     pattern="raid5")
+    data = _r5_payload(5037)
+    lov.write(lsm, 0, data)
+    for t in c.ost_targets:
+        t.commit()
+    dead = lsm.objects[1]["ost"]
+    c.fail_node("ost" + str(int(dead[3:])))
+    # a COLD client must reconstruct from surviving stripes + parity
+    # (the writer's own clean cache would serve the bytes without RPCs)
+    cold = c.make_lov(c.make_client_rpc(1))
+    assert cold.read(lsm, 0, len(data)) == data
+    assert c.stats.counters["lov.degraded_read"] >= 1
+    assert c.stats.counters["lov.reconstruct_unit"] >= 1
+    # size survives the dead slot too
+    assert cold.getattr(lsm)["size"] == len(data)
+
+
+def test_raid5_degraded_write_and_parity_update():
+    c, lov = mk5()
+    lsm = lov.create(stripe_count=2, stripe_size=256, stripe_offset=0,
+                     pattern="raid5")
+    data = _r5_payload(2048, seed=3)
+    lov.write(lsm, 0, data)
+    for t in c.ost_targets:
+        t.commit()
+    dead = lsm.objects[0]["ost"]
+    c.fail_node("ost" + str(int(dead[3:])))
+    patch = _r5_payload(512, seed=4)
+    lov.write(lsm, 0, patch)                  # slot 0 dead: parity absorbs
+    assert c.stats.counters["lov.degraded_write"] >= 1
+    want = patch + data[512:]
+    cold = c.make_lov(c.make_client_rpc(1))
+    assert cold.read(lsm, 0, len(want)) == want
+
+
+def test_raid5_second_failure_is_an_error_not_garbage():
+    c, lov = mk5(osts=4)
+    lsm = lov.create(stripe_count=3, stripe_size=256, stripe_offset=0,
+                     pattern="raid5")
+    lov.write(lsm, 0, _r5_payload(3000))
+    c.fail_node("ost0")
+    c.fail_node("ost1")
+    with pytest.raises(R.RpcError):
+        c.make_lov(c.make_client_rpc(1)).read(lsm, 0, 3000)
+
+
+def test_raid5_rebuild_onto_spare_and_layout_swap():
+    c, lov = mk5(spares=1)
+    lsm = lov.create(stripe_count=2, stripe_size=256, stripe_offset=0,
+                     pattern="raid5")
+    data = _r5_payload(3333, seed=7)
+    lov.write(lsm, 0, data)
+    for t in c.ost_targets:
+        t.commit()
+    dead = lsm.objects[1]["ost"]
+    c.fail_node("ost" + str(int(dead[3:])))
+    spare_uuid = c.spare_uuids[0]
+    new = lov.rebuild_object(lsm, dead, lov.by_uuid[spare_uuid])
+    assert new.objects[1]["ost"] == spare_uuid
+    assert [o["ost"] for o in new.objects[::2]] == \
+        [o["ost"] for o in lsm.objects[::2]]  # live slots untouched
+    assert c.stats.counters["lov.rebuild_object"] == 1
+    assert c.stats.counters["lov.rebuild_bytes"] > 0
+    # the rebuilt layout serves reads with the dead OST still down
+    cold = c.make_lov(c.make_client_rpc(1))
+    assert cold.read(new, 0, len(data)) == data
+    # and now survives a SECOND (different) OST failing
+    other = new.objects[0]["ost"]
+    c.fail_node("ost" + str(int(other[3:])))
+    cold2 = c.make_lov(c.make_client_rpc(1))
+    assert cold2.read(new, 0, len(data)) == data
+
+
+def test_raid5_punch_recomputes_tail_parity():
+    c, lov = mk5()
+    lsm = lov.create(stripe_count=2, stripe_size=256, stripe_offset=0,
+                     pattern="raid5")
+    data = _r5_payload(2048, seed=9)
+    lov.write(lsm, 0, data)
+    lov.punch(lsm, 700)                       # mid-unit truncate
+    assert lov.getattr(lsm)["size"] == 700
+    for t in c.ost_targets:
+        t.commit()
+    # parity of the truncated tail round must cover the new content:
+    # fail a data OST and reconstruct through the truncation point
+    dead = lsm.objects[0]["ost"]
+    c.fail_node("ost" + str(int(dead[3:])))
+    cold = c.make_lov(c.make_client_rpc(1))
+    assert cold.read(lsm, 0, 700) == data[:700]
+
+
+# --------------------------------------- ISSUE-8: RAID1 stale-data fixes
+
+def _mk_raid1():
+    c = LustreCluster(osts=2, mdses=1, clients=2, commit_interval=4)
+    rpc = c.make_client_rpc(0)
+    a, b = c.make_oscs(rpc, writeback=False)
+    r = LV.Raid1(a, b)
+    oid = r.create()
+    return c, r, a, b, oid
+
+
+def test_raid1_resync_primary_side_stale():
+    """Regression (ISSUE-8 satellite 1): when the PRIMARY missed the
+    write, resync must copy b->a — the old primary-first read replayed
+    a's stale bytes over the up-to-date secondary."""
+    c, r, a, b, oid = _mk_raid1()
+    r.write(oid, 0, b"00000000")
+    for t in c.ost_targets:
+        t.commit()
+    c.fail_node("ost0")                       # primary down
+    r.write(oid, 0, b"11111111")              # only mirror B took it
+    assert c.stats.counters["raid1.degraded_write"] == 1
+    assert r.dirty_log[-1][3] == "a"          # the STALE side is recorded
+    c.restart_node("ost0")
+    assert r.resync() == 1
+    assert a.read(0, oid, 0, 8) == b"11111111"   # healed, not clobbered
+    assert b.read(0, oid, 0, 8) == b"11111111"
+
+
+def test_raid1_read_heals_stale_primary_before_serving():
+    c, r, a, b, oid = _mk_raid1()
+    r.write(oid, 0, b"00000000")
+    for t in c.ost_targets:
+        t.commit()
+    c.fail_node("ost0")
+    r.write(oid, 0, b"11111111")
+    c.restart_node("ost0")
+    assert r.read(oid, 0, 8) == b"11111111"   # not a's stale zeros
+    assert c.stats.counters["raid1.heal_on_read"] == 1
+    assert not r.dirty_log
+    assert a.read(0, oid, 0, 8) == b"11111111"
+
+
+def test_raid1_failover_read_never_serves_stale_secondary():
+    """Regression (satellite 2): secondary missed a write (dropped
+    OST_WRITE), then the primary dies — failover must NOT hand out the
+    secondary's stale bytes; -5 beats silently wrong data."""
+    c, r, a, b, oid = _mk_raid1()
+    r.write(oid, 0, b"fresh000")
+    for t in c.ost_targets:
+        t.commit()
+    b_nid = c.ost_targets[1].node.nid
+    c.sim.faults.drop_next[b_nid] += 1000     # OST_WRITE (+ resends) lost
+    r.write(oid, 0, b"fresh111")
+    c.sim.faults.drop_next[b_nid] = 0
+    assert r.dirty_log[-1][3] == "b"
+    c.fail_node("ost0")                       # up-to-date mirror dies
+    with pytest.raises(R.RpcError):
+        r.read(oid, 0, 8)
+    assert c.stats.counters["raid1.stale_read_avoided"] >= 1
+    c.restart_node("ost0")
+    assert r.read(oid, 0, 8) == b"fresh111"   # served from the good side
+    assert r.resync() == 1                    # and b can heal now
+    assert b.read(0, oid, 0, 8) == b"fresh111"
+
+
+def test_raid1_hedged_read_uses_loser_result_no_reissue():
+    """Regression (satellite 4): when the race winner FAILED, the old
+    code re-issued a full read() — a third RPC and a second chance to
+    hit the slow path. The loser already ran; its bytes are used as-is."""
+    c, r, a, b, oid = _mk_raid1()
+    r.write(oid, 0, b"hedgedat")
+    for t in c.ost_targets:
+        t.commit()
+    # cold reader client: mirror A administratively dead (fails fast,
+    # wins the race with an error), mirror B must serve over the wire
+    rpc2 = c.make_client_rpc(1)
+    a2, b2 = c.make_oscs(rpc2, writeback=False)
+    r2 = LV.Raid1(a2, b2)
+    a2.set_active(False)
+    before = c.stats.counters.get("rpc.ost.read", 0)
+    assert r2.read_hedged(oid, 0, 8) == b"hedgedat"
+    assert c.stats.counters["raid1.hedge_loser_used"] == 1
+    assert c.stats.counters.get("rpc.ost.read", 0) - before == 1
+
+
+def test_raid1_hedged_read_takes_dirty_aware_path():
+    c, r, a, b, oid = _mk_raid1()
+    r.write(oid, 0, b"00000000")
+    for t in c.ost_targets:
+        t.commit()
+    c.fail_node("ost1")
+    r.write(oid, 0, b"22222222")              # b is stale now
+    c.restart_node("ost1")
+    assert r.read_hedged(oid, 0, 8) == b"22222222"   # never b's zeros
+    assert r.resync() == 1
+    assert b.read(0, oid, 0, 8) == b"22222222"

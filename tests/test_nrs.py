@@ -525,3 +525,83 @@ def test_tbf_throttled_tenant_does_not_block_others():
     assert s_heavy >= 0.9
     s_light = pol.schedule(light, 0.001, 1e-5)
     assert s_light < 0.01, s_light             # unaffected by heavy's wait
+
+
+# -------------------------------------------- ISSUE-8: tbf_orr (two-level)
+
+def test_tbf_orr_throttles_only_ruled_class():
+    """The two-level policy (ROADMAP open item): TBF admission feeds
+    orr_disk ordering. Only jobid classes named in `rules` pay tokens —
+    the default rate of 0 means 'unlimited', so regular traffic rides
+    the disk-ordered chains untouched."""
+    pol = N.make_policy("tbf_orr", None, rules={"rebuild": 20.0},
+                        burst=1.0)
+
+    def req(jobid, oid, off):
+        return R.Request(opcode="write", client_uuid="c", jobid=jobid,
+                         body={"group": 0, "oid": oid,
+                               "niobufs": [{"offset": off,
+                                            "data": b"x" * 4096}]})
+
+    # rebuild class: 1 token of burst, then 1/rate pacing
+    s0 = pol.schedule(req("rebuild", 1, 0), 0.0, 1e-6)
+    s1 = pol.schedule(req("rebuild", 1, 4096), 0.0, 1e-6)
+    assert s0 == 0.0
+    assert s1 >= 1 / 20.0 * 0.95
+    assert pol.throttled >= 1
+    # unruled traffic at the same instant: no admission delay at all
+    assert pol.schedule(req("app", 2, 0), 0.0, 1e-6) == 0.0
+    assert pol.schedule(req("", 3, 0), 0.0, 1e-6) == 0.0
+    info = pol.info()
+    assert info["policy"] == "tbf_orr"
+    assert info["rules"] == {"rebuild": 20.0}
+
+
+def test_tbf_orr_keeps_orr_disk_contiguity_refund():
+    """Level two is the real orr_disk: an unthrottled contiguous stream
+    still earns the seek refunds."""
+    seek = 2e-4
+    pol = N.make_policy("tbf_orr", None, seek_cost=seek,
+                        rules={"rebuild": 10.0})
+    for i in range(8):
+        pol.schedule(R.Request(opcode="write", client_uuid="c",
+                               jobid="app", body={
+                                   "group": 0, "oid": 1,
+                                   "niobufs": [{"offset": i * 4096,
+                                                "data": b"x" * 4096}]}),
+                     0.0, 1e-3)
+    assert pol.seeks_saved == 7
+    assert pol.info()["seeks_saved"] == 7
+
+
+def test_tbf_orr_never_throttles_control_ops():
+    pol = N.make_policy("tbf_orr", None, rate=1.0, burst=1.0)
+    r = R.Request(opcode="ping", body={}, client_uuid="c", jobid="rebuild")
+    for _ in range(16):
+        assert pol.schedule(r, 0.0, 1e-6) == 0.0
+    assert pol.throttled == 0
+
+
+def test_tbf_orr_end_to_end_rebuild_class_yields_to_app():
+    """lctl('rebuild_throttle', rate) installs tbf_orr on every OST:
+    writes tagged jobid=rebuild pace at the rule's rate while untagged
+    app writes from another client run at full speed."""
+    c = mk()
+    c.lctl("rebuild_throttle", 50.0, 1.0)
+    assert c.ost_targets[0].service.policy.name == "tbf_orr"
+    reb = osc_for(c, 0)
+    app = osc_for(c, 1)
+    reb.rpc.jobid = "rebuild"
+    r_oid = reb.create(0)["oid"]
+    a_oid = app.create(0)["oid"]
+    t0 = c.now
+    for i in range(10):
+        app.write(0, a_oid, i * 4, b"aaaa")
+    app_dt = c.now - t0
+    t0 = c.now
+    for i in range(10):
+        reb.write(0, r_oid, i * 4, b"rrrr")
+    reb_dt = c.now - t0
+    assert reb_dt >= 9 / 50.0 * 0.95
+    assert app_dt < reb_dt / 20
+    assert c.ost_targets[0].service.policy.throttled >= 5

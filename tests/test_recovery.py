@@ -267,6 +267,25 @@ def _sweep_workload(fs):
         for i in range(3):
             fs.mkdir(f"/wb/s{i}")
         fs.disable_wbc()
+    # raid5/SNS (ISSUE-8): a degraded read plus an OST rebuild onto the
+    # spare drive the lov.rebuild / lov.layout_swap crash points; both
+    # are client-side, so "crash" degrades to an abort — the sweep then
+    # proves the namespace and the file content survive the abort intact
+    fh = fs.creat("/d2/r5", stripe_count=2, stripe_size=256,
+                  stripe_offset=0, pattern="raid5")
+    payload = bytes(range(1, 251)) * 3
+    fs.write(fh, payload, offset=0)
+    fs.close(fh)
+    fs.cluster.fail_node("ost1")
+    fsr = LustreClient(fs.cluster, 1).mount()    # cold cache: the read
+    fhr = fsr.open("/d2/r5")                     # must really reconstruct
+    assert fsr.read(fhr, len(payload), offset=0) == payload
+    fsr.close(fhr)
+    fs.rebuild_ost("OST0001", fs.cluster.spare_uuids[0])
+    fs.cluster.restart_node("ost1")
+    fhr = fs.open("/d2/r5")                      # post-rebuild (or, under
+    assert fs.read(fhr, len(payload), offset=0) == payload  # an aborted
+    fs.close(fhr)                                # rebuild, post-restart)
     # monitoring plane: one collector round over real RPCs reaches the
     # mon.collect site; a crash/partition there degrades to a PARTIAL
     # snapshot (target listed in 'stale') — never a hang and never a
@@ -287,7 +306,8 @@ def test_crash_point_sweep(site):
     machinery heal the cluster, and prove (a) the audit mirror still
     matches readdir/stat ground truth and (b) every changelog record
     was delivered exactly once."""
-    c = LustreCluster(osts=2, mdses=2, clients=2, commit_interval=3)
+    c = LustreCluster(osts=3, mdses=2, clients=2, commit_interval=3,
+                      spare_osts=1)
     fs = LustreClient(c).mount()
     aud = ChangelogAuditor(fs)
     c.lctl("set_param", "fail_loc", site)        # arm (fires once)
