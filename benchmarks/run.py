@@ -110,6 +110,7 @@ def bench_rpc() -> dict:
         "jobs": {j: sc_full["noisy"]["jobs"].get(j, {})
                  for j in PERSONALITIES + ("noisy",)},
         "fairness": sc_full["fairness"],
+        "fairness_nrs": sc_full["fairness_nrs"],
         "grant_cliff": sc_full["grant_cliff"],
         "overhead_ratio": sc_full["overhead_ratio"],
         "noisy_flagged": sc_full["noisy_flagged"],
@@ -147,6 +148,16 @@ def bench_rpc() -> dict:
          and un["wbc"]["reint_rpcs"] > untar_baseline)
         or un["wbc"]["reint_rpcs"] > N_FILES // 8
         or un["reint_reduction"] < 8.0)
+    # fairness rerun under TBF/WFQ (ISSUE-9): WFQ must leave no jobid
+    # worse than the FIFO noisy run and cut at least one victim's p99
+    # by >= 2x; TBF's jobid rule must throttle the aggressor >= 4x with
+    # the normal jobids still inside the 4x fairness cap
+    wfq, tbf = sc["fairness_nrs"]["wfq"], sc["fairness_nrs"]["tbf"]
+    sc["fairness_nrs"]["regressed"] = (
+        wfq["worst_speedup"] < 1.0 or wfq["best_speedup"] < 2.0
+        or wfq["max_ratio"] > 4.0
+        or tbf["noisy_containment_x"] < 4.0
+        or tbf["max_ratio"] > 4.0)
     sc["regressed"] = (
         any(scale_baseline is not None
             and scale_baseline.get(j, {}).get("p99_s") is not None
@@ -154,6 +165,7 @@ def bench_rpc() -> dict:
             > scale_baseline[j]["p99_s"] * 1.25
             for j in PERSONALITIES)
         or sc["fairness"]["max_ratio"] > 4.0
+        or sc["fairness_nrs"]["regressed"]
         or sc["overhead_ratio"] > 0.02
         or not sc["noisy_flagged"] or bool(sc["false_positives"])
         or sc["grant_cliff"]["rpc_multiplier"] < 1.2)
@@ -234,6 +246,10 @@ def bench_rpc() -> dict:
           f"  fairness max {sc['fairness']['max_ratio']}x  "
           f"monitor overhead {sc['overhead_ratio']:.4%}  "
           f"noisy flagged: {sc['noisy_flagged']}\n"
+          f"  fairness rerun: wfq best p99 speedup "
+          f"{sc['fairness_nrs']['wfq']['best_speedup']}x (no jobid "
+          f"worse), tbf noisy containment "
+          f"{sc['fairness_nrs']['tbf']['noisy_containment_x']}x\n"
           f"  grant cliff: {cl['control_grant'] >> 10} KiB -> "
           f"{cl['scale_grant'] >> 10} KiB marginal grant, write RPCs/client "
           f"x{cl['rpc_multiplier']}")
@@ -289,6 +305,11 @@ def main():
                 f"{ {j: sc['jobs'][j].get('p99_s') for j in sc['jobs']} } "
                 f"(baseline {sc['baseline_p99_s']}, headroom 1.25x), "
                 f"fairness {sc['fairness']['max_ratio']}x (cap 4x), "
+                f"fairness_nrs wfq speedup "
+                f"{sc['fairness_nrs']['wfq']['p99_speedup_vs_fifo']} "
+                f"(worst >= 1x, best >= 2x) / tbf containment "
+                f"{sc['fairness_nrs']['tbf']['noisy_containment_x']}x "
+                f"(floor 4x), "
                 f"overhead {sc['overhead_ratio']} (cap 0.02), noisy "
                 f"flagged {sc['noisy_flagged']} (false positives "
                 f"{sc['false_positives']}), grant-cliff multiplier "

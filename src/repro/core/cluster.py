@@ -288,6 +288,14 @@ class LustreCluster(R.ClusterBase):
         else:
             raise ValueError(verb)
 
+    def _sanitizer_rollup(self) -> dict:
+        san = self.sim.sanitize
+        if san.enabled:
+            # reading procfs is a natural audit point: run the final
+            # counter-partition check before reporting
+            san.check_counter_partition(self.sim.stats)
+        return san.info()
+
     def procfs(self) -> dict:
         """lprocfs-style introspection tree (paper ch. 35): per-target
         state + cluster counters, as /proc/fs/lustre would expose."""
@@ -296,6 +304,10 @@ class LustreCluster(R.ClusterBase):
         out = {"counters": dict(cnt),
                "bytes": dict(self.sim.stats.bytes),
                "fail": self.sim.fail.info(),
+               # runtime sanitizer rollup (checks run / violations /
+               # captured-by-tests); a final counter-partition audit
+               # runs here so the leaf is never stale
+               "sanitizer": self._sanitizer_rollup(),
                # client read-cache rollup (ISSUE-4): the per-event
                # counters (osc.cache_*) live in "counters" too
                "client_cache": {

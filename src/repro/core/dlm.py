@@ -23,6 +23,7 @@ from typing import Any, Callable, Optional
 
 from repro.core import fail as fail_mod
 from repro.core import ptlrpc as R
+from repro.core import sanitize
 
 MAX_EXT = (1 << 64) - 1
 WHOLE = (0, MAX_EXT)
@@ -276,6 +277,12 @@ class LdlmNamespace:
         res.waiting.append(lk)
         conf = res.conflicting(mode, extent, gid,
                                exclude_client=req.client_uuid)
+        # lockdep: a CONFLICTING enqueue orders everything the requester
+        # already holds before this resource (glimpse enqueues never
+        # wait — they are answered with the merged LVB below)
+        sanitize.state.note_enqueue(
+            req.client_uuid, (self.target.uuid, name),
+            bool(conf) and not b.get("glimpse"))
         if b.get("glimpse") and conf:
             # glimpse enqueue (§7.7): the requester only wants the LVB —
             # do NOT revoke the conflicting holders; ask them for their
@@ -284,11 +291,17 @@ class LdlmNamespace:
             self.sim.stats.count("dlm.glimpse_served")
             return R.Reply(data={"handle": 0, "granted": False,
                                  "intent": None,
+                                 # lint: rpc-under-lock(glimpse ASTs never
+                                 # revoke and holders answer from their own
+                                 # ldlm_cb service, so no wait cycle forms)
                                  "lvb": self.glimpse_lvb(name),
                                  "version": res.version})
         if conf and self.conflict_cb:
             self.conflict_cb(name)
         for other in list(conf):
+            # lint: rpc-under-lock(revocation protocol: the blocking AST
+            # goes to a DIFFERENT client's ldlm_cb service and the holder
+            # yields rather than acquires, so this wait cannot cycle)
             ok = self._blocking_ast(other)
             if not ok:
                 self.evict_client(other.client_uuid)
@@ -456,6 +469,8 @@ class LockClient:
                   lvb=d.get("lvb", {}))
         self.locks[lk.handle] = lk
         self.by_res[lk.res_name].append(lk)
+        sanitize.state.note_granted(self.rpc.uuid,
+                                    (self.imp.target_uuid, lk.res_name))
         return lk, d.get("intent"), d.get("lvb", {})
 
     def _forget(self, lk: Lock):
@@ -464,6 +479,8 @@ class LockClient:
         self.locks.pop(lk.handle, None)
         if lk in self.by_res.get(lk.res_name, ()):
             self.by_res[lk.res_name].remove(lk)
+        sanitize.state.note_released(self.rpc.uuid,
+                                     (self.imp.target_uuid, lk.res_name))
         for cb in self.revoke_cbs:
             cb(lk)
 

@@ -409,7 +409,11 @@ class MdsTarget(R.Target):
         uid = self.changelog.register()
         # the id handed back must survive a restart: commit the header txn
         self.commit()
-        return R.Reply(data={"id": uid, "last_idx": self.changelog.last_idx})
+        # transno-bearing so the reply cache absorbs resends: a register
+        # whose reply was lost must NOT mint a second consumer (whose
+        # stale bookmark would pin the stream until idle GC)
+        return R.Reply(data={"id": uid, "last_idx": self.changelog.last_idx},
+                       transno=self.transno)
 
     def op_changelog_deregister(self, req: R.Request) -> R.Reply:
         try:
@@ -419,7 +423,9 @@ class MdsTarget(R.Target):
         # like register/clear: the ack must be durable, or a crash would
         # resurrect the consumer (whose stale bookmark pins the stream)
         self.commit()
-        return R.Reply()
+        # reply-cache-covered: a resent deregister must be answered from
+        # the cache, not re-executed into a spurious -ENOENT
+        return R.Reply(transno=self.transno)
 
     def op_changelog_read(self, req: R.Request) -> R.Reply:
         b = req.body
@@ -458,8 +464,10 @@ class MdsTarget(R.Target):
         # consumer receives is durable across MDS restart (no re-delivery
         # of cleared records after recovery)
         self.commit()
+        # reply-cache-covered like every other update op
         return R.Reply(data={"purged_to": self.changelog.purged_to,
-                             "records": len(self.changelog.catalog.pending())})
+                             "records": len(self.changelog.catalog.pending())},
+                       transno=self.transno)
 
     # ---------------------------------------------------- txn w/ history
     def crash(self):
@@ -1217,6 +1225,8 @@ class MdsTarget(R.Target):
                         pass           # bucket survives for orphan cleanup
         if "lov" in inode.ea:
             for o in inode.ea["lov"]["objects"]:
+                # lint: ok(emit-in-txn: cookies are cancelled by
+                # _undo_drop, which every caller registers in its txn undo)
                 rec = self.unlink_llog.add("unlink", {
                     "ost": o["ost"], "group": o["group"], "oid": o["oid"]})
                 cookies.append(rec.cookie)

@@ -50,6 +50,7 @@ from typing import Any, Callable, Optional
 from repro.core import fail as fail_mod
 from repro.core import nrs as nrs_mod
 from repro.core import portals as P
+from repro.core import sanitize
 from repro.core.sim import Simulator
 
 # --------------------------------------------------------------- portals
@@ -336,6 +337,9 @@ class Target:
         'metadata undo log records')."""
         for transno, undo in reversed(self.undo_log):
             undo()
+        # executions above the cut died with the journal: their replay
+        # is legitimate re-execution, not an exactly-once violation
+        sanitize.state.note_crash(self.uuid, self.committed_transno)
         self.transno = self.committed_transno
         self.undo_log.clear()
         self._ops_since_commit = 0
@@ -396,6 +400,8 @@ class Target:
             reply = Reply(status=e.status)
         reply.last_committed = self.committed_transno
         if reply.transno:                   # update op: cache for resends
+            sanitize.state.note_execute(self.uuid, req.client_uuid,
+                                        req.xid, reply.transno)
             exp.volatile_replies[req.xid] = reply
             if reply.transno <= self.committed_transno:
                 exp.reply_cache[req.xid] = reply
@@ -524,6 +530,9 @@ class Node:
             finally:
                 self.sim.stats.node_stack.pop()
                 fail.exit_service(target)
+                # request-boundary invariants: grant conservation +
+                # (periodically) counter-partition, see core/sanitize.py
+                sanitize.state.request_boundary(target)
         # reply PUT matched on xid (paper §4.5.2)
         nbytes = wire_size(reply) + reply.bulk_nbytes
         self.ni.put(reply_nid, reply_portal, req.xid, reply, nbytes)

@@ -136,6 +136,12 @@ class Simulator:
         self.fail = fail_mod.state
         self.fail.reset()
         self.fail.sim = self       # 'delay' actions advance this clock
+        # runtime sanitizer (SIM_SANITIZE=1): like fail.state it is
+        # module-global; per-sim graphs reset here so clusters are
+        # isolated (client uuids repeat across clusters)
+        from repro.core import sanitize
+        self.sanitize = sanitize.state
+        sanitize.state.on_new_sim()
 
     @property
     def now(self) -> float:

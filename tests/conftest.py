@@ -6,7 +6,20 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import pytest  # noqa: E402
 
 from repro.core import LustreCluster  # noqa: E402
+from repro.core import sanitize  # noqa: E402
 from repro.fsio import LustreClient  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _sanitizer_guard():
+    """Fail any test that produced runtime-sanitizer violations (no-op
+    unless SIM_SANITIZE=1 or the test used sanitize.forced()).  Tests
+    that stage violations on purpose wrap them in sanitize.capture()."""
+    before = len(sanitize.state.violations)
+    yield
+    new = sanitize.state.violations[before:]
+    assert not new, "runtime sanitizer violations:\n" + "\n".join(
+        v.render() for v in new)
 
 
 @pytest.fixture

@@ -1,4 +1,7 @@
 """Recovery: replay, failover, orphans, consistent cut (ch. 11, 29)."""
+import json
+from pathlib import Path
+
 import pytest
 try:
     from hypothesis import given, settings, strategies as st
@@ -344,6 +347,93 @@ def test_crash_sweep_sites_cover_all_layers():
     assert {"ptlrpc", "mds", "ost", "llog"} <= prefixes
     assert "mds.changelog.clear.applied" in F.SITES
     assert "mds.reint.before" in F.SITES and "ost.txn" in F.SITES
+
+
+# ----------------------------------- inventory-driven (site, nth/action)
+# The pair sweep parametrizes over the ANALYZER-GENERATED inventory
+# (src/repro/tools/lint/fail_sites.json), not over F.SITES directly:
+# the lint fail-sweep rule pins the inventory to the registry, so a new
+# site cannot enter the code without entering this sweep — coverage
+# can never silently drift.
+
+_INVENTORY_PATH = Path(__file__).resolve().parents[1] / \
+    "src" / "repro" / "tools" / "lint" / "fail_sites.json"
+_INVENTORY = json.loads(_INVENTORY_PATH.read_text())["sites"]
+
+# 'drop' (OBD_FAIL_*_NET: lose the in-flight message) is meaningful for
+# every server-side site — the ptlrpc boundary turns immediate AND
+# deferred flavors into a lost request — plus osc.flush's documented
+# lost-BRW semantics.  dlm.blocking_ast is excluded here: dropping the
+# AST evicts the dirty holder, whose data loss is the eviction's
+# documented cost (dedicated test below), so the generic sweep's
+# content-survival assertions don't apply.
+_DROP_SITES = sorted(
+    s for s, info in _INVENTORY.items()
+    if (info["side"] == "server" and s != "dlm.blocking_ast")
+    or s == "osc.flush")
+
+
+def test_pair_sweep_inventory_matches_registry():
+    """Drift gate: the committed inventory IS the registry (the lint CI
+    job enforces the same both ways; this is the in-suite half)."""
+    assert set(_INVENTORY) == set(F.SITES)
+
+
+def _run_swept_workload(c, fs, site):
+    """Run the sweep workload + auditor healing checks shared by every
+    (site, nth/action) pair; returns the auditor report."""
+    aud = ChangelogAuditor(fs)
+    _sweep_workload(fs)
+    aud.tail()
+    c.lctl("set_param", "fail_loc", "")          # disarm leftovers
+    assert c.sim.fail.hits.get(site, 0) >= 1, \
+        f"site {site} never reached by the sweep workload"
+    aud.tail()
+    report = aud.verify()
+    assert report["ok"], (site, report["mismatches"])
+    keys = [(r["mdt"], r["idx"]) for r in aud.feed]
+    assert len(keys) == len(set(keys)), (site, keys)
+    return report
+
+
+@pytest.mark.parametrize("site", sorted(_INVENTORY))
+def test_crash_pair_sweep_second_hit(site):
+    """(site, nth-hit) pair: crash on the SECOND hit of every site.
+    The second hit typically lands inside resend/replay/recovery
+    traffic — a crash there exercises recovery-of-recovery, which the
+    first-hit sweep never reaches."""
+    c = LustreCluster(osts=3, mdses=2, clients=2, commit_interval=3,
+                      spare_osts=1)
+    fs = LustreClient(c).mount()
+    c.lctl("set_param", "fail_loc", site, 2)     # fire on 2nd hit
+    _run_swept_workload(c, fs, site)
+    if c.sim.fail.hits.get(site, 0) >= 2:
+        assert c.sim.fail.fired == 1, site       # it really was the 2nd
+
+
+@pytest.mark.parametrize("site", _DROP_SITES)
+def test_fail_pair_sweep_drop_action(site):
+    """(site, action=drop) pair: lose the in-flight message at the site
+    instead of crashing — the target stays up, the client heals via
+    timeout -> resend, and the reply cache keeps it exactly-once."""
+    c = LustreCluster(osts=3, mdses=2, clients=2, commit_interval=3,
+                      spare_osts=1)
+    fs = LustreClient(c).mount()
+    c.lctl("set_param", "fail_loc", site, 1, "drop")
+    _run_swept_workload(c, fs, site)
+    assert c.sim.fail.fired == 1, site
+
+
+@pytest.mark.parametrize("site", sorted(_INVENTORY))
+def test_fail_pair_sweep_delay_action(site):
+    """(site, action=delay) pair: a slow-disk/slow-wire stall at every
+    site must never change RESULTS, only timing."""
+    c = LustreCluster(osts=3, mdses=2, clients=2, commit_interval=3,
+                      spare_osts=1)
+    fs = LustreClient(c).mount()
+    c.lctl("set_param", "fail_loc", site, 1, "delay")
+    _run_swept_workload(c, fs, site)
+    assert c.sim.fail.fired == 1, site
 
 
 # ------------------------------------- journaled bookmarks / mid-clear
