@@ -10,7 +10,124 @@ from __future__ import annotations
 
 from benchmarks.common import save, table, vtime
 from repro.core import LustreCluster
+from repro.core import ptlrpc as R
+from repro.core import recovery as rec_mod
 from repro.fsio import LustreClient
+
+AT_CLIENTS = 1024             # loaded-server adaptive-timeout scenario
+AT_LOAD_RATE = 400.0          # shared bucket: queue waits up to ~2.5 s
+REPLAY_BACKLOG = 50           # uncommitted writes the reconnect replays
+
+_metrics_cache: dict | None = None
+
+
+def _reconnect_run(imperative: bool) -> dict:
+    """First-op latency after an unnoticed server power-cycle.
+
+    Timeout-driven: the client's next request goes unanswered, and the
+    op pays timeout + reconnect + full replay inline. Imperative: the
+    pinger already noticed the new boot count and recovered off the
+    application's critical path, so the op is just the op."""
+    c = LustreCluster(osts=1, mdses=1, clients=1, commit_interval=100000)
+    rpc = c.make_client_rpc(0)
+    osc = c.make_oscs(rpc, writeback=False)[0]
+    oid = osc.create(0)["oid"]
+    for i in range(REPLAY_BACKLOG):
+        osc.write(0, oid, i * 8, b"r" * 8)
+    c.fail_node("ost0")
+    c.restart_node("ost0")
+    if imperative:
+        p = rec_mod.Pinger([osc.imp], interval=0.5)
+        for _ in range(4):
+            if p.tick().get(osc.imp.target_uuid):
+                break
+            c.sim.clock.advance(p.interval)
+    else:
+        # the client hears nothing about the reboot: lose its next
+        # request so discovery is purely timeout-driven
+        c.sim.faults.drop_next[c.ost_targets[0].node.nid] = 1
+    t0 = c.now
+    assert osc.read(0, oid, 0, 8) == b"r" * 8
+    return {
+        "first_op_s": c.now - t0,
+        "replays": c.stats.counters.get("rpc.replay", 0),
+        "imperative_recoveries":
+            c.stats.counters.get("rpc.imperative_recovery", 0),
+    }
+
+
+def _at_run(adaptive: bool) -> dict:
+    """1024 clients, one small write each, through one OST whose shared
+    token bucket stretches queue waits past any fixed 1 s timeout."""
+    c = LustreCluster(osts=1, mdses=1, clients=AT_CLIENTS,
+                      commit_interval=4096,
+                      adaptive_timeouts=adaptive)
+    c.ost_targets[0].service.set_policy(
+        "tbf", rate=1e9, burst=4.0, rules={"load": AT_LOAD_RATE})
+    pairs = []
+    for i in range(AT_CLIENTS):
+        rpc = c.make_client_rpc(i)
+        osc = c.make_oscs(rpc, writeback=False)[0]
+        oid = osc.create(0)["oid"]   # per-client bucket: setup unthrottled
+        rpc.jobid = "load"           # writes share ONE bucket from here
+        pairs.append((osc, oid))
+    failures = [0]
+
+    def one(osc, oid):
+        try:
+            osc.write(0, oid, 0, b"w" * 4096)
+        except (R.RpcError, R.TimeoutError_):
+            failures[0] += 1
+    t0 = c.now
+    c.sim.parallel([lambda o=o, d=d: one(o, d) for o, d in pairs])
+    cnt = c.stats.counters
+    return {
+        "adaptive": adaptive,
+        "vtime_s": round(c.now - t0, 3),
+        "spurious_timeouts": cnt.get("rpc.timeout_spurious", 0),
+        "timeouts": cnt.get("rpc.timeout", 0),
+        "early_replies": cnt.get("rpc.early_reply", 0),
+        "early_reply_rescues": cnt.get("rpc.early_reply_rescue", 0),
+        "evictions": sum(v for k, v in cnt.items()
+                         if k.endswith("_eviction")),
+        "failed_ops": failures[0],
+    }
+
+
+def recovery_metrics(use_cache: bool = True) -> dict:
+    """The BENCH_rpc.json `recovery` section (one execution per process):
+    imperative-vs-timeout reconnect speedup + the loaded-server adaptive
+    timeout scenario with its fixed-timeout baseline."""
+    global _metrics_cache
+    if use_cache and _metrics_cache is not None:
+        return _metrics_cache
+    timeout_run = _reconnect_run(imperative=False)
+    imp_run = _reconnect_run(imperative=True)
+    at_on = _at_run(adaptive=True)
+    at_off = _at_run(adaptive=False)
+    out = {
+        "imperative": {
+            "timeout_driven_first_op_s":
+                round(timeout_run["first_op_s"], 6),
+            "imperative_first_op_s": round(imp_run["first_op_s"], 6),
+            "speedup_x": round(timeout_run["first_op_s"]
+                               / max(1e-9, imp_run["first_op_s"]), 2),
+            "imperative_recoveries": imp_run["imperative_recoveries"],
+            "replay_backlog": REPLAY_BACKLOG,
+        },
+        "at": {
+            "clients": AT_CLIENTS,
+            "spurious_with_at": at_on["spurious_timeouts"],
+            "evictions_with_at": at_on["evictions"],
+            "failed_ops_with_at": at_on["failed_ops"],
+            "early_replies": at_on["early_replies"],
+            "early_reply_rescues": at_on["early_reply_rescues"],
+            "spurious_baseline": at_off["spurious_timeouts"],
+            "failed_ops_baseline": at_off["failed_ops"],
+        },
+    }
+    _metrics_cache = out
+    return out
 
 
 def run() -> dict:
@@ -73,6 +190,19 @@ def run() -> dict:
                          "replays": c2.stats.counters.get("rpc.replay", 0)}
     print(f"MDS crash with 100 uncommitted creates: replayed "
           f"{out['mds_replay']['replays']} ops, fids stable: {ok}")
+
+    # ------------------------------------- (d) ISSUE-10 gated metrics
+    m = recovery_metrics()
+    out["metrics"] = m
+    imp = m["imperative"]
+    print(f"imperative recovery: first op {imp['imperative_first_op_s']*1e3:.2f} ms "
+          f"vs timeout-driven {imp['timeout_driven_first_op_s']*1e3:.1f} ms "
+          f"[{imp['speedup_x']}x]")
+    at = m["at"]
+    print(f"adaptive timeouts, {at['clients']} clients on a throttled OST: "
+          f"{at['early_replies']} early replies, "
+          f"{at['spurious_with_at']} spurious timeouts "
+          f"(fixed-timeout baseline: {at['spurious_baseline']})")
     save("recovery", out)
     return out
 

@@ -128,6 +128,13 @@ def bench_rpc() -> dict:
     from benchmarks.bench_parity import raid5_metrics
     r5 = raid5_metrics()
     out["raid5"] = r5
+    # recovery plane (ISSUE-10): imperative reconnect must beat the
+    # timeout-driven path >= 4x, and adaptive timeouts must keep a
+    # 1024-client loaded-server run free of spurious timeouts and
+    # evictions while the fixed-timeout baseline demonstrably suffers
+    from benchmarks.bench_recovery import recovery_metrics
+    rec = recovery_metrics()
+    out["recovery"] = rec
     # single source of truth for the gates: main() keys its exit code off
     # these per-gate flags, and the file writes below key off the
     # combined one
@@ -174,9 +181,15 @@ def bench_rpc() -> dict:
         or not r5["degraded"]["identical"]
         or r5["throttle"]["tbf_p99_ratio"] > 1.5
         or r5["rebuild"]["layout_swaps"] < 1)
+    rec["regressed"] = (
+        rec["imperative"]["speedup_x"] < 4.0
+        or rec["at"]["spurious_with_at"] != 0
+        or rec["at"]["evictions_with_at"] != 0
+        or rec["at"]["failed_ops_with_at"] != 0
+        or rec["at"]["spurious_baseline"] <= 0)
     out["regressed"] = out["write_regressed"] or sr["regressed"] \
         or ms["regressed"] or un["regressed"] or sc["regressed"] \
-        or r5["regressed"]
+        or r5["regressed"] or rec["regressed"]
     if not out["regressed"]:
         # a failed gate must NOT overwrite its own baseline: the second
         # run would compare against the regressed count and pass, and a
@@ -253,6 +266,17 @@ def bench_rpc() -> dict:
           f"  grant cliff: {cl['control_grant'] >> 10} KiB -> "
           f"{cl['scale_grant'] >> 10} KiB marginal grant, write RPCs/client "
           f"x{cl['rpc_multiplier']}")
+    ri, ra = rec["imperative"], rec["at"]
+    print(f"== BENCH_rpc: recovery plane ==\n"
+          f"  imperative reconnect: first op "
+          f"{ri['imperative_first_op_s'] * 1e3:.2f} ms vs timeout-driven "
+          f"{ri['timeout_driven_first_op_s'] * 1e3:.1f} ms "
+          f"[{ri['speedup_x']}x, gate >= 4x]\n"
+          f"  adaptive timeouts @ {ra['clients']} clients: "
+          f"{ra['early_replies']} early replies, "
+          f"{ra['spurious_with_at']} spurious / {ra['evictions_with_at']} "
+          f"evictions (gate 0), fixed-timeout baseline "
+          f"{ra['spurious_baseline']} spurious (gate > 0)")
     return out
 
 
@@ -321,6 +345,17 @@ def main():
                 f"{r5['degraded']['identical']}, tbf p99 ratio "
                 f"{r5['throttle']['tbf_p99_ratio']} (cap 1.5), layout "
                 f"swaps {r5['rebuild']['layout_swaps']} (floor 1)"))
+        rec = rpc["recovery"]
+        if rec.get("regressed"):
+            failures.append((
+                "BENCH_rpc", f"recovery gate failed: imperative "
+                f"speedup {rec['imperative']['speedup_x']}x (floor 4x), "
+                f"AT spurious {rec['at']['spurious_with_at']} / "
+                f"evictions {rec['at']['evictions_with_at']} / failed "
+                f"ops {rec['at']['failed_ops_with_at']} (all must be 0 "
+                f"at {rec['at']['clients']} clients), fixed-timeout "
+                f"baseline spurious {rec['at']['spurious_baseline']} "
+                f"(must be > 0)"))
         ms = rpc["md_scan"]
         if ms.get("regressed"):
             failures.append((

@@ -40,9 +40,27 @@ class LustreCluster(R.ClusterBase):
                  wbc_auto: bool = False, wbc_batch: int = 64,
                  wbc_max_dirty: int = 1024,
                  spare_osts: int = 0, rebuild_rate: float = 0.0,
-                 rebuild_burst: float = 4.0):
+                 rebuild_burst: float = 4.0,
+                 adaptive_timeouts: bool = True,
+                 at_min: float = R.AT_MIN, at_max: float = R.AT_MAX,
+                 ping_evict_age: float = 0.0,
+                 recovery_per_client: float = 0.1,
+                 recovery_window_max: float = 30.0):
         super().__init__(seed)
         self.net = net
+        # recovery / health-plane knobs (ISSUE-10): adaptive_timeouts +
+        # at_min/at_max are read by every Import built against this
+        # cluster (per-opcode decayed-max service estimates instead of
+        # the fixed DEFAULT_TIMEOUT); ping_evict_age > 0 arms the
+        # server-side stale-export back-stop; recovery_per_client scales
+        # each target's recovery window with its export count, capped at
+        # recovery_window_max
+        self.adaptive_timeouts = adaptive_timeouts
+        self.at_min = at_min
+        self.at_max = at_max
+        self.ping_evict_age = ping_evict_age
+        self.recovery_per_client = recovery_per_client
+        self.recovery_window_max = recovery_window_max
         # client-side BRW pipeline + read cache knobs, handed to every
         # OSC built via make_oscs/make_lov (overridable per call);
         # readahead_pages is consumed by LustreClient's sequential-read
@@ -133,6 +151,13 @@ class LustreCluster(R.ClusterBase):
         # --- client nodes
         for i in range(clients):
             self.client_nodes.append(R.Node(f"client{i}", net, self))
+
+        for t in (self.ost_targets + self.spare_targets
+                  + self.mds_targets):
+            t.at_enabled = adaptive_timeouts
+            t.ping_evict_age = ping_evict_age
+            t.recovery_per_client = recovery_per_client
+            t.recovery_window_max = recovery_window_max
 
     # ------------------------------------------------------------ builders
     def make_client_rpc(self, idx: int = 0) -> R.RpcClient:
@@ -249,6 +274,20 @@ class LustreCluster(R.ClusterBase):
                 self.sim.fail.action = args[1]
             elif args[0] == "fail_delay":
                 self.sim.fail.delay_s = float(args[1])
+            elif args[0] in ("adaptive_timeouts", "at_min", "at_max",
+                             "ping_evict_age", "recovery_per_client",
+                             "recovery_window_max"):
+                # health-plane knobs: cluster attr feeds new Imports;
+                # server-side ones are pushed to live targets too
+                val = (bool(args[1]) if args[0] == "adaptive_timeouts"
+                       else float(args[1]))
+                setattr(self, args[0], val)
+                if args[0] != "at_min" and args[0] != "at_max":
+                    attr = ("at_enabled"
+                            if args[0] == "adaptive_timeouts" else args[0])
+                    for t in (self.ost_targets + self.spare_targets
+                              + self.mds_targets):
+                        setattr(t, attr, val)
             else:
                 raise ValueError(args[0])
         elif verb == "rebuild":
@@ -273,6 +312,24 @@ class LustreCluster(R.ClusterBase):
             for t in self.ost_targets + self.spare_targets:
                 t.service.set_policy("tbf_orr", rules={"rebuild": rate},
                                      burst=burst)
+        elif verb == "recovery_close":
+            # lctl("recovery_close", target_uuid) — admin closes the
+            # recovery window early instead of waiting out the deadline
+            # (VBR makes that safe: stragglers replay late, §ISSUE-10).
+            # mirror the RPC boundary's OBD_FAIL semantics: an armed
+            # mds.recovery_window crash powers the target off here too
+            t = self.target(args[0])
+            try:
+                t.close_recovery()
+            except fail_mod.FailLocDrop:
+                self.sim.stats.count("fail.drop")
+            except fail_mod.FailLocHit:
+                self.sim.stats.count("fail.crash")
+                t.crash()
+                t.restart()
+        elif verb == "evict_client":
+            # lctl("evict_client", target_uuid, client_uuid)
+            self.target(args[0]).evict_client(args[1], reason="admin")
         elif verb == "mon_snapshot":
             # lctl("mon_snapshot") -> one cluster-wide aggregation round
             # over real RPCs (partial + 'stale' list when targets are
@@ -364,6 +421,25 @@ class LustreCluster(R.ClusterBase):
                    "layout_swaps": cnt.get("lov.layout_swap", 0),
                    "rebuilds_aborted": cnt.get("lov.rebuild_aborted", 0),
                    "ost_deactivations": cnt.get("lov.ost_inactive", 0),
+               },
+               # recovery / health plane rollup (ISSUE-10): adaptive
+               # timeouts, early replies, VBR admission decisions, and
+               # the pinger's imperative-recovery + eviction activity
+               "recovery": {
+                   "early_replies": cnt.get("rpc.early_reply", 0),
+                   "early_reply_rescues":
+                       cnt.get("rpc.early_reply_rescue", 0),
+                   "timeouts": cnt.get("rpc.timeout", 0),
+                   "spurious_timeouts": cnt.get("rpc.timeout_spurious", 0),
+                   "reconnect_backoffs":
+                       cnt.get("rpc.reconnect_backoff", 0),
+                   "imperative_recoveries":
+                       cnt.get("rpc.imperative_recovery", 0),
+                   "vbr_admits": cnt.get("rpc.vbr_admit", 0),
+                   "vbr_evictions": cnt.get("rpc.vbr_eviction", 0),
+                   "recovery_stragglers":
+                       cnt.get("rpc.recovery_stragglers", 0),
+                   "ping_evictions": cnt.get("rpc.ping_eviction", 0),
                },
                # monitoring plane (ISSUE-7): span registry roll-up + the
                # collector's last-snapshot summary; per-target per-node

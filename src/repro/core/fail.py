@@ -311,6 +311,30 @@ register_site("lov.rebuild",
               "layout was touched yet, every file it skipped still "
               "serves degraded reads from parity and a rerun finishes "
               "the job)")
+# recovery-robustness plane (ISSUE-10):
+register_site("ptl.early_reply",
+              "service about to grant an adaptive-timeout early reply "
+              "extending the client's deadline (drop: the reply — and "
+              "the extension riding on it — is lost on the wire, the "
+              "client declares a spurious timeout and heals by resend "
+              "-> reply cache; crash: the target dies after executing "
+              "but before replying, the client reconnects and replays)")
+register_site("mds.recovery_window",
+              "MDS about to close its recovery window (VBR: stragglers "
+              "are NOT blanket-evicted — a late replay is admitted iff "
+              "its pre-op versions still match; crash here restarts "
+              "recovery from the journal, drop loses the close and the "
+              "window closes again at the next trigger)")
+register_site("ping.notify",
+              "pinger noticed a target reboot and is about to trigger "
+              "imperative recovery (self-interpreting: drop/crash lose "
+              "the notification — the client falls back to the timeout-"
+              "driven reconnect path, strictly slower but safe)")
+register_site("net.flap",
+              "chaos harness about to power-cycle a server node (self-"
+              "interpreting: drop/crash suppress the flap — the "
+              "schedule skips the event and the workload proceeds on a "
+              "healthy fabric)")
 register_site("lov.layout_swap",
               "rebuilder about to commit a rebuilt file's new StripeMd "
               "to the MDS EA (client-side site: crash degrades to "

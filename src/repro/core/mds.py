@@ -261,8 +261,12 @@ class MdsTarget(R.Target):
         its recovery window instead of waiting for the next cross-MDT
         operation to stumble over -108."""
         imp = self.peers.get(req.body.get("peer", ""))
-        if imp is not None and imp.state == "FULL":
-            imp.state = "DISCONN"
+        if imp is not None:
+            # a FULL import must drop its now-stale connection first; a
+            # DISCONN one (we noticed the outage mid-flap and nothing
+            # retried since) just needs the reconnect kick
+            if imp.state == "FULL":
+                imp.state = "DISCONN"
             try:
                 imp._connect_cycle()       # detects reboot -> replays
             except R.TimeoutError_:
@@ -827,6 +831,46 @@ class MdsTarget(R.Target):
                 self.changelog.retract(clrec)
             return R.Reply(transno=self.txn_meta(undo))
         return R.Reply()
+
+    # ---------------------------------------------------- VBR (ISSUE-10)
+    @staticmethod
+    def _vbr_rec_keys(r: dict) -> list:
+        """The inodes one reint record mutates: the parent dir(s) whose
+        entry set changes and the target inode whose attrs change."""
+        keys = []
+        for f in ("parent", "fid", "src", "dst"):
+            v = r.get(f)
+            if v is not None:
+                k = ("ino",) + tuple(v)
+                if k not in keys:
+                    keys.append(k)
+        return keys
+
+    def vbr_keys_for(self, req: R.Request) -> list:
+        op = req.opcode
+        if op == "reint":
+            return self._vbr_rec_keys(req.body.get("rec") or {})
+        if op == "reint_batch":
+            keys: list = []
+            seen: set = set()
+            for r in req.body.get("records", ()):
+                for k in self._vbr_rec_keys(r):
+                    if k not in seen:
+                        seen.add(k)
+                        keys.append(k)
+            return keys
+        if op == "close":
+            b = req.body
+            if b.get("size") is None and b.get("mtime") is None:
+                return []                  # attr-less close: no txn
+            exp = self.exports.get(req.client_uuid)
+            fid = None
+            if exp is not None:
+                fid = exp.data.get("opens", {}).get(b.get("handle"))
+            if fid is None and b.get("fid"):
+                fid = tuple(b["fid"])
+            return [("ino",) + tuple(fid)] if fid is not None else []
+        return []
 
     # ----------------------------------------------------- reintegration
     def op_reint(self, req: R.Request) -> R.Reply:
@@ -1739,6 +1783,7 @@ class MdsTarget(R.Target):
         self.transno = min(self.transno, cut)
         self.committed_transno = min(self.committed_transno, cut)
         self.cluster_cut = min(self.cluster_cut, cut)
+        self.vbr_prune(cut)               # version history follows the cut
         self._cut_checked_at = None       # the world changed: re-derive
         return R.Reply(data={"undone": undone})
 

@@ -57,6 +57,18 @@ class OstTarget(R.Target):
         ops["orphan_cleanup"] = self.op_orphan_cleanup
         ops["grant_shrink"] = self.op_grant_shrink
 
+    # ---------------------------------------------------- VBR (ISSUE-10)
+    def vbr_keys_for(self, req: R.Request) -> list:
+        """Every object mutation versions its (group, oid).  `create` is
+        deliberately untracked: a pinned-oid replay either finds its
+        object alive (idempotent) or rebirths it — no older mutation can
+        conflict with an object's own birth."""
+        if req.opcode in ("write", "setattr", "punch", "destroy"):
+            b = req.body
+            if b.get("oid") is not None:
+                return [("obj", b["group"], b["oid"])]
+        return []
+
     # ------------------------------------------------------------- locks
     def _lvb_update(self, res: dlm_mod.Resource):
         if res.name[0] != "ext":

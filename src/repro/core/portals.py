@@ -258,7 +258,9 @@ class PortalsNetwork:
         nal = NALS.get(self.net_of(dst), NALS["socknal"])
         link = (src, dst)
         begin = max(start, self.link_busy[link])
-        done = begin + nal.latency + nal.small_msg_cost + nbytes / nal.bandwidth
+        done = (begin + nal.latency + nal.small_msg_cost
+                + nbytes / nal.bandwidth
+                + self.sim.faults.extra_latency(src, dst))
         self.link_busy[link] = done
         return done
 

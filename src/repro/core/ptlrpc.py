@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import zlib
 from collections import defaultdict
 from typing import Any, Callable, Optional
 
@@ -79,6 +80,49 @@ REPLY_PORTALS = {"ost": OSC_REPLY_PORTAL, "mds": MDC_REPLY_PORTAL,
 
 DEFAULT_TIMEOUT = 1.0      # virtual seconds ("obd_timeout")
 
+# ------------------------------------------------- adaptive timeouts (AT)
+# Lustre 1.8 adaptive timeouts (ch. 11): the client keeps a per-(import,
+# opcode) service-time history (a decayed max) and times out at
+# estimate * (1 + margin) clamped to [at_min, at_max] instead of the one
+# flat obd_timeout.  The server side of the bargain is the EARLY REPLY:
+# when the NRS queue means a request will finish after the client's
+# shipped deadline, the service extends that deadline (`early_until` on
+# the reply) so a merely-loaded server is not mistaken for a dead one.
+AT_MIN = 0.5               # floor: never flakier than this
+AT_MAX = 10.0              # ceiling: a dead server is still detected
+AT_DECAY = 0.9             # history decay per observation (decayed max)
+AT_MARGIN = 0.25           # client slack factor over the estimate
+EARLY_REPLY_MARGIN = 0.25  # server slack granted past actual completion
+BACKOFF_BASE = 0.05        # reconnect backoff: base * 2^attempt ...
+BACKOFF_MAX = 1.0          # ... capped here (virtual seconds)
+TRANSNO_EPOCH = 1 << 20    # per-boot transno epoch (VBR monotonicity)
+
+
+class AdaptiveTimeout:
+    """Per-import AT state: opcode -> decayed-max service estimate."""
+
+    def __init__(self, at_min: float = AT_MIN, at_max: float = AT_MAX,
+                 enabled: bool = True):
+        self.at_min = at_min
+        self.at_max = at_max
+        self.enabled = enabled
+        self.est: dict[str, float] = {}
+
+    def observe(self, opcode: str, rtt: float):
+        cur = self.est.get(opcode, 0.0)
+        self.est[opcode] = max(rtt, cur * AT_DECAY)
+
+    def timeout_for(self, opcode: str) -> float:
+        est = self.est.get(opcode, 0.0)
+        return min(self.at_max,
+                   max(self.at_min, est * (1.0 + AT_MARGIN)))
+
+    def info(self) -> dict:
+        return {"at_min": self.at_min, "at_max": self.at_max,
+                "enabled": self.enabled,
+                "estimates": {k: round(v, 6)
+                              for k, v in sorted(self.est.items())}}
+
 
 def wire_size(obj: Any) -> int:
     """Rough on-the-wire size of a request/reply payload."""
@@ -113,6 +157,12 @@ class Request:
     replay: bool = False
     bulk_nbytes: int = 0         # niobuf vector total (timing)
     transno: int = 0             # assigned by server on updates
+    sent_at: float = 0.0         # client send instant (AT: the server
+                                 # derives request transit from it)
+    deadline: float = 0.0        # client's absolute give-up time; the
+                                 # server grants an early reply when its
+                                 # own completion estimate overruns it
+                                 # (0 = pre-AT client, never early-reply)
     jobid: str = ""              # batch-job tag: TBF NRS classification +
                                  # changelog attribution (one plumbing,
                                  # two consumers)
@@ -133,6 +183,12 @@ class Reply:
     last_committed: int = 0
     bulk: Any = None             # payload moved on the bulk portal
     bulk_nbytes: int = 0
+    early_until: float = 0.0     # AT early reply: server-extended client
+                                 # deadline (0 = no extension granted)
+    pre_versions: Any = None     # VBR: [(key, version)] observed by this
+                                 # update pre-op; the client pins them
+                                 # into the retained request so a replay
+                                 # can prove it still applies (§29 + VBR)
 
 
 class RpcError(Exception):
@@ -162,6 +218,9 @@ class Export:
     # uncommitted portion (lost on crash)
     volatile_replies: dict = dataclasses.field(default_factory=dict)
     data: dict = dataclasses.field(default_factory=dict)  # per-svc (opens..)
+    last_ping: float = 0.0       # any RPC refreshes it; the server-side
+                                 # pinger back-stop evicts exports whose
+                                 # age exceeds ping_evict_age (§4.4.2.5)
 
 
 # ---------------------------------------------------------------- service
@@ -239,6 +298,18 @@ class Service:
         # the reply departs no earlier than the scheduled completion
         # (handlers issuing nested RPCs may already be later than this)
         self.sim.clock.advance_to(start + cost)
+        if req.deadline and self.target.at_enabled \
+                and self.sim.now + EARLY_REPLY_MARGIN > req.deadline:
+            # AT early reply (ch. 11): queueing/service overran (or is
+            # about to overrun) the client's deadline — extend it past
+            # our completion plus the observed request transit, so the
+            # reply's symmetric trip home still lands inside the grant
+            fail_mod.maybe_fail("ptl.early_reply")
+            net = max(0.0, arrival - req.sent_at) if req.sent_at else 0.0
+            reply.early_until = max(reply.early_until,
+                                    self.sim.now + net
+                                    + EARLY_REPLY_MARGIN)
+            self.sim.stats.count("rpc.early_reply")
         if req.trace_id and req.opcode not in nrs_mod.CONTROL_OPS \
                 and reply.status not in (-11, -108, -107):
             # one span per traced RPC (ch. 35 observability): the registry
@@ -280,13 +351,30 @@ class Target:
         self.boot_count = 1
         self.recovering = False
         self.recovery_deadline = 0.0
+        self._recov_pending: set = set()
         self.commit_callbacks: list[Callable[[int], None]] = []
         self.evicted: set = set()
+        # ---- recovery-robustness knobs (ISSUE-10) ----
+        self.at_enabled = True             # server grants early replies
+        self.recovery_per_client = 0.1     # window scales with exports
+        self.recovery_window_max = 30.0
+        self.ping_evict_age = 0.0          # 0 = server pinger backstop off
+        self._next_stale_scan = 0.0
+        # VBR (§29 + Lustre 1.8 version-based recovery): object key ->
+        # mutation history as a list of transnos (last entry = current
+        # version). Histories are pruned with the journal: a crash drops
+        # entries above committed_transno, a consistent-cut rollback
+        # drops entries above the cut.
+        self.versions: dict[Any, list[int]] = {}
+        self._replay_tno = 0               # replay reuses its original
+                                           # transno (keeps the version
+                                           # namespace crash-aligned)
         self.service = Service(self)
         self.ops["connect"] = self.op_connect
         self.ops["disconnect"] = self.op_disconnect
         self.ops["ping"] = self.op_ping
         self.ops["mon_collect"] = self.op_mon_collect
+        self.ops["recovery_close"] = self.op_recovery_close
         node.register_target(self)
 
     # ------------------------------------------------------------- wiring
@@ -300,15 +388,26 @@ class Target:
     # -------------------------------------------------------------- txns
     def txn(self, undo: Callable[[], None]) -> int:
         """Open+record a transaction; returns its transno."""
-        self.transno += 1
-        self.undo_log.append((self.transno, undo))
+        if self._replay_tno:
+            # replay reuses the original transno (§29.2): VBR pre-op
+            # versions reference transnos, so re-execution must not
+            # renumber history or the next replay's match breaks.  The
+            # counter itself never regresses: post-restart transnos live
+            # in a fresh boot epoch above every number the crash lost
+            tno = self._replay_tno
+            self._replay_tno = 0           # only the op's first txn
+            self.transno = max(self.transno, tno)
+        else:
+            self.transno += 1
+            tno = self.transno
+        self.undo_log.append((tno, undo))
         # deferred crash site ({mds,ost}.txn): the induced crash lands at
         # this target's request boundary — transaction atomicity
         fail_mod.note(f"{self.svc_kind}.txn")
         self._ops_since_commit += 1
         if self._ops_since_commit >= self.commit_interval:
             self.commit()
-        return self.transno
+        return tno
 
     def commit(self):
         """Flush journal: everything up to `transno` becomes persistent."""
@@ -343,11 +442,18 @@ class Target:
         self.transno = self.committed_transno
         self.undo_log.clear()
         self._ops_since_commit = 0
+        self.vbr_prune(self.committed_transno)
         for exp in self.exports.values():
             exp.volatile_replies.clear()
 
     def restart(self):
         self.boot_count += 1
+        # VBR keys versions by transno, so transnos must stay monotone
+        # ACROSS reboots: a post-restart op reusing a number the crash
+        # lost would collide with pinned replay transnos and poison the
+        # version store (false conflicts on late replay).  Real servers
+        # keep a per-boot epoch in the transno high bits; jump epochs
+        self.transno = (self.transno // TRANSNO_EPOCH + 1) * TRANSNO_EPOCH
         # all live connections died with the node: clients must reconnect
         # (stale-generation requests bounce with -108 below)
         for exp in self.exports.values():
@@ -355,7 +461,13 @@ class Target:
         if self.exports:
             self.recovering = True
             self._recov_pending = set(self.exports)
-            self.recovery_deadline = self.sim.now + 2 * DEFAULT_TIMEOUT
+            # window scaled to the client count (ch. 11): every export
+            # needs a chance to reconnect+replay, but VBR means missing
+            # the window is survivable, so the cap stays tight
+            window = min(self.recovery_window_max,
+                         2 * DEFAULT_TIMEOUT
+                         + self.recovery_per_client * len(self.exports))
+            self.recovery_deadline = self.sim.now + window
         self.on_restart()
 
     def on_restart(self):
@@ -364,11 +476,111 @@ class Target:
     def finish_recovery(self):
         self.recovering = False
 
+    def close_recovery(self):
+        """Close the recovery window (§29.3 + VBR).  Unlike the pre-VBR
+        scheme, stragglers are NOT blanket-evicted here: a client that
+        reconnects after the close gets its replays version-checked like
+        anyone else (delayed recovery) and is only evicted if a replay
+        genuinely conflicts with the gap it left."""
+        if not self.recovering:
+            return
+        if self.svc_kind == "mds":
+            fail_mod.maybe_fail("mds.recovery_window")
+        if self._recov_pending:
+            self.sim.stats.count("rpc.recovery_stragglers",
+                                 len(self._recov_pending))
+        self._recov_pending = set()
+        self.finish_recovery()
+
+    def op_recovery_close(self, req: Request) -> Reply:
+        """lctl abort_recovery analogue: the consistent-cut machinery (or
+        an admin) closes the window early once every returning client has
+        replayed — new requests unblock without waiting out the clock."""
+        self.close_recovery()
+        return Reply(data={"recovering": self.recovering})
+
+    # ------------------------------------------------------ VBR versions
+    def vbr_keys_for(self, req: Request) -> list:
+        """Subclass hook: the object keys this update mutates (inode fids
+        on the MDS, (group, oid) objects on the OST). Empty = the op is
+        not version-tracked."""
+        return []
+
+    def version_of(self, key) -> int:
+        hist = self.versions.get(key)
+        return hist[-1] if hist else 0
+
+    def vbr_prune(self, cut: int):
+        """Drop version history above `cut` (crash / consistent-cut
+        rollback): those mutations were undone with the journal tail."""
+        if not self.versions:
+            return
+        for key in list(self.versions):
+            hist = [t for t in self.versions[key] if t <= cut]
+            if hist:
+                self.versions[key] = hist
+            else:
+                del self.versions[key]
+
+    def _vbr_admit(self, req: Request, exp: Export) -> Optional[Reply]:
+        """Version-based replay admission: the replay shipped the pre-op
+        versions it observed; if any tracked object has moved past them
+        (a straggler's lost mutation was undone, or a later mutation
+        already re-applied), re-executing would corrupt — evict THIS
+        client, not every straggler."""
+        vbr = req.body.get("_vbr")
+        if not vbr:
+            return None                    # pre-VBR request: admit as-is
+        for key, ver in vbr:
+            have = self.version_of(key)
+            if have != ver:
+                self.sim.stats.count("rpc.vbr_eviction")
+                self.evict_client(req.client_uuid, reason="vbr",
+                                  counted=True)
+                return Reply(status=-107)
+        self.sim.stats.count("rpc.vbr_admit")
+        return None
+
+    # --------------------------------------------------------- evictions
+    def evict_client(self, uuid: str, reason: str = "admin",
+                     counted: bool = False):
+        """Evict one export, reclaiming what the server granted it: DLM
+        locks through the existing ldlm eviction path, OST grant by
+        zeroing the export's share."""
+        if uuid in self.evicted or uuid not in self.exports:
+            return
+        if not counted:
+            self.sim.stats.count(f"rpc.{reason}_eviction")
+        self.evicted.add(uuid)
+        exp = self.exports.get(uuid)
+        if exp is not None:
+            exp.data.pop("grant", None)
+        ldlm = getattr(self, "ldlm", None)
+        if ldlm is not None:
+            ldlm.evict_client(uuid)
+        self._recov_pending.discard(uuid)
+
+    def _maybe_evict_stale(self, requester: str):
+        """Server-side pinger back-stop (§4.4.2.5): exports whose last
+        ping is older than ping_evict_age are dead — reclaim their locks
+        and grant so the living stop waiting on them."""
+        age = self.ping_evict_age
+        if not age or self.sim.now < self._next_stale_scan:
+            return
+        self._next_stale_scan = self.sim.now + age / 4
+        for uuid, exp in list(self.exports.items()):
+            if uuid == requester or uuid in self.evicted:
+                continue
+            if exp.last_ping and self.sim.now - exp.last_ping > age:
+                self.evict_client(uuid, reason="ping")
+
     # ------------------------------------------------------------ handler
     def handle(self, req: Request) -> Reply:
         st = self.sim.stats
         st.count(f"rpc.{self.svc_kind}.{req.opcode}")
         exp = self.export_for(req.client_uuid, "")
+        exp.last_ping = self.sim.now       # any RPC is proof of life
+        self._maybe_evict_stale(req.client_uuid)
         if req.client_uuid in self.evicted and req.opcode != "connect":
             return Reply(status=-107)      # ENOTCONN: evicted
         if (req.opcode not in ("connect", "disconnect", "ping")
@@ -382,24 +594,45 @@ class Target:
             st.count("rpc.reply_cache_hit")
             return cached
         if self.recovering and self.sim.now >= self.recovery_deadline:
-            # window expired: evict clients that never came back (§29.3)
-            for uuid in getattr(self, "_recov_pending", set()):
-                self.evicted.add(uuid)
-                self.sim.stats.count("rpc.recovery_eviction")
-            self.finish_recovery()
+            # window expired: close it — VBR version checks (not blanket
+            # eviction) decide the fate of stragglers' later replays
+            self.close_recovery()
         if self.recovering and req.opcode not in (
-                "connect", "replay", "disconnect") and not req.replay:
-            # new requests are gated until the recovery window closes
-            return Reply(status=-11)       # EAGAIN
+                "connect", "replay", "disconnect",
+                "recovery_close") and not req.replay:
+            # new requests are gated until the recovery window closes;
+            # the reply tells the client how long is left so it backs
+            # off sensibly instead of burning reconnect attempts
+            return Reply(status=-11, data={
+                "recovery_left": max(0.0, self.recovery_deadline
+                                     - self.sim.now)})  # EAGAIN
+        if req.replay:
+            rej = self._vbr_admit(req, exp)
+            if rej is not None:
+                return rej
         fn = self.ops.get(req.opcode)
         if fn is None:
             return Reply(status=-38)       # ENOSYS
+        keys = self.vbr_keys_for(req)
+        pre = [(k, self.version_of(k)) for k in keys] if keys else None
+        # the transno pin is scoped to THIS request: a replayed handler
+        # may round-trip to a peer that synchronously calls back into us
+        # (e.g. remote_nlink_adjust on a replayed create's parent), and
+        # that nested txn must NOT consume the outer replay's number
+        prev_pin = self._replay_tno
+        self._replay_tno = req.transno if req.replay else 0
         try:
             reply = fn(req)
         except RpcError as e:
             reply = Reply(status=e.status)
+        finally:
+            self._replay_tno = prev_pin
         reply.last_committed = self.committed_transno
         if reply.transno:                   # update op: cache for resends
+            if keys:
+                for k in keys:
+                    self.versions.setdefault(k, []).append(reply.transno)
+                reply.pre_versions = pre
             sanitize.state.note_execute(self.uuid, req.client_uuid,
                                         req.xid, reply.transno)
             exp.volatile_replies[req.xid] = reply
@@ -415,12 +648,13 @@ class Target:
         exp.boot_count = req.boot_count
         self.evicted.discard(req.client_uuid)
         if self.recovering:
-            pending = getattr(self, "_recov_pending", set())
-            pending.discard(req.client_uuid)
-            if not pending or self.sim.now >= self.recovery_deadline:
-                # every known client is back (or window expired): open up.
-                # Non-returning clients would be evicted here (§29.3).
-                self.finish_recovery()
+            self._recov_pending.discard(req.client_uuid)
+            if not self._recov_pending \
+                    or self.sim.now >= self.recovery_deadline:
+                # every known client is back (or window expired): open
+                # up. Stragglers are NOT evicted — VBR version checks
+                # judge their replays if they ever return (§29.3 + VBR).
+                self.close_recovery()
         return Reply(data={
             "boot_count": self.boot_count,
             "conn_generation": exp.conn_generation,
@@ -556,6 +790,12 @@ class Node:
     def restart(self):
         self.sim.faults.down_nids.discard(self.nid)
         self.boot_count += 1
+        # the targets already restarted at fail() time, but the node was
+        # unreachable then: re-run their announce hooks now so peers get
+        # the imperative-recovery nudge (the pinger's job in real Lustre)
+        for t in self.targets.values():
+            if t.node is self:
+                t.on_restart()
 
 
 class ClusterBase:
@@ -590,8 +830,15 @@ class Import:
         self.last_committed = 0
         self.replay_list: list[Request] = []   # sent, uncommitted updates
         self.inflight: Request | None = None
-        self.timeout = DEFAULT_TIMEOUT
+        self.timeout = DEFAULT_TIMEOUT     # fixed fallback (AT disabled)
         self.max_reconnects = 8
+        cl = getattr(client.node, "cluster", None)
+        self.at = AdaptiveTimeout(
+            at_min=getattr(cl, "at_min", AT_MIN),
+            at_max=getattr(cl, "at_max", AT_MAX),
+            enabled=getattr(cl, "adaptive_timeouts", True))
+        self.backoff_base = BACKOFF_BASE
+        self.backoff_max = BACKOFF_MAX
         self.generation = 0
         self.connect_data: dict = {}
         # eviction observers: upper layers (OSC page cache, LockClient,
@@ -615,8 +862,37 @@ class Import:
         return REPLY_PORTALS[self.svc_kind]
 
     # --------------------------------------------------------------- rpc
-    def _send_once(self, req: Request) -> Reply | None:
-        """One wire attempt. None = timeout/drop."""
+    def rpc_timeout(self, opcode: str) -> float:
+        """Per-op timeout: the AT estimate when adaptive, else fixed."""
+        if self.at.enabled:
+            return self.at.timeout_for(opcode)
+        return self.timeout
+
+    def _backoff(self, attempt: int):
+        """Capped exponential backoff with deterministic jitter between
+        reconnect attempts — N clients losing the same server no longer
+        hammer it in lockstep, and the schedule is reproducible."""
+        base = min(self.backoff_max, self.backoff_base * (2 ** attempt))
+        h = zlib.crc32(f"{self.client.uuid}:{self.target_uuid}:"
+                       f"{attempt}".encode())
+        # jitter in [0.5, 1.0) * base, derived from stable identifiers
+        self.sim.clock.advance(base * (0.5 + (h % 1024) / 2048.0))
+        self.sim.stats.count("rpc.reconnect_backoff")
+
+    def _send_once(self, req: Request,
+                   timeout: float | None = None) -> Reply | None:
+        """One wire attempt. None = timeout/drop.
+
+        AT semantics (ch. 11): the request carries an absolute deadline;
+        a reply that lands after it is a SPURIOUS TIMEOUT — dropped here
+        exactly as if the wire ate it (the resend is answered from the
+        reply cache) — unless the server granted an early reply
+        extending the deadline past the arrival."""
+        if timeout is None:
+            timeout = self.rpc_timeout(req.opcode)
+        t0 = self.sim.now
+        req.sent_at = t0
+        req.deadline = t0 + timeout
         eq = P.EventQueue()
         md = P.MemoryDescriptor(length=1 << 22, threshold=1, eq=eq)
         self.client.ni.me_attach(self.reply_portal, req.xid, 0, md)
@@ -626,13 +902,28 @@ class Import:
                                              self.reply_portal), nbytes)
         if t_arr == float("inf") or not md.buffer:
             # request or reply lost: wait out the timeout (§4.4.2.3)
-            self.sim.clock.advance(self.timeout)
+            self.sim.clock.advance(timeout)
             md.unlinked = True             # unlink ME/MD after timeout
             self.sim.stats.count("rpc.timeout")
             return None
         ev = eq.pop()
         _, reply = md.buffer[0]
-        self.sim.clock.advance_to(ev.arrival_time)
+        arrival = ev.arrival_time
+        if arrival > req.deadline + 1e-12 \
+                and reply.early_until + 1e-12 < arrival:
+            # the reply exists but the client already gave up at the
+            # deadline and no early reply extended it: a spurious
+            # timeout — the loaded-server failure mode AT exists to kill
+            md.unlinked = True
+            self.sim.clock.advance_to(max(self.sim.now, req.deadline))
+            self.sim.stats.count("rpc.timeout")
+            self.sim.stats.count("rpc.timeout_spurious")
+            return None
+        if arrival > req.deadline + 1e-12:
+            self.sim.stats.count("rpc.early_reply_rescue")
+        self.sim.clock.advance_to(arrival)
+        if self.at.enabled:
+            self.at.observe(req.opcode, arrival - t0)
         return reply
 
     def request(self, opcode: str, body: dict, *, bulk_nbytes: int = 0,
@@ -649,18 +940,35 @@ class Import:
                       conn_generation=self.generation,
                       bulk_nbytes=bulk_nbytes, jobid=self.client.jobid,
                       trace_id=next(_trace_seq))
-        for attempt in range(self.max_reconnects):
+        attempt = 0
+        eagain_waited = 0.0
+        while attempt < self.max_reconnects:
             reply = self._send_once(req)
             if reply is None:
                 if no_recover:
                     raise TimeoutError_(f"{self.target_uuid} unreachable")
+                attempt += 1
                 self.state = "DISCONN"
+                self._backoff(attempt - 1)
                 self._connect_cycle()      # may replay + walk failover ring
                 continue
             if reply.status == -11:        # EAGAIN: server in recovery
-                self.sim.clock.advance(0.5)
+                # wait out what the server says is left of its window
+                # (client-count-scaled windows outlive any fixed retry
+                # budget); a separate time budget bounds the spin
+                left = 0.5
+                if isinstance(reply.data, dict):
+                    left = max(0.05, min(0.5,
+                                         reply.data.get(
+                                             "recovery_left", 0.5)))
+                eagain_waited += left
+                if eagain_waited > 4 * 60.0:
+                    raise TimeoutError_(
+                        f"{self.target_uuid} stuck in recovery")
+                self.sim.clock.advance(left)
                 continue
             if reply.status == -108:       # stale connection: server reboot
+                attempt += 1
                 self.state = "DISCONN"
                 self._connect_cycle()
                 req.body["_target"] = self.target_uuid
@@ -669,6 +977,7 @@ class Import:
             if reply.status == -107:       # evicted: state is gone — drop
                 # replay queue, reconnect fresh, retry (client-visible data
                 # loss is the eviction's documented cost)
+                attempt += 1
                 self.sim.stats.count("rpc.evicted_reconnect")
                 self.replay_list.clear()
                 self.state = "DISCONN"
@@ -696,17 +1005,27 @@ class Import:
         self.last_committed = max(self.last_committed, reply.last_committed)
         if reply.transno:
             req.transno = reply.transno
+            if reply.pre_versions is not None:
+                # VBR: retain the observed pre-op versions with the
+                # request — a later replay ships them as its proof that
+                # re-execution still applies to the same state
+                req.body["_vbr"] = reply.pre_versions
             self.replay_list.append(req)
         # prune replay list: server committed these (§29: last_committed)
         self.replay_list = [r for r in self.replay_list
                             if r.transno > self.last_committed]
 
     # ---------------------------------------------------------- recovery
-    def _connect_cycle(self):
-        """Reconnect, walking the failover nid ring; on a server reboot,
-        replay committed-but-lost transactions then mark FULL."""
+    def _connect_cycle(self, max_attempts: int | None = None):
+        """Reconnect, walking the failover nid ring with capped
+        exponential backoff between attempts (no more N flat timeout
+        spins in lockstep); on a server reboot, replay
+        committed-but-lost transactions then mark FULL."""
         last_err = None
-        for attempt in range(self.max_reconnects):
+        n = self.max_reconnects if max_attempts is None else max_attempts
+        for attempt in range(n):
+            if attempt:
+                self._backoff(attempt - 1)
             nid = self.nids[attempt % len(self.nids)]
             self.active_nid = nid
             creq = Request(opcode="connect",
@@ -741,6 +1060,7 @@ class Import:
                        if r.transno > server_last_committed),
                       key=lambda r: r.transno)
         self.replay_list = []
+        evicted = False
         for req in todo:
             req.replay = True
             req.conn_generation = self.generation
@@ -749,17 +1069,65 @@ class Import:
             if reply is None:
                 # server vanished mid-replay: keep for the next cycle
                 self.replay_list.append(req)
+            elif reply.status == -107:
+                # VBR conflict: a straggler's gap invalidated this
+                # replay — the whole import's server-side state is gone,
+                # stop replaying and let the next request's -107 path
+                # run the full eviction cleanup (evict_cbs etc.)
+                self.sim.stats.count("rpc.replay_vbr_rejected")
+                self.replay_list.clear()
+                evicted = True
+                break
             elif reply.transno:
                 req.transno = reply.transno
                 self.replay_list.append(req)
         self.state = "FULL"
+        return not evicted
 
     def ping(self) -> bool:
-        try:
-            self.request("ping", {}, no_recover=True)
+        """Health probe (§4.4.2.5).  Works even on a deactivated import —
+        the pinger is precisely how a dead target's RETURN gets noticed —
+        and never walks the full reconnect ladder (one probe per tick).
+        A reply carrying a new server boot count triggers IMPERATIVE
+        RECOVERY: reconnect + replay right now, instead of discovering
+        the reboot via the next request's timeout."""
+        if self.state != "FULL":
+            if fail_mod.state.check("ping.notify") in ("drop", "crash"):
+                return False       # notification lost: stay down a tick
+            prev_boot = self.server_boot_count
+            try:
+                self._connect_cycle(max_attempts=1)
+            except TimeoutError_:
+                return False
+            if prev_boot and self.server_boot_count != prev_boot:
+                # the pinger (not a timed-out request) found the reboot
+                self.sim.stats.count("rpc.imperative_recovery")
             return True
-        except (TimeoutError_, RpcError):
+        req = Request(opcode="ping",
+                      body={"_target": self.target_uuid},
+                      xid=self.client.next_xid(),
+                      client_uuid=self.client.uuid,
+                      boot_count=self.client.boot_count,
+                      conn_generation=self.generation)
+        reply = self._send_once(req)
+        if reply is None or reply.status:
+            self.state = "DISCONN"
             return False
+        boot = (reply.data or {}).get("boot_count", 0)
+        if boot and self.server_boot_count \
+                and boot != self.server_boot_count:
+            act = fail_mod.state.check("ping.notify")
+            if act in ("drop", "crash"):
+                # notification lost: the client falls back to the
+                # timeout-driven path on its next real request
+                return True
+            self.sim.stats.count("rpc.imperative_recovery")
+            self.state = "DISCONN"
+            try:
+                self._connect_cycle()
+            except TimeoutError_:
+                return False
+        return True
 
 
 class RpcClient:

@@ -28,12 +28,39 @@ from repro.core import ptlrpc as R
 
 
 class Pinger:
-    """Client-side pinger over a set of imports."""
+    """Client-side pinger over a set of imports (§4.4.2.5).
 
-    def __init__(self, imports: Iterable[R.Import], interval: float = 0.5):
+    Beyond the health back-stop, the pinger is the client half of the
+    active health plane (ISSUE-10): a down→up transition on an import
+    marks the OST active again in the LOV (and vice versa), and the
+    ping itself notices a target's new boot count — imperative recovery,
+    so the client reconnects/replays long before any request timeout.
+    """
+
+    def __init__(self, imports: Iterable[R.Import], interval: float = 0.5,
+                 lov=None, on_down=None, on_up=None):
         self.imports = list(imports)
         self.interval = interval
+        self.lov = lov
+        self.on_down = on_down
+        self.on_up = on_up
         self.down: set = set()
+
+    def _mark(self, uuid: str, alive: bool) -> None:
+        if alive:
+            if uuid in self.down:
+                self.down.discard(uuid)
+                if self.lov is not None and uuid in self.lov.by_uuid:
+                    self.lov.set_active(uuid, True)
+                if self.on_up:
+                    self.on_up(uuid)
+        else:
+            if uuid not in self.down:
+                self.down.add(uuid)
+                if self.lov is not None and uuid in self.lov.by_uuid:
+                    self.lov.set_active(uuid, False)
+                if self.on_down:
+                    self.on_down(uuid)
 
     def tick(self) -> dict:
         """Ping everything once; returns {target_uuid: alive}."""
@@ -41,10 +68,7 @@ class Pinger:
         for imp in self.imports:
             alive = imp.ping()
             out[imp.target_uuid] = alive
-            if not alive:
-                self.down.add(imp.target_uuid)
-            else:
-                self.down.discard(imp.target_uuid)
+            self._mark(imp.target_uuid, alive)
         return out
 
 

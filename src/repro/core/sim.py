@@ -55,6 +55,10 @@ class FaultPlan:
         self.drop_prob: dict = {}            # (src,dst) or "*" -> prob
         self.partitions: set = set()         # frozenset({a, b}) cut pairs
         self.drop_next: defaultdict = defaultdict(int)  # nid -> count
+        # per-link latency model (chaos harness): extra seconds added to
+        # every hop on (src,dst), or "*" for the whole fabric — a slow
+        # WAN link / congested switch, distinct from dropping traffic
+        self.link_delay: dict = {}
 
     def should_drop(self, src, dst) -> bool:
         if src in self.down_nids or dst in self.down_nids:
@@ -66,6 +70,20 @@ class FaultPlan:
             return True
         p = self.drop_prob.get((src, dst), self.drop_prob.get("*", 0.0))
         return p > 0 and self.rng.random() < p
+
+    def extra_latency(self, src, dst) -> float:
+        if not self.link_delay:
+            return 0.0
+        return self.link_delay.get((src, dst),
+                                   self.link_delay.get("*", 0.0))
+
+    def heal(self):
+        """Clear every injected network fault (chaos `heal` event);
+        down_nids is owned by Node.fail/restart and is left alone."""
+        self.drop_prob.clear()
+        self.partitions.clear()
+        self.drop_next.clear()
+        self.link_delay.clear()
 
 
 class Stats:

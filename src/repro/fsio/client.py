@@ -35,6 +35,7 @@ from repro.core import mdc as mdc_mod
 from repro.core import osc as osc_mod
 from repro.core import mds as mds_mod
 from repro.core import ptlrpc as R
+from repro.core import recovery as rec_mod
 from repro.core.cluster import LustreCluster
 
 ROOT = mds_mod.ROOT_FID
@@ -179,6 +180,15 @@ class LustreClient:
         self._fh = itertools.count(1)
         self.handles: dict[int, FileHandle] = {}
         self.wbc: mdc_mod.WbcCache | None = None
+        # active health plane (ISSUE-10): one pinger over every import;
+        # a ping-detected OST death marks it inactive in the LOV (raid5
+        # serves degraded with zero RPCs at the corpse) and a detected
+        # restart triggers imperative recovery. Drive with pinger.tick()
+        # — nothing ticks it implicitly.
+        self.pinger = rec_mod.Pinger(
+            [o.imp for o in self.lov.oscs + self.lov.spares]
+            + [m.imp for m in self.lmv.mdcs],
+            lov=self.lov)
 
     # ------------------------------------------------------------- mount
     def mount(self) -> "LustreClient":

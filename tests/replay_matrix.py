@@ -28,6 +28,9 @@ REPLAY_MATRIX = {
         "disconnect": SESSION,
         "ping": READ_ONLY,
         "mon_collect": READ_ONLY,
+        "recovery_close": "idempotent recovery verb: closing an already-"
+                          "closed window is a no-op (VBR admits late "
+                          "replays either way)",
     },
     # --------------------------------------------------------------- OST
     "OstTarget": {

@@ -1,0 +1,167 @@
+"""Network-chaos property tests (ISSUE-10).
+
+Seeded fault schedules (drop, lossy links, delay, partitions, server
+flaps, heals) run over a live mixed workload — create/rename/unlink/
+write spread across 2 MDTs and a raid5 file — and every schedule must
+satisfy three oracles once the final heal lands:
+
+  1. audit mirror   — the merged changelog feed rebuilds a namespace
+     mirror identical to readdir/stat ground truth, with exactly-once
+     record delivery;
+  2. sanitizer      — runtime invariants (grant conservation, counter
+     partition, lockdep) hold through every fault;
+  3. no stuck client — every client completes a fresh op after the
+     heal: adaptive timeouts + VBR + the reconnect ladder guarantee
+     liveness, never a wedge.
+
+Schedules are pure functions of their integer seed, so any failure
+replays deterministically. The hypothesis test widens the seed space;
+the parametrized block pins the CI matrix (>= 20 seeds).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: sampled fallback
+    from _hyposhim import given, settings, strategies as st
+
+from repro.core import LustreCluster, sanitize
+from repro.core import chaos as chaos_mod
+from repro.fsio import FsError, LustreClient
+from repro.tools.audit import ChangelogAuditor
+
+SERVERS = ("mds0", "mds1", "ost0", "ost1", "ost2")
+N_SEEDED = 24                            # CI matrix: >= 20 seeds
+
+
+def _mk():
+    c = LustreCluster(osts=3, mdses=2, clients=3, commit_interval=8)
+    clients = [LustreClient(c, i).mount() for i in range(3)]
+    return c, clients
+
+
+def _step_factory(clients):
+    """Build the per-event workload step: each call issues one op from a
+    rotating mix, each client taking turns. Dependent ops (rename/unlink
+    of an earlier step's file) tolerate ENOENT — a fault may have cost
+    that step its effect, which is exactly what the oracles then audit."""
+    fs = clients[0]
+    fs.mkdir("/a")                       # hashed across both MDTs
+    fs.mkdir("/b")
+    fh = fs.creat("/a/r5", stripe_count=2, stripe_size=256,
+                  stripe_offset=0, pattern="raid5")
+    payload = bytes(range(1, 201)) * 2
+    fs.write(fh, payload, offset=0)
+    fs.close(fh)
+    n = {"i": 0}
+
+    def step():
+        i = n["i"]
+        n["i"] += 1
+        fsx = clients[i % len(clients)]
+        op = i % 6
+        if op == 0:
+            try:
+                fsx.mkdir(f"/a/d{i}")
+            except FsError:
+                pass                     # parent rolled back, replay pending
+        elif op == 1:
+            try:
+                h = fsx.creat(f"/b/f{i}")
+                fsx.write(h, b"x" * 512)
+                fsx.close(h)
+            except FsError:
+                pass
+        elif op == 2:
+            try:
+                fsx.rename(f"/b/f{i - 1}", f"/a/m{i}")
+            except FsError:
+                pass                     # source lost to an earlier fault
+        elif op == 3:
+            try:
+                fsx.unlink(f"/a/m{i - 1}")
+            except FsError:
+                pass
+        elif op == 4:
+            # raid5 I/O stays on one owner: a parity write caches locks
+            # on TWO OSTs, and a peer revoking just the data lock would
+            # leave a reversed cached-hold order that global lockdep
+            # rightly flags (shared-file raid5 writers need group locks)
+            try:
+                h = fs.open("/a/r5")
+                fs.read(h, 64, offset=0)
+                fs.close(h)
+            except FsError:
+                pass
+        else:
+            try:
+                h = fs.open("/a/r5")
+                fs.write(h, b"y" * 64, offset=64 * (i % 4))
+                fs.close(h)
+            except FsError:
+                pass
+    return step
+
+
+def _run_schedule(seed: int, steps: int) -> None:
+    with sanitize.forced():
+        c, clients = _mk()
+        aud = ChangelogAuditor(clients[0])
+        step = _step_factory(clients)
+        eng = chaos_mod.ChaosEngine(c, SERVERS)
+        sched = chaos_mod.generate_schedule(
+            seed, steps, [f.rpc.nid for f in clients], SERVERS)
+        eng.run(sched, step)
+        assert not eng.flapped and not c.sim.faults.drop_prob \
+            and not c.sim.faults.partitions  # run() ends healed
+        # oracle 3: nobody is stuck — every client performs a fresh op
+        # (reconnect/replay/VBR may run inside, but it must terminate).
+        # Root-level: chaos may legitimately erase /a or /b (an eviction
+        # forfeits uncommitted setup ops), liveness must not depend on it
+        for i, fsx in enumerate(clients):
+            fsx.mkdir(f"/alive{seed}_{i}")
+            assert f"alive{seed}_{i}" in fsx.readdir("/")
+        # oracle 1: audit mirror == ground truth, records exactly once
+        aud.tail()
+        report = aud.verify()
+        assert report["ok"], (seed, report["mismatches"])
+        keys = [(r["mdt"], r["idx"]) for r in aud.feed]
+        assert len(keys) == len(set(keys)), (seed, keys)
+        # oracle 2: the sanitizer saw the whole run and stayed clean
+        san = c.sim.sanitize.info()
+        assert san["enabled"] and san["violations"] == 0, san
+
+
+@pytest.mark.parametrize("seed", range(N_SEEDED))
+def test_chaos_schedule_holds_oracles(seed):
+    _run_schedule(seed, steps=12)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=N_SEEDED, max_value=2**31 - 1))
+def test_chaos_any_seed_holds_oracles(seed):
+    _run_schedule(seed, steps=8)
+
+
+def test_schedule_is_deterministic_and_ends_healed():
+    a = chaos_mod.generate_schedule(7, 16, ["elan:client0"], SERVERS)
+    b = chaos_mod.generate_schedule(7, 16, ["elan:client0"], SERVERS)
+    assert a == b
+    assert a[-1] == ("heal",)
+    kinds = {ev[0] for ev in a}
+    assert kinds <= set(chaos_mod.EVENT_KINDS)
+
+
+def test_flap_suppressed_by_fail_site():
+    c, clients = _mk()
+    eng = chaos_mod.ChaosEngine(c, SERVERS)
+    c.lctl("set_param", "fail_loc", "net.flap", 1, "drop")
+    eng.apply(("flap", "ost0"))
+    assert not eng.flapped               # the flap itself was lost
+    assert "elan:ost0" not in c.sim.faults.down_nids
+    c.lctl("set_param", "fail_loc", "")
+    eng.apply(("flap", "ost0"))          # disarmed: flap proceeds
+    assert eng.flapped == {"ost0"}
+    eng.heal()
+    assert not eng.flapped
+    clients[0].mkdir("/post")            # cluster healthy again

@@ -9,11 +9,12 @@ except ImportError:                      # bare env: sampled fallback
     from _hyposhim import given, settings, strategies as st
 
 from repro.core import LustreCluster
+from repro.core import chaos as chaos_mod
 from repro.core import fail as F
 from repro.core import ptlrpc as R
 from repro.core.mds import ROOT_FID
 from repro.core.recovery import Pinger, compute_consistent_cut
-from repro.fsio import LustreClient
+from repro.fsio import FsError, LustreClient
 from repro.tools.audit import ChangelogAuditor
 
 
@@ -286,9 +287,40 @@ def _sweep_workload(fs):
     fsr.close(fhr)
     fs.rebuild_ost("OST0001", fs.cluster.spare_uuids[0])
     fs.cluster.restart_node("ost1")
+    # active health plane (ISSUE-10): the pinger notices OST0001's new
+    # boot count and runs imperative recovery — the ping.notify crash
+    # point models the notification getting lost (timeout back-stop)
+    fs.pinger.tick()
     fhr = fs.open("/d2/r5")                      # post-rebuild (or, under
     assert fs.read(fhr, len(payload), offset=0) == payload  # an aborted
     fs.close(fhr)                                # rebuild, post-restart)
+    # VBR recovery window (ISSUE-10): power-cycle MDS1 and let the
+    # scaled window expire — the first request after the deadline closes
+    # recovery (the mds.recovery_window crash point) WITHOUT evicting
+    # the stragglers that never reconnected
+    c = fs.cluster
+    c.fail_node("mds1")
+    c.restart_node("mds1")
+    t1 = c.mds_targets[1]
+    if t1.recovering:
+        c.sim.clock.advance(max(0.0, t1.recovery_deadline - c.sim.now)
+                            + 0.01)
+    fs.mkdir("/d1/postrec")                      # /d1 lives on MDS1
+    # adaptive timeouts (ISSUE-10): throttle OST0000 so one request's
+    # queue wait overruns its deadline — the server's early reply
+    # (ptl.early_reply crash point) must extend it, no spurious timeout
+    c.lctl("nrs", "OST0000", "tbf", {"rate": 0.5, "burst": 1.0})
+    fh = fs.creat("/d2/slow", stripe_count=1, stripe_offset=0)
+    fs.write(fh, b"q" * 32, offset=0)
+    fs.close(fh)
+    c.lctl("nrs", "OST0000", "fifo")
+    assert c.stats.counters.get("rpc.timeout_spurious", 0) == 0
+    # network chaos (ISSUE-10): one flap/heal cycle through the chaos
+    # engine reaches the net.flap site (armed drop/crash = the flap
+    # never happens, which must change nothing the oracles check)
+    eng = chaos_mod.ChaosEngine(c, ["ost2"])
+    eng.apply(("flap", "ost2"))
+    eng.heal()
     # monitoring plane: one collector round over real RPCs reaches the
     # mon.collect site; a crash/partition there degrades to a PARTIAL
     # snapshot (target listed in 'stale') — never a hang and never a
@@ -636,9 +668,14 @@ def test_peer_eviction_crosschecks_namespace_halves():
     assert fs.resolve("/survivor")[0] == 1
     mds0.commit()                              # the ENTRY half is durable
     # mds1 dies losing the uncommitted inode half, and evicts mds0's
-    # import while down (recovery window expiry stand-in)
+    # import while down (recovery window expiry stand-in).  mds0 is
+    # partitioned across the reboot so the imperative-recovery nudge is
+    # lost — otherwise it would replay the half and there is nothing to
+    # cross-check
     c.fail_node("mds1")
+    c.sim.faults.down_nids.add(mds0.node.nid)
     c.restart_node("mds1")
+    c.sim.faults.down_nids.discard(mds0.node.nid)
     mds1.evicted.add(mds0.rpc.uuid)
     mds1.recovering = False
     # mds0's next cross-MDT op hits -107: replay queue dies, cross-check
@@ -713,3 +750,165 @@ def test_gateway_failover_with_lctl():
     c.sim.faults.down_nids.add(gw0.nid)
     c.lctl("set_gw", gw0.nid, "down")
     assert osc.read(0, oid, 0, 6) == b"via-gw"
+
+
+# --------------------------------------- ISSUE-10: robustness plane
+
+def test_unreachable_target_bounded_by_reconnect_backoff():
+    """Reconnect-storm regression: against a black-holed server the
+    client walks the failover ring with capped exponential backoff and
+    gives up in BOUNDED virtual time — no unbounded flat-timeout spin."""
+    c = LustreCluster(osts=1, mdses=1, clients=1)
+    rpc = c.make_client_rpc(0)
+    osc = c.make_oscs(rpc, writeback=False)[0]
+    oid = osc.create(0)["oid"]
+    c.sim.faults.down_nids.add(c.ost_targets[0].node.nid)  # black hole
+    t0 = c.now
+    with pytest.raises(R.TimeoutError_):
+        osc.read(0, oid, 0, 1)
+    assert c.now - t0 < 120.0          # virtual s: attempts * (AT + cap)
+    assert c.stats.counters.get("rpc.reconnect_backoff", 0) > 0
+
+
+def test_ping_detected_death_degraded_read_without_rpcs_to_dead_ost():
+    """Health plane -> LOV: once the pinger marks an OST dead, a raid5
+    read degrades IMMEDIATELY — reconstruction from survivors + parity,
+    zero wire attempts (so zero timeouts) toward the dead target."""
+    c = LustreCluster(osts=3, mdses=1, clients=1, commit_interval=1)
+    fs = LustreClient(c).mount()
+    fh = fs.creat("/r5", stripe_count=2, stripe_size=64,
+                  stripe_offset=0, pattern="raid5")
+    fs.write(fh, bytes(range(128)))    # both data units + parity
+    fs.close(fh)
+    c.fail_node("ost1")                # serves one of the data slots
+    # a fresh mount (cold page cache) so the read must hit the wire
+    rd = LustreClient(c).mount()
+    assert rd.pinger.tick().get("OST0001") is False
+    before = c.stats.counters.get("rpc.timeout", 0)
+    h = rd.open("/r5")
+    assert rd.read(h, 128, offset=0) == bytes(range(128))
+    rd.close(h)
+    assert c.stats.counters.get("rpc.timeout", 0) == before
+    assert c.stats.counters.get("lov.degraded_read", 0) >= 1
+
+
+def test_mds_vbr_partial_participation_preserves_namespace():
+    """VBR on the MDS: an admin closes the recovery window early with
+    ALL three clients still outstanding — nobody is evicted, and each
+    client's later return triggers a version-checked delayed replay.
+    The clients' uncommitted ops touch disjoint inodes (the shared tree
+    skeleton is durable), so delayed replays admit in ANY arrival order
+    — exactly the case VBR exists for.  Namespace == no-crash run."""
+    c = LustreCluster(osts=1, mdses=1, clients=3, commit_interval=10_000)
+    f0, f1, f2 = [LustreClient(c, i).mount() for i in range(3)]
+    for d in ("/a", "/b", "/c"):
+        f0.mkdir(d)
+    c.mds_targets[0].commit()          # skeleton durable: root versions
+    for fx, d in ((f0, "/a"), (f1, "/b"), (f2, "/c")):
+        fh = fx.creat(d + "/x")        # uncommitted, per-client inodes
+        fx.write(fh, b"payload")
+        fx.close(fh)
+    c.fail_node("mds0")
+    c.restart_node("mds0")
+    t = c.mds_targets[0]
+    assert t.recovering                # window open, nobody back yet
+    c.lctl("recovery_close", "MDS0000")
+    assert not t.recovering            # closed early: 3 stragglers
+    assert c.stats.counters.get("rpc.recovery_stragglers", 0) >= 3
+    assert c.stats.counters.get("rpc.recovery_eviction", 0) == 0
+    # stragglers return in REVERSE order: disjoint version chains make
+    # delayed replay order-independent, every one admits on exact match
+    assert f2.stat("/c/x")["size"] == 7
+    assert f1.stat("/b/x")["size"] == 7
+    assert f0.stat("/a/x")["size"] == 7
+    assert c.stats.counters.get("rpc.vbr_admit", 0) >= 3
+    assert c.stats.counters.get("rpc.vbr_eviction", 0) == 0
+    names = sorted(n for n in f0.readdir("/"))
+    assert names == ["a", "b", "c"]
+    for fx in (f0, f1, f2):
+        for d in ("/a", "/b", "/c"):
+            assert fx.stat(d + "/x")["size"] == 7
+
+
+def test_ost_vbr_evicts_only_genuinely_conflicting_replay():
+    """VBR eviction matrix, conflict row: client1's uncommitted write
+    observed client2's uncommitted version; the crash loses both and
+    client2 never returns, so client1's replay pre-version references a
+    version that no longer exists — THAT client is evicted, alone."""
+    c = LustreCluster(osts=1, mdses=1, clients=2, commit_interval=10_000)
+    rpc1 = c.make_client_rpc(0)
+    rpc2 = c.make_client_rpc(1)
+    osc1 = c.make_oscs(rpc1, writeback=False)[0]
+    osc2 = c.make_oscs(rpc2, writeback=False)[0]
+    oid = osc1.create(0)["oid"]
+    c.ost_targets[0].commit()          # the object itself is durable
+    osc2.write(0, oid, 0, b"base")     # uncommitted: bumps the version
+    osc1.write(0, oid, 0, b"over")     # uncommitted: pre-version = osc2's
+    c.fail_node("ost0")
+    c.restart_node("ost0")
+    # osc2 stays away; osc1 reconnects and replays "over" whose pre-op
+    # version names osc2's lost transno -> genuine conflict -> evicted
+    osc1.statfs()
+    assert c.stats.counters.get("rpc.vbr_eviction", 0) == 1
+    assert c.stats.counters.get("rpc.replay_vbr_rejected", 0) == 1
+    assert c.stats.counters.get("rpc.evicted_reconnect", 0) >= 1
+    # the committed create survives; osc1 keeps working post-eviction
+    assert osc1.read(0, oid, 0, 4) in (b"", b"\0\0\0\0")
+
+
+def test_adaptive_timeout_early_reply_rescues_throttled_server():
+    """AT end-to-end on one import: a token-bucket throttle stretches
+    service past the client's adaptive deadline; the server notices at
+    dispatch time and extends it with an early reply — loaded != dead,
+    so no timeout fires at all."""
+    c = LustreCluster(osts=1, mdses=1, clients=1)
+    rpc = c.make_client_rpc(0)
+    osc = c.make_oscs(rpc, writeback=False)[0]
+    oid = osc.create(0)["oid"]
+    c.lctl("nrs", "OST0000", "tbf", {"rate": 0.4, "burst": 1.0})
+    for i in range(3):                 # queue waits reach ~2.5 s >> AT
+        osc.write(0, oid, i * 8, b"z" * 8)
+    c.lctl("nrs", "OST0000", "fifo")
+    assert c.stats.counters.get("rpc.early_reply", 0) >= 1
+    assert c.stats.counters.get("rpc.timeout_spurious", 0) == 0
+    assert c.stats.counters.get("rpc.timeout", 0) == 0
+
+
+def test_cross_mdt_create_replay_keeps_original_transnos():
+    """Replay renumbering regression: replaying a cross-MDT create makes
+    a synchronous peer round-trip that calls BACK into the coordinator
+    (nlink accounting) — that nested transaction must not consume the
+    replay's pinned transno, and post-restart transnos live in a fresh
+    boot epoch, or the second replay's version match breaks."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=10_000)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/a")                     # remote create: dirent + peer inode
+    fs.mkdir("/b")                     # version chain: pre(b) = transno(a)
+    c.fail_node("mds0")
+    c.restart_node("mds0")
+    fs.mkdir("/c")                     # reconnect -> replay a, b -> new op
+    assert sorted(fs.readdir("/")) == ["a", "b", "c"]
+    assert c.stats.counters.get("rpc.replay_vbr_rejected", 0) == 0
+    assert c.stats.counters.get("rpc.vbr_eviction", 0) == 0
+    assert c.stats.counters.get("rpc.vbr_admit", 0) >= 1
+
+
+def test_peer_reboot_nudge_replays_lost_half_from_disconn_import():
+    """Imperative recovery between MDTs: mds1's import to mds0 went
+    DISCONN during the outage; mds0's restart announce must still kick
+    the reconnect so mds1 replays the cross-MDT half mds0 lost — no
+    client traffic ever touches that import again otherwise."""
+    c = LustreCluster(osts=1, mdses=2, clients=1, commit_interval=10_000)
+    fs = LustreClient(c).mount()
+    fs.mkdir("/a")                     # inode on mds1 (remote mkdir)
+    fs.mkdir("/a/d")                   # coordinator mds1, inode on mds0
+    c.fail_node("mds0")                # loses d's inode half
+    try:                               # cross-MDT op while mds0 is down:
+        fs.mkdir("/a/d2")              # mds1's peer import times out ->
+    except (FsError, R.RpcError, R.TimeoutError_):   # DISCONN
+        pass
+    assert c.mds_targets[1].peers["MDS0000"].state == "DISCONN"
+    c.restart_node("mds0")             # announce -> nudge -> peer replay
+    assert c.mds_targets[1].peers["MDS0000"].state == "FULL"
+    assert fs.stat("/a/d")["type"] == "dir"
+    assert c.stats.counters.get("rpc.vbr_eviction", 0) == 0
